@@ -1,0 +1,42 @@
+"""Paper Table I: system capacity, SLED vs centralized, per device type.
+
+Capacity = number of edge devices the system supports at the same response
+rate.  The paper reports x2.60 (RPi 4B), x2.86 (RPi 5), x2.77 (Jetson) —
+our validation target is ratios in that x2-3 band.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.serving.devices import A100_X4, DEVICES
+from repro.serving.simulator import SimConfig, capacity
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    sim_time = 20.0 if quick else 45.0
+    for dev_name in ("rpi4b", "rpi5", "jetson-orin-nano"):
+        dev = DEVICES[dev_name]
+        base = SimConfig(
+            mode="sled", spec_len=4, acceptance=0.90,
+            device_rate=dev.rate("llama-1b-draft", 4),
+            target_params=11e9, server_batch=16, batch_policy="deadline",
+            sim_time=sim_time,
+        )
+        cap_sled = capacity(base, A100_X4, n_max=2048)
+        cap_cent = capacity(dataclasses.replace(base, mode="centralized"),
+                            A100_X4, n_max=2048)
+        rows.append({
+            "device": dev_name,
+            "cap_sled": cap_sled,
+            "cap_centralized": cap_cent,
+            "improvement": round(cap_sled / max(cap_cent, 1), 2),
+            "paper_claim": {"rpi4b": 2.60, "rpi5": 2.86, "jetson-orin-nano": 2.77}[dev_name],
+        })
+    emit(rows, "table1_capacity")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

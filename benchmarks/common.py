@@ -1,0 +1,23 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt
+
+
+def emit(rows: List[dict], name: str) -> None:
+    """Benchmark output contract: ``name,us_per_call,derived`` CSV rows."""
+    for r in rows:
+        us = r.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{us},{derived}")

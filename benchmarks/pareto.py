@@ -1,0 +1,83 @@
+"""Paper Fig. 6: cost/throughput Pareto — all-server / all-edge / SLED
+x {16,8,4}-bit x N in {1,2,4,8,16} devices.
+
+Cost is Eq. 2 dollars per 1K verified tokens (serving/cost_model.py); SLED
+devices additionally pay their share of the shared server.  Validation
+targets from the paper's text: SLED dominates the frontier; ~137 tok/s at
+16 devices 4-bit with cost ~0.13 $/1K; >3x throughput over centralized at
+~29% of its cost at matched capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.serving.cost_model import cost_per_1k_tokens, hourly_cost, sled_cost_per_1k
+from repro.serving.devices import A100_X4, RPI5
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    dev = RPI5
+    bit_speed = {16: 1.0, 8: 1.9, 4: 3.6}  # llama.cpp-style decode scaling
+    ns = (1, 2, 4, 8, 16) if not quick else (1, 4, 16)
+    for bits in (16, 8, 4):
+        for n in ns:
+            rate = dev.rate("llama-1b-draft", bits)
+            sim = SimConfig(
+                mode="sled", spec_len=4, acceptance=0.90, device_rate=rate,
+                target_params=11e9, server_batch=min(16, n), bits=bits,
+                batch_policy="deadline", n_devices=n,
+                sim_time=10.0 if quick else 25.0,
+            )
+            s = simulate(sim, A100_X4)
+            c = simulate(dataclasses.replace(sim, mode="centralized"), A100_X4)
+            e = simulate(dataclasses.replace(sim, mode="all_edge"), A100_X4)
+            # quality-adjacent all-edge: the biggest local model the device
+            # fits (3B) — all-edge with the 1B draft yields draft-quality
+            # tokens, not target-quality ones
+            e3_rate = dev.rate("llama-3b-draft", bits)
+            e3 = simulate(dataclasses.replace(sim, mode="all_edge",
+                                              device_rate=e3_rate), A100_X4)
+            # server share: fraction of server busy time attributable per device
+            share = s.server_busy_frac / max(n, 1)
+            sled_cost = sled_cost_per_1k(s.per_device_rate, dev, A100_X4, share)
+            cent_cost = cost_per_1k_tokens(
+                c.wstgr, A100_X4.price_usd, A100_X4.power_w)
+            edge_cost = cost_per_1k_tokens(rate, dev.price_usd, dev.power_w)
+            edge3_cost = cost_per_1k_tokens(e3_rate, dev.price_usd, dev.power_w)
+            rows.append({
+                "bits": bits, "n": n,
+                "sled_tok_s": round(s.wstgr, 1), "sled_cost": round(sled_cost, 4),
+                "cent_tok_s": round(c.wstgr, 1), "cent_cost": round(cent_cost, 4),
+                "edge1b_tok_s": round(e.wstgr, 1), "edge1b_cost": round(edge_cost, 4),
+                "edge3b_tok_s": round(e3.wstgr, 1), "edge3b_cost": round(edge3_cost, 4),
+            })
+    # Pareto check at TARGET-model quality, same deployment size (bits, N):
+    # is SLED ever dominated (>= throughput AND <= cost) by centralized or
+    # by the quality-adjacent all-edge (3B local)?  All-edge with the 1B
+    # draft is a different quality class (reported for reference; SLED's
+    # advantage #1 in the paper is precisely the quality upgrade).
+    dominated = 0
+    for r in rows:
+        for pre in ("cent", "edge3b"):
+            if (r[f"{pre}_tok_s"] >= r["sled_tok_s"]
+                    and r[f"{pre}_cost"] <= r["sled_cost"]):
+                dominated += 1
+                break
+    best_e3 = max(r["edge3b_tok_s"] for r in rows)
+    best_e1 = max(r["edge1b_tok_s"] for r in rows)
+    best_sled = max(r["sled_tok_s"] for r in rows)
+    rows.append({
+        "sled_points_dominated": dominated, "total": len(rows),
+        "best_sled_vs_edge3b": round(best_sled / best_e3, 2),
+        "best_sled_vs_edge1b": round(best_sled / best_e1, 2),
+        "paper_claim_vs_best_edge": 1.65,
+    })
+    emit(rows, "fig6_pareto")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

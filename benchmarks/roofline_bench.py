@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/<mesh>/*.json and prints the three terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction per
+(arch x shape).  Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load(mesh: str = "pod", tag: str = "") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        if tag and not base.endswith(f"__{tag}"):
+            continue
+        if not tag and base.count("__") > 1:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({"cell": base, "status": rec.get("status", "?")})
+            continue
+        rows.append({
+            "cell": base,
+            "t_compute_ms": round(rec["t_compute"] * 1e3, 2),
+            "t_memory_ms": round(rec["t_memory"] * 1e3, 2),
+            "t_collective_ms": round(rec["t_collective"] * 1e3, 2),
+            "bound": rec["bottleneck"],
+            "useful_flops": round(rec["useful_flops_frac"], 3),
+            "roofline_frac": round(rec["roofline_frac"], 4),
+            "hbm_gb": round((rec["arg_bytes"] + rec["temp_bytes"]
+                             + rec["out_bytes"] - rec["alias_bytes"]) / 1e9, 2),
+        })
+    return rows
+
+
+def run(quick: bool = False) -> list:
+    rows = load("pod")
+    if not rows:
+        rows = [{"note": "no dry-run artifacts; run repro.launch.dryrun first"}]
+    emit(rows, "roofline")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Fig. 5: speculative length vs device throughput & system capacity.
+
+Expected: longer speculative windows LOWER per-device throughput (longer
+verification periods slow the response update rate) but RAISE system
+capacity (fewer verification rounds per committed token frees the server).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.serving.devices import A100_X4, RPI5
+from repro.serving.simulator import SimConfig, capacity, simulate
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    lens = (1, 2, 4, 8, 16) if not quick else (1, 4, 16)
+    for k in lens:
+        cfg = SimConfig(
+            mode="sled", spec_len=k, acceptance=0.90,
+            device_rate=RPI5.rate("llama-1b-draft", 4),
+            target_params=11e9, server_batch=16, batch_policy="deadline",
+            n_devices=8, sim_time=12.0 if quick else 30.0,
+        )
+        r = simulate(cfg, A100_X4)
+        cap = capacity(dataclasses.replace(cfg, sim_time=10.0 if quick else 20.0),
+                       A100_X4, n_max=3072)
+        rows.append({
+            "spec_len": k,
+            "device_tok_s": round(r.per_device_rate, 2),
+            "capacity": cap,
+            "round_latency_ms": round(r.mean_round_latency * 1e3, 1),
+        })
+    emit(rows, "fig5_speclen")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

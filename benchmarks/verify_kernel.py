@@ -1,0 +1,54 @@
+"""SLED verification-attention kernel: modeled HBM traffic vs the XLA path.
+
+No TPU in this container, so the comparison is structural: we lower the
+pure-XLA flash verification attention, walk its HLO with the trip-aware
+cost model, and compare bytes moved against the Pallas kernel's analytic
+minimum (stream KV exactly once + write O(Sq) output).  Correctness of the
+kernel itself is covered by tests/test_kernels.py (interpret-mode sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops
+from repro.models.layers import flash_attention
+from repro.roofline.hlo_cost import HloCostModel
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    shapes = [
+        (8, 5, 48, 1, 4096, 128),   # granite-34b-like MQA verify
+        (8, 5, 32, 4, 4096, 128),   # qwen3-moe-like GQA verify
+    ] if not quick else [(4, 5, 8, 1, 1024, 64)]
+    for (B, Sq, Hq, Hkv, Skv, D) in shapes:
+        q = jax.ShapeDtypeStruct((B, Sq, Hq, D), jnp.bfloat16)
+        k = jax.ShapeDtypeStruct((B, Skv, Hkv, D), jnp.bfloat16)
+        v = jax.ShapeDtypeStruct((B, Skv, Hkv, D), jnp.bfloat16)
+        kv_valid = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+        def xla_path(q, k, v, kv_valid):
+            q_pos = kv_valid[:, None] - Sq + jnp.arange(Sq)[None]
+            return flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                   chunk=min(1024, Skv))
+
+        lowered = jax.jit(xla_path).lower(q, k, v, kv_valid)
+        costs = HloCostModel(lowered.compile().as_text()).totals()
+        kv_bytes = 2 * B * Skv * Hkv * D * 2  # stream K and V exactly once
+        out_bytes = 2 * B * Sq * Hq * D * 2
+        kernel_min = kv_bytes + out_bytes
+        rows.append({
+            "shape": f"B{B}xSq{Sq}xHq{Hq}/{Hkv}xS{Skv}xD{D}",
+            "xla_bytes_mb": round(costs["bytes"] / 1e6, 1),
+            "kernel_min_mb": round(kernel_min / 1e6, 1),
+            "traffic_ratio": round(costs["bytes"] / kernel_min, 2),
+            "mxu_rows_packed": Sq * (Hq // Hkv),
+        })
+    emit(rows, "verify_kernel")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

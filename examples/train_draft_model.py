@@ -1,0 +1,95 @@
+"""End-to-end training driver: train a ~100M-param draft model.
+
+    PYTHONPATH=src python examples/train_draft_model.py --steps 300
+
+Full substrate: synthetic data pipeline -> remat'd train step -> AdamW ->
+periodic async checkpoints -> resume-on-restart.  The config is a 100M
+llama-style draft (the class of model SLED puts ON the edge devices).
+Use --tiny for a seconds-long smoke run.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ModelConfig
+from repro.models.model_zoo import build_model
+from repro.training.data import DataConfig, batch_at
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import TrainConfig, make_train_step
+
+DRAFT_100M = ModelConfig(
+    name="draft-100m", family="dense", num_layers=10, d_model=640,
+    num_heads=10, num_kv_heads=2, d_ff=2560, vocab_size=32000,
+    tie_embeddings=True,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", type=str, default="experiments/draft100m")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--tiny", action="store_true", help="smoke-scale run")
+    args = ap.parse_args()
+
+    cfg = DRAFT_100M
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, num_layers=2, d_model=128, d_ff=256,
+                                  vocab_size=512)
+        args.steps, args.seq = min(args.steps, 20), 64
+
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"training {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps),
+        remat=True, loss_chunk=128, attn_chunk=128,
+    )
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq + 1,
+                      global_batch=args.batch, mode="markov", det_frac=0.8)
+
+    start = ckpt.latest_step(args.ckpt_dir)
+    if start is not None:
+        state, _ = ckpt.restore(args.ckpt_dir, {
+            "params": model.init_params_spec(),
+            "opt": jax.eval_shape(adamw_init, model.init_params_spec()),
+        })
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+    else:
+        params = model.init_params(jax.random.key(0))
+        opt = adamw_init(params)
+        start = 0
+
+    err, pending = None, None
+    t0 = time.time()
+    for s in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, s).items()}
+        params, opt, err, metrics = step_fn(params, opt, err, batch)
+        if s % 10 == 0 or s == args.steps - 1:
+            rate = (s - start + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {s:4d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.2f} "
+                  f"({rate:,.0f} tok/s)")
+        if s and s % args.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            pending = ckpt.save(args.ckpt_dir, s, {"params": params, "opt": opt},
+                                async_save=True)
+    if pending is not None:
+        pending.join()
+    ckpt.save(args.ckpt_dir, args.steps, {"params": params, "opt": opt})
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

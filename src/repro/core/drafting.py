@@ -1,0 +1,138 @@
+"""Device-side dynamic drafting (SLED §III-A).
+
+The edge device drafts up to ``k_max`` tokens with its local draft model and
+stops early when the draft confidence ``c_i`` drops below ``c_th`` (paper
+Eq. 1): a low-confidence token is still *included* in the verification
+request (it is precisely the token that needs checking), but no further
+tokens are drafted behind it.
+
+Implemented as a fixed-K scan with per-row active masks — rows that stopped
+early carry padding, matching the paper's padded static batches.
+
+Rollback protocol (device side, mirrors core/verification.py):
+  * attention-family drafts: the draft KV cache rolls back by setting
+    ``length = base + 1 + n_accepted``; stale entries are overwritten.
+  * ssm/hybrid drafts: recurrences cannot be un-applied, so the scan emits a
+    per-step cache checkpoint; ``resume_after_verify`` selects checkpoint
+    ``n_accepted`` (state after consuming prev_token + accepted drafts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.speculative import sample_token
+from repro.models.layers import MeshContext, NO_MESH
+
+
+@dataclasses.dataclass
+class DraftResult:
+    tokens: jax.Array       # (B, K) drafted tokens (padding past length)
+    q_sel: jax.Array        # (B, K) q(token)
+    q_full: Optional[jax.Array]  # (B, K, V) full draft dists (exact residual)
+    lengths: jax.Array      # (B,) dynamic draft lengths in [1, K]
+    confidence: jax.Array   # (B, K)
+    cache: Any              # cache after the drafting scan (uncommitted)
+    cache_ckpts: Any        # per-step cache checkpoints (ssm/hybrid) or None
+    base_length: jax.Array  # (B,) cache length before the round
+
+
+jax.tree_util.register_dataclass(
+    DraftResult,
+    data_fields=["tokens", "q_sel", "q_full", "lengths", "confidence",
+                 "cache", "cache_ckpts", "base_length"],
+    meta_fields=[],
+)
+
+
+def draft_round(
+    model,
+    params,
+    cache: Dict[str, jax.Array],
+    prev_token: jax.Array,  # (B,) last committed token (cache has not seen it)
+    key: jax.Array,
+    *,
+    k_max: int,
+    c_th: float = 0.0,  # 0.0 -> fixed-length drafting
+    temperature: float = 1.0,
+    greedy: bool = False,
+    keep_q_full: bool = False,
+    ctx: MeshContext = NO_MESH,
+    attn_chunk: int = 1024,
+) -> DraftResult:
+    """One drafting round: feed prev_token, then draft up to k_max tokens."""
+    B = prev_token.shape[0]
+    is_ssm = model.cfg.family in ("ssm", "hybrid")
+    base_length = cache["length"]
+
+    def step(carry, _):
+        cache, tok, active, key = carry
+        key, k_s = jax.random.split(key)
+        h, ck, _ = model.decode_forward(params, cache, tok[:, None], ctx,
+                                        attn_chunk=attn_chunk)
+        # consume exactly this one token into the cache
+        cache = model.commit(ck, jnp.ones((B,), jnp.int32))
+        logits = model.lm_head(params, h)[:, 0]
+        nxt, q, dist = sample_token(logits, k_s, temperature, greedy)
+        conf = jnp.max(dist, axis=-1)
+        emitted = active
+        keep_drafting = active & (conf >= c_th)
+        ckpt = cache if is_ssm else None
+        out = (
+            jnp.where(emitted, nxt, 0),
+            jnp.where(emitted, q, 0.0),
+            dist if keep_q_full else jnp.zeros((B, 0), jnp.float32),
+            emitted,
+            jnp.where(emitted, conf.astype(jnp.float32), 0.0),
+            ckpt,
+        )
+        new_tok = jnp.where(emitted, nxt, tok)
+        return (cache, new_tok, keep_drafting, key), out
+
+    carry0 = (cache, prev_token, jnp.ones((B,), bool), key)
+    (cache, _, _, _), (toks, qs, qf, emitted, confs, ckpts) = jax.lax.scan(
+        step, carry0, None, length=k_max
+    )
+    toks = jnp.moveaxis(toks, 0, 1).astype(jnp.int32)
+    qs = jnp.moveaxis(qs, 0, 1)
+    emitted = jnp.moveaxis(emitted, 0, 1)
+    confs = jnp.moveaxis(confs, 0, 1)
+    lengths = emitted.sum(axis=1).astype(jnp.int32)
+    return DraftResult(
+        tokens=toks,
+        q_sel=qs,
+        q_full=jnp.moveaxis(qf, 0, 1) if keep_q_full else None,
+        lengths=lengths,
+        confidence=confs,
+        cache=cache,
+        cache_ckpts=ckpts if is_ssm else None,
+        base_length=base_length,
+    )
+
+
+def resume_after_verify(model, draft: DraftResult, n_accepted: jax.Array):
+    """Roll the device cache back to the server-verified prefix.
+
+    Returns a cache whose committed length is ``base + 1 + n_accepted``
+    (prev_token + accepted drafts); the next round feeds the server's
+    correction/bonus token as ``prev_token``.
+    """
+    B = n_accepted.shape[0]
+    new_len = draft.base_length + 1 + n_accepted.astype(jnp.int32)
+    if draft.cache_ckpts is None:
+        return {**draft.cache, "length": new_len}
+    # ssm/hybrid: select per-row checkpoint n_accepted (leading axis = step).
+    # Cache leaves are (L_or_napps, B, ...) plus length (B,); checkpointed
+    # leaves gain a leading K axis, so: length -> (K, B), rest -> (K, L, B, ...).
+    b = jnp.arange(B)
+
+    def sel(a):
+        if a.ndim == 2:  # length: (K, B)
+            return a[n_accepted, b]
+        return jnp.moveaxis(a[n_accepted, :, b], 0, 1)  # -> (L, B, ...)
+
+    cache = jax.tree.map(sel, draft.cache_ckpts)
+    return {**cache, "length": new_len}

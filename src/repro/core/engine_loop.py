@@ -1,0 +1,152 @@
+"""Synchronous single-host SLED reference loop (draft + verify, real models).
+
+This is the algorithmic ground truth used by tests, examples, and the Fig. 3
+confidence benchmark: a draft model and a target model running the full
+SLED drafting/verification protocol in lock-step.  System-scale timing
+behaviour (Poisson arrivals, RTT, async draft-ahead, batching across
+devices) lives in serving/simulator.py; THIS loop is about token-level
+correctness — e.g. greedy SLED output must equal greedy target-only output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import drafting, verification
+from repro.core.speculative import PAD_TOKEN
+from repro.models.layers import NO_MESH
+
+
+@dataclasses.dataclass
+class SledStats:
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    committed: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.drafted, 1)
+
+    @property
+    def tokens_per_round(self) -> float:
+        return self.committed / max(self.rounds, 1)
+
+
+def sled_generate(
+    draft_model, draft_params,
+    target_model, target_params,
+    prompts: jax.Array,  # (B, P) int32
+    *,
+    max_new: int,
+    k_max: int = 4,
+    c_th: float = 0.0,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    seed: int = 0,
+    attn_chunk: int = 256,
+    collect_confidence: bool = False,
+) -> Tuple[np.ndarray, SledStats, Optional[List[Tuple[float, bool]]]]:
+    """Run SLED end-to-end. Returns (tokens (B, max_new), stats, conf_pairs).
+
+    conf_pairs (when collect_confidence): list of (draft confidence,
+    accepted?) per drafted token — the raw data behind paper Fig. 3.
+    """
+    B, P = prompts.shape
+    max_len = P + max_new + k_max + 8
+
+    d_cache = draft_model.make_cache(B, max_len, attn_chunk=attn_chunk)
+    t_cache = target_model.make_cache(B, max_len, attn_chunk=attn_chunk)
+
+    d_prefill = jax.jit(verification.make_prefill_step(draft_model, attn_chunk=attn_chunk))
+    t_prefill = jax.jit(verification.make_prefill_step(target_model, attn_chunk=attn_chunk))
+    verify = jax.jit(verification.make_verify_step(
+        target_model, greedy=greedy, temperature=temperature, attn_chunk=attn_chunk))
+    do_draft = jax.jit(
+        lambda params, cache, prev, key: drafting.draft_round(
+            draft_model, params, cache, prev, key,
+            k_max=k_max, c_th=c_th, temperature=temperature, greedy=greedy,
+            keep_q_full=not greedy, attn_chunk=attn_chunk,
+        )
+    )
+
+    _, d_cache, prev = d_prefill(draft_params, d_cache, prompts)
+    _, t_cache, _ = t_prefill(target_params, t_cache, prompts)
+
+    key = jax.random.key(seed)
+    # rows commit at different rates; a fast row may overshoot max_new by
+    # (k_max+1) per round until the slowest row finishes
+    out = np.full((B, max_new + 16 * (k_max + 1)), PAD_TOKEN, np.int64)
+    counts = np.zeros((B,), np.int64)
+    stats = SledStats()
+    conf_pairs: List[Tuple[float, bool]] = [] if collect_confidence else None
+
+    while counts.min() < max_new:
+        key, k_d = jax.random.split(key)
+        dres = do_draft(draft_params, d_cache, prev, k_d)
+        batch = verification.make_verify_batch(
+            prev, dres.tokens, dres.lengths, draft_q=None if greedy else dres.q_sel,
+            seed=np.uint32(stats.rounds + seed),
+        )
+        if not greedy and dres.q_full is not None:
+            batch["draft_q_full"] = dres.q_full
+        res, t_cache = verify(target_params, t_cache, batch)
+
+        d_cache = drafting.resume_after_verify(draft_model, dres, res.n_accepted)
+        prev = res.extra_token
+
+        toks = np.asarray(res.out_tokens)
+        n_commit = np.asarray(res.n_commit)
+        lengths = np.asarray(dres.lengths)
+        accepted = np.asarray(res.n_accepted)
+        if collect_confidence:
+            confs = np.asarray(dres.confidence)
+            acc_mask = np.asarray(res.accepted_mask)
+            for b in range(B):
+                for i in range(int(lengths[b])):
+                    conf_pairs.append((float(confs[b, i]), bool(acc_mask[b, i])))
+        for b in range(B):
+            n = min(int(n_commit[b]), out.shape[1] - int(counts[b]))
+            out[b, counts[b] : counts[b] + n] = toks[b, :n]
+            counts[b] += n
+        stats.rounds += 1
+        stats.drafted += int(lengths.sum())
+        stats.accepted += int(accepted.sum())
+        stats.committed += int(n_commit.sum())
+
+    return out[:, :max_new], stats, conf_pairs
+
+
+def autoregressive_generate(
+    model, params, prompts: jax.Array, *, max_new: int, greedy: bool = True,
+    temperature: float = 1.0, seed: int = 0, attn_chunk: int = 256,
+) -> np.ndarray:
+    """Plain target-only decoding — the centralized-serving baseline."""
+    B, P = prompts.shape
+    cache = model.make_cache(B, P + max_new + 8, attn_chunk=attn_chunk)
+    prefill = jax.jit(verification.make_prefill_step(model, attn_chunk=attn_chunk))
+    _, cache, prev = prefill(params, cache, prompts)
+
+    @jax.jit
+    def step(params, cache, prev, key):
+        h, ck, _ = model.decode_forward(params, cache, prev[:, None],
+                                        attn_chunk=attn_chunk)
+        cache = model.commit(ck, jnp.ones((B,), jnp.int32))
+        logits = model.lm_head(params, h)[:, 0]
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+        return cache, nxt
+
+    key = jax.random.key(seed)
+    out = np.zeros((B, max_new), np.int64)
+    for t in range(max_new):
+        key, ks = jax.random.split(key)
+        cache, prev = step(params, cache, prev, ks)
+        out[:, t] = np.asarray(prev)
+    return out

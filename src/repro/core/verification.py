@@ -1,0 +1,111 @@
+"""Server-side batched verification (SLED §III-B) — the serve_step we deploy.
+
+Invariant (shared with core/drafting.py):
+  * ``cache.length`` counts K/V-committed tokens = (#committed tokens) - 1.
+  * ``verify_step`` feeds ``tokens_in = [prev_committed, d_1 .. d_K]``
+    (K+1 tokens), so ``logits[i]`` judges ``d_{i+1}`` and ``logits[m]`` is
+    the correction/bonus distribution (core/speculative.py).
+  * commit: attention caches set ``length += n_commit``; SSM/hybrid caches
+    select the per-position state checkpoint (models emit them).
+
+This module builds the jittable step functions that the dry-run lowers for
+the decode shapes and the serving engine runs: the target model's compute is
+one chunked-attention forward over (B, K+1) tokens against (B, S) caches —
+SLED's entire server-side hot loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.speculative import VerifyResult, speculative_verify
+from repro.models.layers import MeshContext, NO_MESH
+
+
+def make_verify_batch(prev_token, draft_tokens, lengths, draft_q=None, seed=0):
+    """Assemble the padded verification request batch (host or device side)."""
+    B, K = draft_tokens.shape
+    batch = {
+        "tokens_in": jnp.concatenate([prev_token[:, None], draft_tokens], axis=1),
+        "draft_tokens": draft_tokens.astype(jnp.int32),
+        "lengths": lengths.astype(jnp.int32),
+        "seed": jnp.asarray(seed, jnp.uint32),
+    }
+    if draft_q is not None:
+        batch["draft_q"] = draft_q
+    return batch
+
+
+def verify_batch_spec(batch_size: int, k_max: int, *, sampling: bool = False):
+    """ShapeDtypeStruct stand-ins for the verification request (dry-run)."""
+    spec = {
+        "tokens_in": jax.ShapeDtypeStruct((batch_size, k_max + 1), jnp.int32),
+        "draft_tokens": jax.ShapeDtypeStruct((batch_size, k_max), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        "seed": jax.ShapeDtypeStruct((), jnp.uint32),
+    }
+    if sampling:
+        spec["draft_q"] = jax.ShapeDtypeStruct((batch_size, k_max), jnp.float32)
+    return spec
+
+
+def make_verify_step(
+    model,
+    *,
+    ctx: MeshContext = NO_MESH,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    attn_chunk: int = 1024,
+    uniform: bool = False,  # static padded batches: in-place cache append
+):
+    """Returns verify_step(params, cache, batch) -> (VerifyResult, cache')."""
+    kw = {"uniform": uniform} if model.cfg.family not in ("ssm", "hybrid") else {}
+
+    def verify_step(params, cache, batch) -> Tuple[VerifyResult, Any]:
+        h, ck_cache, _ = model.decode_forward(
+            params, cache, batch["tokens_in"], ctx, attn_chunk=attn_chunk, **kw
+        )
+        logits = model.lm_head(params, h)  # (B, K+1, V) fp32
+        key = jax.random.key(batch["seed"])
+        res = speculative_verify(
+            batch["draft_tokens"],
+            logits,
+            key,
+            lengths=batch["lengths"],
+            draft_q=batch.get("draft_q"),
+            draft_q_full=batch.get("draft_q_full"),
+            temperature=temperature,
+            greedy=greedy,
+        )
+        new_cache = model.commit(ck_cache, res.n_commit)
+        return res, new_cache
+
+    return verify_step
+
+
+def make_prefill_step(model, *, ctx: MeshContext = NO_MESH, attn_chunk: int = 1024,
+                      with_frontend: bool = False, uniform: bool = False):
+    """Returns prefill_step(params, cache, tokens, [stub_embeds]) for serving.
+
+    Leaves the cache at ``length = prompt_len - 1`` and returns the last
+    prompt token separately — satisfying the "all committed but the last"
+    invariant so the first verify round can feed it.
+    """
+
+    def prefill_step(params, cache, tokens, stub=None):
+        kw = {}
+        if with_frontend and model.cfg.family == "encdec":
+            kw["enc_frames"] = stub
+        if with_frontend and model.cfg.family == "vlm":
+            kw["embeds_prefix"] = stub
+        if uniform and model.cfg.family not in ("ssm", "hybrid"):
+            kw["uniform"] = True
+        logits, cache = model.prefill(params, tokens[:, :-1], cache, ctx,
+                                      attn_chunk=attn_chunk, **kw)
+        return logits, cache, tokens[:, -1]
+
+    return prefill_step

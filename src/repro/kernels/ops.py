@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the Pallas kernels (layout packing + vjp-free
+serving entry points).  Each op has a pure-jnp oracle in ref.py; tests sweep
+shapes/dtypes in interpret mode."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ssd_scan import ssd_scan_chunked
+from repro.kernels.verify_attn import verify_attention_packed
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def verify_attention(
+    q: jax.Array,        # (B, Sq, Hq, D)
+    k: jax.Array,        # (B, Skv, Hkv, D)
+    v: jax.Array,
+    kv_valid: jax.Array,  # (B,)
+    *,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """SLED verification attention (see verify_attn.py for the TPU design)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    # pack (Sq, G) into MXU rows, grouped per kv head: row r = i*G + g
+    qp = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, Sq * G, D)
+    o = verify_attention_packed(qp, k, v, kv_valid.astype(jnp.int32), sq=Sq,
+                                block_k=block_k, interpret=interpret)
+    return o.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Sq, Hq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) post-softplus fp32
+    A: jax.Array,    # (H,) negative fp32
+    Bm: jax.Array,   # (B, S, N)
+    Cm: jax.Array,   # (B, S, N)
+    h0: Optional[jax.Array] = None,
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD over a full sequence (chunked kernel). Returns (y, h_final)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    return ssd_scan_chunked(x, dt, A, Bm, Cm, h0, chunk=chunk, interpret=interpret)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def verify_attention_ref(
+    q: jax.Array,        # (B, Sq, Hq, D) — the K+1 verify tokens' queries
+    k: jax.Array,        # (B, Skv, Hkv, D) cache (buffer idx == position)
+    v: jax.Array,        # (B, Skv, Hkv, D)
+    kv_valid: jax.Array,  # (B,) valid entries incl. the Sq new rows
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Causal-offset attention: query i sits at position kv_valid - Sq + i."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bihgd,bjhd->bhgij", qg, k.astype(jnp.float32)) * scale
+    j = jnp.arange(Skv)
+    q_pos = kv_valid[:, None] - Sq + jnp.arange(Sq)[None]  # (B, Sq)
+    mask = j[None, None, :] <= q_pos[:, :, None]  # (B, Sq, Skv)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgij,bjhd->bihgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) fp32, post-softplus
+    A: jax.Array,    # (H,) fp32, negative
+    Bm: jax.Array,   # (B, S, N)
+    Cm: jax.Array,   # (B, S, N)
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence — the slow exact oracle."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        xt = x[:, t].astype(jnp.float32)
+        dtt = dt[:, t]
+        Bt = Bm[:, t].astype(jnp.float32)
+        Ct = Cm[:, t].astype(jnp.float32)
+        decay = jnp.exp(dtt * A[None])  # (B, H)
+        h = decay[..., None, None] * h + jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: SLED batched-verification attention.
+
+The server's hot loop attends Sq = K+1 fresh tokens per request against a
+long KV cache.  TPU adaptation (vs the CUDA "append attention" kernels GPU
+serving engines use — DESIGN.md §3):
+
+  * the MXU wants >= 8 x 128 tiles, but Sq is tiny (5).  We PACK the GQA
+    group dimension into the query rows: rows = Sq * G (granite MQA: 5 x 48
+    = 240 rows — full MXU occupancy from what would be a 5-row matmul);
+  * the KV cache streams HBM->VMEM once in ``block_k`` chunks along the
+    sequence — verification at small K is HBM-bound, so one pass over the
+    cache IS the roofline;
+  * online-softmax state (m, l, acc) lives in fp32 VMEM scratch across the
+    kv-chunk grid axis (TPU grids iterate the last axis sequentially);
+  * the causal offset mask (query i sits at absolute position
+    kv_valid - Sq + i) is computed from iota over packed rows — no mask
+    tensor is ever materialised.
+
+Layouts: q is pre-packed to (B, Hkv, Sq*G, D) by ops.py (tiny transpose);
+k/v stay (B, Skv, Hkv, D) — BlockSpec index maps stride the head dim, so
+the multi-GB cache is never transposed.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kv_valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_k: int, sq: int, scale: float):
+    j_blk = pl.program_id(2)
+    n_blk = pl.num_programs(2)
+
+    @pl.when(j_blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # (rows, D) rows = Sq*G
+    k = k_ref[0, :, 0, :]  # (block_k, D)
+    v = v_ref[0, :, 0, :]
+    rows = q.shape[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (rows, block_k)
+
+    kv_valid = kv_valid_ref[0]
+    # packed row r -> query index i = r // G; abs position = kv_valid - Sq + i
+    g = rows // sq
+    i_vec = jax.lax.broadcasted_iota(jnp.int32, (rows, block_k), 0) // g
+    j_vec = jax.lax.broadcasted_iota(jnp.int32, (rows, block_k), 1) + j_blk * block_k
+    mask = j_vec <= (kv_valid - sq + i_vec)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j_blk == n_blk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def verify_attention_packed(
+    q: jax.Array,        # (B, Hkv, rows=Sq*G, D)
+    k: jax.Array,        # (B, Skv, Hkv, D)
+    v: jax.Array,
+    kv_valid: jax.Array,  # (B,) int32
+    *,
+    sq: int,
+    scale: Optional[float] = None,
+    block_k: int = 512,
+    interpret: bool = True,  # CPU container: interpret; flip off on TPU
+) -> jax.Array:
+    B, Hkv, rows, D = q.shape
+    Skv = k.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, Skv)
+    assert Skv % block_k == 0, "cache buffers are sized to block multiples"
+    n_blk = Skv // block_k
+
+    kernel = functools.partial(_kernel, block_k=block_k, sq=sq, scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_blk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),                 # kv_valid
+            pl.BlockSpec((1, 1, rows, D), lambda b, h, j: (b, h, 0, 0)),   # q
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),  # k
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rows, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),   # m
+            pltpu.VMEM((rows, 1), jnp.float32),   # l
+            pltpu.VMEM((rows, D), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(kv_valid, q, k, v)

@@ -1,0 +1,45 @@
+"""KV-cache pytree with speculative-rollback semantics.
+
+The cache buffer index IS the absolute token position, and a per-row
+``length`` marks how many entries are committed.  Speculative rollback after
+verification never moves data: the server just sets
+``length = base + n_accepted (+1 for the corrected/bonus token)`` — entries
+past ``length`` are masked out of attention and overwritten by the next
+verify round.  SSM states can't be masked retroactively, so SSM layers store
+per-position state checkpoints during verification instead (see mamba2.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_kv_cache(
+    num_layers: int,
+    batch: int,
+    max_len: int,
+    num_kv_heads: int,
+    head_dim: int,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((num_layers, batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((num_layers, batch, max_len, num_kv_heads, head_dim), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def kv_cache_spec(num_layers, batch, max_len, num_kv_heads, head_dim, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-in (dry-run: no allocation)."""
+    return {
+        "k": jax.ShapeDtypeStruct((num_layers, batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((num_layers, batch, max_len, num_kv_heads, head_dim), dtype),
+        "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def rollback(cache: Dict[str, jax.Array], new_length: jax.Array) -> Dict[str, jax.Array]:
+    """O(1) rollback: commit only ``new_length`` entries per row."""
+    return {**cache, "length": new_length.astype(jnp.int32)}

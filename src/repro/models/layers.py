@@ -1,0 +1,608 @@
+"""Core pure-JAX layers: norms, RoPE, flash-style attention, MLP, MoE.
+
+Everything is a pure function over parameter pytrees (no flax).  Attention is
+implemented as an online-softmax scan over KV chunks ("xla_flash") so that
+32k-524k contexts never materialise (S_q, S_kv) score tensors; the Pallas
+kernel in repro.kernels.verify_attn is the TPU-target version of the same
+computation and is validated against the same oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps fully-masked rows NaN-free
+
+# Attention lowering mode for the dry-run perf methodology (§Perf):
+#   "xla"  — the portable chunked online-softmax scan (scores round-trip HBM
+#            between the two GEMMs: what XLA does without a fused kernel)
+#   "stub" — kernel-traffic stand-in: reads K and V exactly once and writes
+#            the O-shaped output, nothing else.  This measures the step's
+#            NON-attention traffic + the Pallas kernel's intrinsic traffic
+#            (kernels/verify_attn.py streams KV once with scores resident in
+#            VMEM), so `dryrun --attn-impl stub` models the fused-kernel
+#            deployment.  GEMM FLOPs of the kernel are added analytically in
+#            EXPERIMENTS.md §Perf (the stub does no score math).
+ATTN_IMPL = "xla"
+
+# int8 KV cache (beyond-paper: halves the cache stream and fits the two
+# cells whose bf16 caches exceed v5e HBM — qwen1.5-32b decode_32k and the
+# paper's llama-70b target).  Symmetric per-cache static scale; production
+# would calibrate per (layer, head).  Opt-in: make_cache(kv_dtype=jnp.int8),
+# dryrun --kv-bits 8.
+KV_SCALE = 0.05
+
+
+def kv_quant(x: jax.Array, dtype) -> jax.Array:
+    if dtype != jnp.int8:
+        return x.astype(dtype)
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_SCALE), -127, 127).astype(jnp.int8)
+
+
+def kv_dequant(x: jax.Array) -> jax.Array:
+    if x.dtype != jnp.int8:
+        return x
+    return (x.astype(jnp.float32) * KV_SCALE).astype(jnp.bfloat16)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """How a layer should shard itself when running under a mesh.
+
+    ``mesh=None`` means single-device math (smoke tests, examples).
+    ``batch_axes`` are the mesh axes carrying the batch dimension
+    (('pod','data') multi-pod, ('data',) single pod), ``model_axis`` carries
+    tensor/expert parallelism.  ``seq_shard_kv`` switches attention caches
+    to sequence sharding over the model axis (flash-decoding combine; see
+    distributed/collectives.py) — the fit strategy for small-kv GQA archs.
+    """
+
+    mesh: Any = None
+    batch_axes: Tuple[str, ...] = ()
+    model_axis: Optional[str] = None
+    fsdp: bool = False
+    seq_shard_kv: bool = False
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def n_batch_shards(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a] if self.mesh is not None else 1
+        return n
+
+    def bspec(self, batch_size: int):
+        """Batch-dim axes, or None when the batch can't shard evenly."""
+        if self.batch_axes and batch_size % self.n_batch_shards == 0:
+            return self.batch_axes
+        return None
+
+
+NO_MESH = MeshContext()
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: jax.Array, p: Params, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def init_norm(d: int, kind: str) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Embedding lookup (vocab-TP aware)
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array, ctx: "MeshContext") -> jax.Array:
+    """Token embedding gather that works WITH a vocab-sharded table.
+
+    A plain ``embed[tokens]`` on a model-axis-sharded table makes GSPMD
+    replicate the whole table per step ("involuntary full rematerialization");
+    instead each model shard gathers its own vocab range and a psum combines
+    — the standard TP embedding trick, here via shard_map.
+    """
+    V, d = embed.shape
+    tp = ctx.tp
+    if ctx.mesh is None or tp == 1 or V % tp != 0:
+        return embed[tokens]
+    ax = ctx.model_axis
+    bspec = ctx.bspec(tokens.shape[0])
+    v_loc = V // tp
+
+    def f(emb, toks):
+        r = jax.lax.axis_index(ax)
+        rel = toks - r * v_loc
+        ok = (rel >= 0) & (rel < v_loc)
+        rows = emb[jnp.clip(rel, 0, v_loc - 1)]
+        rows = jnp.where(ok[..., None], rows, jnp.zeros((), rows.dtype))
+        return jax.lax.psum(rows, ax)
+
+    return jax.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(P(ax, None), P(bspec, None)),
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )(embed, tokens)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) rotated at ``positions`` (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style attention (online softmax over KV chunks, pure XLA)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D) — or (L, B, Skv, Hkv, D) with ``layer``
+    v: jax.Array,
+    *,
+    q_pos: Optional[jax.Array] = None,  # (B, Sq) absolute positions; None -> arange
+    kv_valid: Optional[jax.Array] = None,  # (B,) number of valid kv entries; None -> Skv
+    causal: bool = True,
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+    layer: Optional[jax.Array] = None,  # stream chunks straight from a
+    # stacked (L, B, S, H, D) cache buffer — avoids materialising a per-layer
+    # slice copy of the cache inside the layer loop (§Perf memory fix)
+    pos_offset: Optional[jax.Array] = None,  # global position of k[:, 0]
+    # (sequence-parallel shards pass their shard offset)
+    return_stats: bool = False,  # return (acc, m, l) un-normalised for
+    # cross-shard softmax combination (flash-decoding style)
+    remat: bool = False,  # checkpoint the chunk body (training: do not save
+    # per-chunk score tensors for backward)
+):
+    """Chunked online-softmax attention.
+
+    KV entry ``j`` is visible to query at absolute position ``p`` iff
+    ``j < kv_valid`` and (not causal or ``j <= p``).  Cache semantics: buffer
+    index == absolute position, so speculative rollback is just a smaller
+    ``kv_valid`` next round.
+    """
+    B, Sq, Hq, D = q.shape
+    stacked = layer is not None
+    Skv, Hkv = (k.shape[2], k.shape[3]) if stacked else (k.shape[1], k.shape[2])
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    if ATTN_IMPL == "stub":  # fused-kernel traffic model (see module note)
+        if stacked:
+            k = jax.lax.dynamic_index_in_dim(k, layer, 0, keepdims=False)
+            v = jax.lax.dynamic_index_in_dim(v, layer, 0, keepdims=False)
+        seq_ax = 1
+        kv = (k.astype(jnp.float32).mean(axis=seq_ax)
+              + v.astype(jnp.float32).mean(axis=seq_ax))  # one pass over K+V
+        kv = jnp.repeat(kv, G, axis=1)  # (B, Hq, D)
+        out = (q.astype(jnp.float32) * kv[:, None] * scale).astype(q.dtype)
+        if return_stats:
+            m = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+            l = jnp.ones((B, Sq, Hkv, G), jnp.float32)
+            return out.reshape(B, Sq, Hkv, G, D).astype(jnp.float32), m, l
+        return out
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    if kv_valid is None:
+        kv_valid = jnp.full((B,), Skv, jnp.int32)
+
+    chunk = min(chunk, Skv)
+    n_chunks = math.ceil(Skv / chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        # rare path: callers size KV buffers to a chunk multiple (make_cache
+        # rounds up), so only short fresh K/V (e.g. whisper's 1500-frame
+        # encoder) ever pays this copy.
+        padw = ((0, 0),) * (k.ndim - 3) + ((0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+
+    if stacked:
+        def chunk_at(a, idx):
+            sl = jax.lax.dynamic_slice(
+                a, (layer, 0, idx * chunk, 0, 0), (1, B, chunk, Hkv, D)
+            )
+            return sl[0]
+    else:
+        def chunk_at(a, idx):
+            return jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+
+    def body(carry, idx):
+        # stream chunks with dynamic_slice (no transposed copy of the cache:
+        # a reshape+moveaxis here doubles the HBM traffic — §Perf iter 0)
+        m, l, acc = carry
+        kb = kv_dequant(chunk_at(k, idx))
+        vb = kv_dequant(chunk_at(v, idx))
+        # scores: (B, Sq, Hkv, G, chunk)
+        s = jnp.einsum(
+            "bshgd,bchd->bshgc", qg, kb, preferred_element_type=jnp.float32
+        ) * scale
+        j = idx * chunk + jnp.arange(chunk, dtype=jnp.int32)  # (chunk,)
+        if pos_offset is not None:
+            j = j + pos_offset
+        mask = j[None, None, :] < kv_valid[:, None, None]  # (B, 1, chunk)
+        if causal:
+            mask = mask & (j[None, None, :] <= q_pos[:, :, None])
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), jnp.arange(n_chunks, dtype=jnp.int32)
+    )
+    if return_stats:
+        return acc, m, l
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    out_std = std / math.sqrt(2 * max(cfg.num_layers, 1))
+    p = {
+        "wq": (jax.random.normal(k1, (d, hq * hd)) * std).astype(jnp.bfloat16),
+        "wk": (jax.random.normal(k2, (d, hkv * hd)) * std).astype(jnp.bfloat16),
+        "wv": (jax.random.normal(k3, (d, hkv * hd)) * std).astype(jnp.bfloat16),
+        "wo": (jax.random.normal(k4, (hq * hd, d)) * out_std).astype(jnp.bfloat16),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.bfloat16)
+    return p
+
+
+def attention_block(
+    x: jax.Array,  # (B, S, d)
+    p: Params,
+    cfg,
+    *,
+    positions: jax.Array,  # (B, S)
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B, Smax, Hkv, D) x2
+    cache_len: Optional[jax.Array] = None,  # (B,)
+    cache_layer: Optional[jax.Array] = None,  # kv_cache is the full (L, ...) stack
+    uniform_start: Optional[jax.Array] = None,  # scalar: all rows share the
+    # same insert position (static padded batches, the paper's planner) ->
+    # the cache append is ONE dynamic_update_slice instead of a scatter,
+    # which XLA updates in place (scatter is charged/copied full-buffer)
+    causal: bool = True,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cross_len: Optional[jax.Array] = None,
+    cross_layer: Optional[jax.Array] = None,
+    chunk: int = 1024,
+    ctx: "MeshContext" = NO_MESH,
+    flash_remat: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """QKV -> (optional cache append) -> flash attention -> output proj.
+
+    With a kv_cache, new K/V rows are scattered into the buffer at
+    ``cache_len + arange(S)`` per row, and attention runs over the whole
+    buffer with ``kv_valid = cache_len + S``; returns the updated cache.
+    With ``cache_layer``, the cache is the stacked (L, B, S, H, D) buffer:
+    only the S new rows are written (tiny scatter) and attention streams
+    chunks directly from the stack — the layer loop never copies the cache.
+    Cross-attention ignores caches for K/V and uses ``cross_kv``.
+    """
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, hq, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = flash_attention(
+            q, k, v, q_pos=positions, kv_valid=cross_len, causal=False,
+            chunk=chunk, layer=cross_layer,
+        )
+        return (out.reshape(B, S, hq * hd) @ p["wo"], None)
+
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and ctx.seq_shard_kv:
+        # sequence-parallel cache: append + flash-decoding combine in one
+        # shard_map (distributed/collectives.py)
+        from repro.distributed.collectives import sp_append_attend
+
+        start = uniform_start if uniform_start is not None else cache_len[0]
+        out, ck, cv = sp_append_attend(
+            q, kv_cache[0], kv_cache[1], k, v, cache_len, start, ctx,
+            causal=causal, chunk=chunk,
+        )
+        return out.reshape(B, S, hq * hd) @ p["wo"], (ck, cv)
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        kq, vq = kv_quant(k, ck.dtype), kv_quant(v, cv.dtype)
+        if uniform_start is not None and cache_layer is not None:
+            start = (cache_layer, jnp.int32(0), uniform_start.astype(jnp.int32),
+                     jnp.int32(0), jnp.int32(0))
+            ck = jax.lax.dynamic_update_slice(ck, kq[None], start)
+            cv = jax.lax.dynamic_update_slice(cv, vq[None], start)
+        elif uniform_start is not None:
+            start = (jnp.int32(0), uniform_start.astype(jnp.int32), jnp.int32(0),
+                     jnp.int32(0))
+            ck = jax.lax.dynamic_update_slice(ck, kq, start)
+            cv = jax.lax.dynamic_update_slice(cv, vq, start)
+        else:
+            b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]  # (B,1)
+            s_idx = cache_len[:, None] + jnp.arange(S, dtype=jnp.int32)[None]  # (B,S)
+            if cache_layer is not None:
+                ck = ck.at[cache_layer, b_idx, s_idx].set(kq, mode="drop")
+                cv = cv.at[cache_layer, b_idx, s_idx].set(vq, mode="drop")
+            else:
+                ck = ck.at[b_idx, s_idx].set(kq, mode="drop")
+                cv = cv.at[b_idx, s_idx].set(vq, mode="drop")
+        new_cache = (ck, cv)
+        kv_valid = cache_len + S
+        out = flash_attention(
+            q, ck, cv, q_pos=positions, kv_valid=kv_valid, causal=causal,
+            chunk=chunk, layer=cache_layer,
+        )
+    else:
+        out = flash_attention(q, k, v, q_pos=positions, causal=causal, chunk=chunk,
+                              remat=flash_remat)
+
+    return out.reshape(B, S, hq * hd) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 0.02
+    out_std = std / math.sqrt(2 * max(cfg.num_layers, 1))
+    if cfg.act == "swiglu":
+        return {
+            "wg": (jax.random.normal(k1, (d, f)) * std).astype(jnp.bfloat16),
+            "wu": (jax.random.normal(k2, (d, f)) * std).astype(jnp.bfloat16),
+            "wd": (jax.random.normal(k3, (f, d)) * out_std).astype(jnp.bfloat16),
+        }
+    return {
+        "wi": (jax.random.normal(k1, (d, f)) * std).astype(jnp.bfloat16),
+        "wd": (jax.random.normal(k3, (f, d)) * out_std).astype(jnp.bfloat16),
+    }
+
+
+def mlp_block(x: jax.Array, p: Params, cfg) -> jax.Array:
+    if "wg" in p:
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["wi"], approximate=True) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k, capacity-based dispatch; EP via shard_map when a mesh is given)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    out_std = std / math.sqrt(2 * max(cfg.num_layers, 1))
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * std).astype(jnp.float32),
+        "wg": (jax.random.normal(k2, (e, d, f)) * std).astype(jnp.bfloat16),
+        "wu": (jax.random.normal(k3, (e, d, f)) * std).astype(jnp.bfloat16),
+        "wd": (jax.random.normal(k4, (e, f, d)) * out_std).astype(jnp.bfloat16),
+    }
+
+
+def _moe_local(x_flat: jax.Array, p: Params, cfg, e_start: int, e_local: int,
+               capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """MoE math over a contiguous slice of experts [e_start, e_start+e_local).
+
+    x_flat: (T, d) local tokens. Router runs over ALL experts (replicated,
+    cheap); only assignments landing in the local expert slice are dispatched.
+    Returns (out (T, d) partial sum over local experts, aux loss scalar).
+    """
+    T, d = x_flat.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+
+    logits = (x_flat.astype(jnp.float32) @ p["router"])  # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, K)  # (T, K)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style), computed over all experts
+    me = jnp.mean(gates, axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # local assignment mask + position within each local expert
+    local = (top_idx >= e_start) & (top_idx < e_start + e_local)  # (T, K)
+    e_rel = jnp.where(local, top_idx - e_start, 0)  # (T, K)
+    flat_onehot = (
+        jax.nn.one_hot(e_rel, e_local, dtype=jnp.int32)
+        * local[..., None].astype(jnp.int32)
+    ).reshape(T * K, e_local)
+    pos = (jnp.cumsum(flat_onehot, axis=0) - flat_onehot)  # position per assignment
+    pos = (pos * flat_onehot).sum(-1).reshape(T, K)
+    keep = local & (pos < capacity)
+
+    # scatter tokens into (e_local, capacity, d)
+    disp = jnp.zeros((e_local, capacity, d), x_flat.dtype)
+    t_rep = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K))
+    e_flat = jnp.where(keep, e_rel, e_local)  # drop -> OOB row
+    disp = disp.at[e_flat.reshape(-1), pos.reshape(-1)].add(
+        jnp.where(keep.reshape(-1, 1), x_flat[t_rep.reshape(-1)], 0),
+        mode="drop",
+    )
+
+    h = jnp.einsum("ecd,edf->ecf", disp, p["wg"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", disp, p["wu"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h) * u).astype(x_flat.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["wd"], preferred_element_type=jnp.float32)
+
+    # gather back: out[t] += gate * y[e, pos]
+    vals = y[e_flat.reshape(-1), pos.reshape(-1)]  # (T*K, d)
+    vals = vals * (top_vals.reshape(-1, 1) * keep.reshape(-1, 1))
+    out = jnp.zeros((T, d), jnp.float32).at[t_rep.reshape(-1)].add(vals)
+    return out.astype(x_flat.dtype), aux
+
+
+def moe_block(x: jax.Array, p: Params, cfg, ctx: MeshContext) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (B, S, d), aux-loss.
+
+    Under a mesh: tokens stay sharded over the batch axes; experts are
+    sharded over the model axis when E % tp == 0 (EP), otherwise expert-
+    internal d_ff is sharded (f-TP).  Either way the partial outputs are
+    psum'd over the model axis — same collective volume as a dense TP MLP.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+
+    def cap(tokens: int) -> int:
+        c = int(math.ceil(tokens * K / E * cfg.capacity_factor))
+        return max(8, -(-c // 8) * 8)  # round up to 8
+
+    if ctx.mesh is None:
+        out, aux = _moe_local(x.reshape(B * S, d), p, cfg, 0, E, cap(B * S))
+        return out.reshape(B, S, d), aux
+
+    tp = ctx.tp
+    ep = E % tp == 0
+    ax = ctx.model_axis
+    batch_spec = P(ctx.batch_axes) if ctx.batch_axes else P()
+    n_batch_shards = 1
+    for a in ctx.batch_axes:
+        n_batch_shards *= ctx.mesh.shape[a]
+    t_local = (B // n_batch_shards) * S
+    capacity = cap(t_local)
+
+    if ep:
+        w_specs = {
+            "router": P(None, None),
+            "wg": P(ax, None, None),
+            "wu": P(ax, None, None),
+            "wd": P(ax, None, None),
+        }
+    else:
+        w_specs = {
+            "router": P(None, None),
+            "wg": P(None, None, ax),
+            "wu": P(None, None, ax),
+            "wd": P(None, ax, None),
+        }
+
+    def shard_fn(xb, pw):
+        tb, _, _ = xb.shape
+        xf = xb.reshape(tb * S, d)
+        if ep:
+            idx = jax.lax.axis_index(ax)
+            e_local = E // tp
+            out, aux = _moe_local(xf, pw, cfg, idx * e_local, e_local, capacity)
+        else:
+            # f-TP: all experts, partial d_ff -> swiglu is elementwise in f,
+            # wd contracts the local f slice; psum completes both f and E sums.
+            out, aux = _moe_local(xf, pw, cfg, 0, E, capacity)
+        # aux is computed from the full router on every model rank; de-dup.
+        aux = aux / tp
+        out = jax.lax.psum(out, ax)
+        aux = jax.lax.psum(aux, ax)
+        return out.reshape(tb, S, d), aux
+
+    out, aux = jax.shard_map(
+        shard_fn,
+        mesh=ctx.mesh,
+        in_specs=(P(ctx.batch_axes if ctx.batch_axes else None, None, None), w_specs),
+        out_specs=(P(ctx.batch_axes if ctx.batch_axes else None, None, None), P()),
+        check_vma=False,
+    )(x, {k: p[k] for k in ("router", "wg", "wu", "wd")})
+    return out, aux / n_batch_shards

@@ -1,0 +1,342 @@
+"""Decoder-only transformer (dense / MoE / VLM) + whisper-style enc-dec.
+
+Pure functions over parameter pytrees.  Layers are stacked along a leading
+``L`` axis and executed with ``lax.scan`` so HLO size (and hence dry-run
+compile time) is independent of depth.  The same ``decode_forward`` serves
+prefill (S = prompt length, cache_len = 0) and SLED verification
+(S = K draft tokens + 1, cache_len = committed length).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.kvcache import init_kv_cache, kv_cache_spec
+from repro.models.layers import MeshContext, NO_MESH
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg, key) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm),
+    }
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_cross_layer(cfg, key) -> Params:
+    p = _init_layer(cfg, key)
+    ks = jax.random.split(key, 2)
+    p["ln_x"] = L.init_norm(cfg.d_model, cfg.norm)
+    p["xattn"] = L.init_attention(ks[1], cfg)
+    return p
+
+
+def _stack_init(init_fn, cfg, key, n) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(cfg, k))(keys)
+
+
+def init_params(cfg, key, *, max_pos: int = 0) -> Params:
+    """``max_pos`` sizes the learned position table (non-RoPE archs only)."""
+    k_emb, k_layers, k_head, k_enc = jax.random.split(key, 4)
+    p: Params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(
+            jnp.bfloat16
+        ),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+    }
+    layer_init = _init_cross_layer if cfg.is_encdec else _init_layer
+    p["layers"] = _stack_init(layer_init, cfg, k_layers, cfg.num_layers)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size)) * 0.02
+        ).astype(jnp.bfloat16)
+    if not cfg.use_rope:
+        p["pos_embed"] = (
+            jax.random.normal(k_head, (max(max_pos, 1), cfg.d_model)) * 0.01
+        ).astype(jnp.bfloat16)
+    if cfg.is_encdec:
+        ke1, ke2 = jax.random.split(k_enc)
+        p["enc"] = {
+            "pos_embed": (
+                jax.random.normal(ke1, (cfg.encoder_seq, cfg.d_model)) * 0.01
+            ).astype(jnp.bfloat16),
+            "layers": _stack_init(_init_layer, cfg, ke2, cfg.encoder_layers),
+            "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+        }
+    return p
+
+
+def init_params_spec(cfg, *, max_pos: int = 0):
+    """ShapeDtypeStruct pytree with the same structure (dry-run, no alloc)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k, max_pos=max_pos), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block(
+    x: jax.Array,
+    lp: Params,
+    cfg,
+    ctx: MeshContext,
+    *,
+    positions: jax.Array,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_len: Optional[jax.Array] = None,
+    cache_layer: Optional[jax.Array] = None,
+    uniform_start: Optional[jax.Array] = None,
+    causal: bool = True,
+    cross: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cross_len: Optional[jax.Array] = None,
+    cross_layer: Optional[jax.Array] = None,
+    attn_chunk: int = 1024,
+    flash_remat: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]], jax.Array]:
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    a, new_kv = L.attention_block(
+        h, lp["attn"], cfg,
+        positions=positions, kv_cache=kv, cache_len=cache_len,
+        cache_layer=cache_layer, uniform_start=uniform_start,
+        causal=causal, chunk=attn_chunk, ctx=ctx, flash_remat=flash_remat,
+    )
+    x = x + a
+    if cross is not None:
+        h = L.apply_norm(x, lp["ln_x"], cfg.norm)
+        a, _ = L.attention_block(
+            h, lp["xattn"], cfg,
+            positions=positions, cross_kv=cross, cross_len=cross_len,
+            cross_layer=cross_layer, chunk=attn_chunk,
+        )
+        x = x + a
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        m, aux = L.moe_block(h, lp["moe"], cfg, ctx)
+    else:
+        m = L.mlp_block(h, lp["mlp"], cfg)
+    return x + m, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# Training / full-sequence forward (no cache)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg,
+    params: Params,
+    tokens: jax.Array,  # (B, S) int32
+    ctx: MeshContext = NO_MESH,
+    *,
+    embeds_prefix: Optional[jax.Array] = None,  # (B, P, d) VLM patch embeddings
+    enc_frames: Optional[jax.Array] = None,  # (B, F, d) whisper stub frontend
+    remat: bool = False,
+    attn_chunk: int = 1024,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B, S_total, d), aux_loss). Use lm_head() for logits."""
+    x = L.embed_lookup(params["embed"], tokens, ctx)
+    if embeds_prefix is not None:
+        x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][positions]
+
+    cross = cross_len = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, enc_frames, ctx, attn_chunk=attn_chunk)
+        cross_len = jnp.full((B,), enc_out.shape[1], jnp.int32)
+    else:
+        enc_out = None
+
+    def body(carry, lp):
+        h, aux = carry
+        if cfg.is_encdec:
+            # cross K/V are layer-specific projections of the shared enc_out
+            ck = (enc_out @ lp["xattn"]["wk"]).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+            cv = (enc_out @ lp["xattn"]["wv"]).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+            h, _, a = _block(
+                h, lp, cfg, ctx, positions=positions,
+                cross=(ck, cv), cross_len=cross_len, attn_chunk=attn_chunk,
+                flash_remat=remat,
+            )
+        else:
+            h, _, a = _block(h, lp, cfg, ctx, positions=positions,
+                             attn_chunk=attn_chunk, flash_remat=remat)
+        return (h, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    return x, aux
+
+
+def encode(cfg, params, frames: jax.Array, ctx: MeshContext = NO_MESH, *, attn_chunk=1024):
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    enc = params["enc"]
+    B, F, _ = frames.shape
+    x = frames.astype(jnp.bfloat16) + enc["pos_embed"][None, :F]
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def body(h, lp):
+        h, _, _ = _block(h, lp, cfg, ctx, positions=positions, causal=False,
+                         attn_chunk=attn_chunk)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return L.apply_norm(x, enc["final_norm"], cfg.norm)
+
+
+def lm_head(cfg, params: Params, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cache-based forward: prefill + SLED verification
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg, batch: int, max_len: int, *, spec_only: bool = False,
+               attn_chunk: int = 1024, enc_len: int = 0, kv_dtype=jnp.bfloat16):
+    """Cache buffer rounded up to a multiple of the attention chunk.
+
+    ``kv_dtype=jnp.int8`` halves the cache stream/footprint (layers.kv_quant).
+    """
+    max_len = -(-max_len // attn_chunk) * attn_chunk
+    fn = kv_cache_spec if spec_only else init_kv_cache
+    cache = fn(cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim,
+               dtype=kv_dtype)
+    if cfg.is_encdec:
+        shp = (cfg.num_layers, batch, enc_len or cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+        if spec_only:
+            cache["cross_k"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+            cache["cross_v"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+        else:
+            cache["cross_k"] = jnp.zeros(shp, jnp.bfloat16)
+            cache["cross_v"] = jnp.zeros(shp, jnp.bfloat16)
+    return cache
+
+
+def decode_forward(
+    cfg,
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,  # (B, S_new)
+    ctx: MeshContext = NO_MESH,
+    *,
+    embeds: Optional[jax.Array] = None,  # override token embedding (VLM prefill)
+    attn_chunk: int = 1024,
+    uniform: bool = False,  # all rows share one insert position (padded static batch)
+) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array]:
+    """Run S_new tokens against the cache starting at ``cache['length']``.
+
+    Returns (hidden (B, S_new, d), cache', aux).  ``cache'`` has the new K/V
+    written but ``length`` unchanged — callers commit via kvcache.rollback
+    (for SLED: after the acceptance count is known).
+    """
+    x = L.embed_lookup(params["embed"], tokens, ctx) if embeds is None else embeds.astype(jnp.bfloat16)
+    B, S, _ = x.shape
+    cache_len = cache["length"]
+    positions = cache_len[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][positions]
+    cross_len = None
+    if cfg.is_encdec:
+        cross_len = jnp.full((B,), cache["cross_k"].shape[2], jnp.int32)
+    uniform_start = cache_len[0] if uniform else None
+
+    # fori_loop carrying the FULL cache buffers, updated in place: a scan
+    # with cache xs/ys double-buffers the whole KV cache (2x HBM for the
+    # largest tensor of the serving path).  Only the S new K/V rows are
+    # scattered in, and attention streams chunks straight from the stacked
+    # buffer — per-step cache traffic is one read + an O(B*S_new) write,
+    # which is the roofline minimum for verification.
+    def idx(a, l):
+        return jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+
+    def body(l, carry):
+        # slice the layer's cache out, append + attend, write back in place.
+        # (Streaming chunks straight from the stacked buffer inside the
+        # flash scan re-materialises the stack as a while-loop operand on
+        # some backends — the per-layer slice is the portable fast path;
+        # the "split" cache layout below removes even this copy.)
+        h, k_all, v_all, aux = carry
+        lp = jax.tree.map(lambda a: idx(a, l), params["layers"])
+        cross = (idx(cache["cross_k"], l), idx(cache["cross_v"], l)) if cfg.is_encdec else None
+        h, new_kv, a = _block(
+            h, lp, cfg, ctx, positions=positions, kv=(idx(k_all, l), idx(v_all, l)),
+            cache_len=cache_len, uniform_start=uniform_start,
+            cross=cross, cross_len=cross_len, attn_chunk=attn_chunk,
+        )
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, new_kv[0], l, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, new_kv[1], l, 0)
+        return (h, k_all, v_all, aux + a)
+
+    x, k_all, v_all, aux = jax.lax.fori_loop(
+        0, cfg.num_layers, body,
+        (x, cache["k"], cache["v"], jnp.zeros((), jnp.float32)),
+    )
+    new_cache = {**cache, "k": k_all, "v": v_all}
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    return x, new_cache, aux
+
+
+def prefill(
+    cfg,
+    params: Params,
+    tokens: jax.Array,  # (B, S_prompt)
+    cache: Dict[str, jax.Array],
+    ctx: MeshContext = NO_MESH,
+    *,
+    embeds_prefix: Optional[jax.Array] = None,
+    enc_frames: Optional[jax.Array] = None,
+    attn_chunk: int = 1024,
+    uniform: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Fill the cache from a prompt; returns (last-position logits, cache)."""
+    B = tokens.shape[0]
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, enc_frames, ctx, attn_chunk=attn_chunk)
+        cks, cvs = _map_layers_xkv(params["layers"], enc_out, cfg, B)
+        cache = {**cache, "cross_k": cks, "cross_v": cvs}
+    embeds = None
+    if embeds_prefix is not None:
+        tok_emb = params["embed"][tokens]
+        embeds = jnp.concatenate([embeds_prefix.astype(tok_emb.dtype), tok_emb], axis=1)
+    h, cache, _ = decode_forward(cfg, params, cache, tokens, ctx, embeds=embeds,
+                                 attn_chunk=attn_chunk, uniform=uniform)
+    S_total = h.shape[1]
+    cache["length"] = cache["length"] + S_total
+    logits = lm_head(cfg, params, h[:, -1:, :])
+    return logits[:, 0], cache
+
+
+def _map_layers_xkv(layers, enc_out, cfg, B):
+    def one(lp):
+        ck = (enc_out @ lp["xattn"]["wk"]).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+        cv = (enc_out @ lp["xattn"]["wv"]).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+        return ck, cv
+
+    return jax.lax.map(one, layers)

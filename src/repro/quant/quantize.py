@@ -1,0 +1,85 @@
+"""Weight-only quantization (int8 / int4, per-output-channel scales).
+
+The paper's Fig. 6 sweeps 16/8/4-bit precision on both edge devices and the
+server; this module provides the numerics.  Matrix leaves (ndim >= 2) are
+quantized along their last axis; norms/biases/scalars stay fp.
+
+``quantize_pytree`` -> {leaf: QTensor}, ``dequantize_pytree`` -> bf16 pytree
+(what the serving engine loads: memory footprint on HBM is bits/8 per param
+— the roofline memory term uses this, see benchmarks/pareto.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array      # int8 payload ((bits=4) packs two nibbles per byte)
+    scale: jax.Array  # fp32, per output channel
+    bits: int
+    shape: tuple
+
+
+def _is_matrix(leaf) -> bool:
+    return hasattr(leaf, "ndim") and leaf.ndim >= 2 and leaf.dtype in (
+        jnp.bfloat16, jnp.float32, jnp.float16,
+    )
+
+
+def quantize(w: jax.Array, bits: int) -> QTensor:
+    assert bits in (4, 8)
+    qmax = 127 if bits == 8 else 7
+    w32 = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(w32), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, bits=bits, shape=tuple(w.shape))
+
+
+def dequantize(t: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return (t.q.astype(jnp.float32) * t.scale).astype(dtype)
+
+
+def quantize_pytree(params: Any, bits: int) -> Any:
+    if bits >= 16:
+        return params
+    return jax.tree.map(
+        lambda w: quantize(w, bits) if _is_matrix(w) else w, params
+    )
+
+
+def dequantize_pytree(qparams: Any, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda t: dequantize(t, dtype) if isinstance(t, QTensor) else t,
+        qparams,
+        is_leaf=lambda x: isinstance(x, QTensor),
+    )
+
+
+def quantized_bytes(params: Any, bits: int) -> int:
+    """Model-weight HBM footprint at the given precision."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        n = leaf.size
+        if _is_matrix(leaf) and bits < 16:
+            total += n * bits // 8 + leaf.shape[-2] * 4  # payload + scales
+        else:
+            total += n * leaf.dtype.itemsize
+    return total
+
+
+def quant_error(params: Any, bits: int) -> float:
+    """Mean relative L2 error across matrix leaves (quality proxy)."""
+    if bits >= 16:
+        return 0.0
+    errs = []
+    for leaf in jax.tree.leaves(params):
+        if _is_matrix(leaf):
+            d = dequantize(quantize(leaf, bits), jnp.float32)
+            w = leaf.astype(jnp.float32)
+            errs.append(float(jnp.linalg.norm(d - w) / jnp.maximum(jnp.linalg.norm(w), 1e-9)))
+    return sum(errs) / max(len(errs), 1)

@@ -1,0 +1,247 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module is PER-DEVICE
+(verified empirically), so chips never divides those two terms again.
+collective_bytes comes from walking the optimized HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+weighted by the ``known_trip_count`` of any enclosing while loop (scan) and
+by the collective's algorithmic byte multiplier on a ring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# TPU v5e hardware constants (assignment-provided)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (~per-chip collective bandwidth)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,512]{1,0}' -> bytes."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _first_shape(line: str) -> int:
+    """Bytes of the op's result shape (first shape token, incl. tuples)."""
+    # result may be a tuple: (f32[...], f32[...])
+    eq = line.find("=")
+    rhs = line[eq + 1 :] if eq >= 0 else line
+    shapes = re.findall(r"\w+\[[\d,]*\](?:\{[\d,]*\})?", rhs.split("(")[0])
+    if not shapes:
+        shapes = re.findall(r"\w+\[[\d,]*\]", rhs)[:1]
+    return sum(_shape_bytes(s) for s in shapes)
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float = 0.0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    ops: List[Tuple[str, float, int, int]] = dataclasses.field(default_factory=list)
+    # (kind, bytes_weighted, group_size, trip_multiplier)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device collective traffic over one step execution."""
+    # 1. split into computations
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"%?([\w\.\-]+)[^=]*\([^)]*\)\s*->.*\{\s*$", line.strip())
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # 2. while-op trip counts: body computation -> multiplier
+    body_trips: Dict[str, int] = {}
+    caller_of: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            wm = re.search(r"while\(.*body=%?([\w\.\-]+)", line)
+            if wm:
+                body = wm.group(1)
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+                body_trips[body] = int(tm.group(1)) if tm else 1
+                caller_of[body] = cname
+            cm = re.search(r"condition=%?([\w\.\-]+)", line)
+            if cm:
+                caller_of[cm.group(1)] = cname
+
+    def multiplier(cname: str, depth: int = 0) -> int:
+        if depth > 16:
+            return 1
+        mult = body_trips.get(cname, 1)
+        parent = caller_of.get(cname)
+        if parent and parent != cname:
+            mult *= multiplier(parent, depth + 1)
+        return mult
+
+    # 3. collect collective ops weighted by ring-algorithm byte factors
+    stats = CollectiveStats()
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        for line in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"= [^=]*\b{kind}\(", line) or re.search(
+                    rf"= [^=]*\b{kind}-start\(", line
+                ):
+                    out_b = _first_shape(line)
+                    g = _group_size(line)
+                    if kind == "all-reduce":
+                        b = 2.0 * out_b * (g - 1) / g
+                    elif kind == "all-gather":
+                        b = out_b * (g - 1) / g
+                    elif kind == "reduce-scatter":
+                        b = out_b * (g - 1)  # input is g x output
+                    elif kind == "all-to-all":
+                        b = out_b * (g - 1) / g
+                    else:  # collective-permute
+                        b = out_b
+                    stats.total_bytes += b * mult
+                    stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + b * mult
+                    stats.ops.append((kind, b * mult, g, mult))
+                    break
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per device
+    hlo_bytes: float          # per device
+    collective_bytes: float   # per device
+    model_flops: float        # analytic useful FLOPs (global)
+    arg_bytes: int
+    temp_bytes: int
+    out_bytes: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (chips x HLO_FLOPs): remat/redundancy waste gauge."""
+        return self.model_flops / max(self.hlo_flops * self.chips, 1.0)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the dominant-roof peak this step achieves if it ran at
+        the bound: useful-compute-time / bound-time."""
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS
+        return t_useful / max(self.t_bound, 1e-30)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            useful_flops_frac=self.useful_flops_frac,
+            roofline_frac=self.roofline_frac,
+        )
+        return d
+
+
+def _n_attn_layers(cfg) -> int:
+    """Layers that actually run (self-)attention."""
+    if cfg.family == "hybrid":
+        return cfg.num_layers // max(cfg.attn_every, 1)
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "encdec":
+        return cfg.num_layers + cfg.encoder_layers  # (+cross, folded in x2 below)
+    return cfg.num_layers
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step: 6*N*D train, 2*N*D forward-only
+    (N = active params), plus attention term over attention-bearing layers."""
+    n_active = cfg.active_param_count()
+    n_attn = _n_attn_layers(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_active * tokens
+        # attention scores+values: 12*B*H*S^2*hd (fwd+bwd), causal halves
+        if cfg.num_heads:
+            flops += 6.0 * shape.global_batch * n_attn * cfg.num_heads \
+                * shape.seq_len ** 2 * cfg.head_dim
+        return flops
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_active * tokens
+        if cfg.num_heads:
+            flops += 2.0 * shape.global_batch * n_attn * cfg.num_heads \
+                * shape.seq_len ** 2 * cfg.head_dim / 2  # causal half x2 gemms
+        return flops
+    # decode/verify: K+1 tokens per row + attention over the whole cache
+    k1 = shape.spec_len + 1
+    tokens = shape.global_batch * k1
+    flops = 2.0 * n_active * tokens
+    if cfg.num_heads:
+        flops += 4.0 * shape.global_batch * n_attn * cfg.num_heads \
+            * k1 * shape.seq_len * cfg.head_dim
+    return flops

@@ -1,0 +1,367 @@
+"""HLO-text cost model with while-loop trip-count multipliers.
+
+Why not ``compiled.cost_analysis()``: XLA's analysis counts each while BODY
+once — a scan-over-88-layers (or an 8x grad-accumulation loop) reports 1/88
+(1/8) of the real FLOPs/bytes.  Our models put everything in loops
+deliberately (compile time), so we walk the optimized HLO ourselves:
+
+  * computations are parsed into (opcode, result shapes, operand refs);
+  * a call graph (while/fusion/call/conditional) propagates execution
+    multipliers; while trip counts come from ``known_trip_count`` backend
+    configs (XLA annotates scan-derived loops);
+  * FLOPs: 2 * numel(result) * prod(contracting dims) per dot (exact for
+    matmul-dominated models; convs are counted via their FLOPs estimate);
+  * bytes: per top-level op, operands + result — with TPU-style in-place
+    semantics for dynamic-update-slice / scatter / dynamic-slice (charged at
+    update/slice size, not full-operand size, matching what a real TPU
+    executable does to HBM; XLA:CPU's own numbers double-charge these).
+
+This feeds the three-term roofline in analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_text: str
+    operands: List[str]
+    line: str
+
+    @property
+    def result_shapes(self):
+        return _shape_list(self.result_text)
+
+    @property
+    def result_bytes(self) -> int:
+        return _bytes_of(self.result_shapes)
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\]\{\},\d]+)\s+([\w\-]+)\((.*?)\)"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(\([^{]*\))?\s*->.*\{\s*$")
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Op]] = {}
+        self.param_shapes: Dict[str, Dict[str, str]] = {}
+        self.entry: Optional[str] = None
+        self._fkind_cache: Dict = {}
+        self._parse(hlo_text)
+        self._build_multipliers()
+
+    # -- parsing ------------------------------------------------------------
+
+    def _parse(self, text: str) -> None:
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None or not line.startswith(" "):
+                m = _COMP_RE.match(line)
+                if m and line.endswith("{"):
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, rtype, opcode, args = m.groups()
+            operands = [a.strip().lstrip("%") for a in self._split_args(args)]
+            self.comps[cur].append(Op(name, opcode, rtype, operands, line))
+
+    @staticmethod
+    def _split_args(args: str) -> List[str]:
+        out, depth, cur = [], 0, []
+        for ch in args:
+            if ch == "," and depth == 0:
+                out.append("".join(cur))
+                cur = []
+            else:
+                depth += ch in "([{"
+                depth -= ch in ")]}"
+                cur.append(ch)
+        if cur:
+            out.append("".join(cur))
+        return [a for a in (s.strip() for s in out) if a]
+
+    # -- call graph & multipliers --------------------------------------------
+
+    def _build_multipliers(self) -> None:
+        self.mult: Dict[str, float] = {c: 0.0 for c in self.comps}
+        # computations embedded in a fused op never touch HBM themselves:
+        # count their FLOPs but not their bytes
+        self.embedded: Dict[str, bool] = {c: False for c in self.comps}
+        if self.entry is None and self.comps:
+            self.entry = next(iter(self.comps))
+        if self.entry is None:
+            return
+        self.mult[self.entry] = 1.0
+        # iterate to fixpoint (call graph is a DAG; few passes suffice)
+        for _ in range(32):
+            changed = False
+            for cname, ops in self.comps.items():
+                base = self.mult.get(cname, 0.0)
+                if base == 0.0:
+                    continue
+                for op in ops:
+                    for callee, m, emb in self._callees(op):
+                        if callee in self.mult:
+                            new = base * m
+                            emb = emb or self.embedded[cname]
+                            if new > self.mult[callee] or (
+                                emb != self.embedded[callee] and emb
+                            ):
+                                self.mult[callee] = max(new, self.mult[callee])
+                                self.embedded[callee] = self.embedded[callee] or emb
+                                changed = True
+            if not changed:
+                break
+
+    @staticmethod
+    def _callees(op: Op) -> List[Tuple[str, float, bool]]:
+        """(callee, multiplier, embedded-in-fused-op)."""
+        out = []
+        if op.opcode == "while":
+            trip = 1.0
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.line)
+            if tm:
+                trip = float(tm.group(1))
+            bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+            cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+            if bm:
+                out.append((bm.group(1), trip, False))
+            if cm:
+                out.append((cm.group(1), trip + 1, False))
+        elif op.opcode in ("fusion", "reduce", "map", "scatter",
+                           "reduce-window", "sort", "select-and-scatter"):
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.line):
+                out.append((m.group(1), 1.0, True))
+        elif op.opcode == "call":
+            for m in re.finditer(r"to_apply=%?([\w\.\-]+)", op.line):
+                out.append((m.group(1), 1.0, False))
+        elif op.opcode == "conditional":
+            for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w\.\-]+)|false_computation=%?([\w\.\-]+))", op.line):
+                for g in m.groups():
+                    if g:
+                        for nm in g.split(","):
+                            out.append((nm.strip().lstrip("%"), 1.0, False))
+        return out
+
+    # -- costs ----------------------------------------------------------------
+
+    _ARTIFACT_OPS = {
+        "convert", "bitcast", "transpose", "copy", "reshape", "broadcast",
+        "parameter", "constant", "tuple", "get-tuple-element", "iota",
+        "compare", "select", "concatenate", "pad", "add", "subtract",
+        "multiply", "divide", "maximum", "minimum", "exponential", "negate",
+    }
+
+    def _fusion_kind(self, op: Op) -> str:
+        """Classify a fusion by its callee's interior: dus | scatter |
+        slice | artifact | compute.  'artifact' = pure layout/precision
+        plumbing (bf16->f32 upcasts, transposed copies for CPU dot layouts)
+        that a TPU executable wouldn't materialise."""
+        m = re.search(r"calls=%?([\w\.\-]+)", op.line)
+        callee = m.group(1) if m else None
+        key = (op.name, callee)
+        cached = self._fkind_cache.get(key)
+        if cached is not None:
+            return cached[0]
+        kind = "compute"
+        inner = {o.opcode for o in self.comps.get(callee, [])}
+        if "dynamic-update-slice" in inner:
+            kind = "dus"
+        elif "scatter" in inner:
+            kind = "scatter"
+        elif inner & {"dynamic-slice", "slice", "gather"}:
+            kind = "slice"
+        elif inner and inner <= self._ARTIFACT_OPS and not (
+            inner & {"dot", "reduce", "convolution"}
+        ):
+            # only cheap elementwise/layout ops inside: a precision/layout hop
+            kind = "artifact"
+        self._fkind_cache[key] = (kind, "convert" in inner)
+        return kind
+
+    def _fusion_has_convert(self, op: Op) -> bool:
+        self._fusion_kind(op)
+        m = re.search(r"calls=%?([\w\.\-]+)", op.line)
+        callee = m.group(1) if m else None
+        return self._fkind_cache.get((op.name, callee), ("", False))[1]
+
+    def _is_artifact(self, op: Op) -> bool:
+        if op.opcode in ("convert", "bitcast", "reshape", "transpose", "copy"):
+            return True
+        if op.opcode == "fusion":
+            return self._fusion_kind(op) == "artifact"
+        return False
+
+    def _symbol_bytes(self, cname: str) -> Dict[str, int]:
+        table: Dict[str, int] = {}
+        for op in self.comps[cname]:
+            if self._is_artifact(op) and op.operands:
+                # passthrough: consumers of an upcast/copy read the original
+                src = table.get(op.operands[0], op.result_bytes)
+                table[op.name] = min(src, op.result_bytes)
+            elif op.opcode == "fusion" and self._fusion_kind(op) == "slice":
+                # fused slice(+convert): consumers read the slice at its
+                # pre-upcast width
+                rb = op.result_bytes
+                table[op.name] = rb // 2 if self._fusion_has_convert(op) else rb
+            else:
+                table[op.name] = op.result_bytes
+        return table
+
+    def _symbol_shapes(self, cname: str) -> Dict[str, List[Tuple[str, List[int]]]]:
+        return {op.name: op.result_shapes for op in self.comps[cname]}
+
+    def _op_bytes(self, op: Op, table: Dict[str, int]) -> float:
+        oc = op.opcode
+        if oc in _NO_TRAFFIC or oc.endswith("-done"):
+            return 0.0
+        if self._is_artifact(op):
+            return 0.0
+        operand_bytes = [table.get(o, 0) for o in op.operands]
+        res = op.result_bytes
+        fkind = self._fusion_kind(op) if oc == "fusion" else ""
+        if oc == "dynamic-update-slice" or fkind == "dus":
+            # in-place on TPU: read+write the update window, not the buffer
+            upd = min((b for b in operand_bytes if b > 0), default=res)
+            return 2.0 * upd
+        if oc == "scatter" or fkind == "scatter":
+            upd = min((b for b in operand_bytes if b > 0), default=res)
+            return 3.0 * upd  # indices+update read, window write (in-place)
+        if oc in ("dynamic-slice", "slice") or fkind == "slice":
+            # pure data movement on a contiguous window: the CONSUMER is
+            # charged for reading the slice (symbol-table passthrough), so
+            # charging here too would double/triple-count weight streams
+            # through slice->convert->dot chains
+            return 0.0
+        if oc == "gather":
+            return 2.0 * res  # random access: table touch + result write
+        if oc == "broadcast":
+            return 2.0 * res
+        return float(sum(operand_bytes) + res)
+
+    def _dot_flops(self, op: Op, shapes) -> float:
+        if op.opcode not in ("dot", "convolution"):
+            return 0.0
+        res = op.result_shapes
+        numel = 0
+        for _, dims in res:
+            n = 1
+            for d in dims:
+                n *= d
+            numel += n
+        if op.opcode == "convolution":
+            # our models lower convs as shifted adds; any residual conv op is
+            # negligible — charge 2*numel(out) as a floor
+            return 2.0 * numel
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+        lhs = shapes.get(op.operands[0], [])
+        if not m or not lhs:
+            return 2.0 * numel
+        cdims = [int(x) for x in m.group(1).split(",") if x]
+        _, ldims = lhs[0]
+        k = 1
+        for i in cdims:
+            if i < len(ldims):
+                k *= ldims[i]
+        return 2.0 * numel * k
+
+    def totals(self) -> Dict[str, float]:
+        flops = 0.0
+        bytes_ = 0.0
+        coll_bytes = 0.0
+        coll_by_kind: Dict[str, float] = {}
+        for cname, ops in self.comps.items():
+            mult = self.mult.get(cname, 0.0)
+            if mult == 0.0:
+                continue
+            embedded = self.embedded.get(cname, False)
+            table = self._symbol_bytes(cname)
+            shapes = self._symbol_shapes(cname)
+            for op in ops:
+                flops += mult * self._dot_flops(op, shapes)
+                if not embedded:
+                    bytes_ += mult * self._op_bytes(op, table)
+                for kind in _COLLECTIVES:
+                    if op.opcode == kind or op.opcode == kind + "-start":
+                        b = self._collective_bytes(op, table)
+                        coll_bytes += mult * b
+                        coll_by_kind[kind] = coll_by_kind.get(kind, 0.0) + mult * b
+                        break
+        return {
+            "flops": flops,
+            "bytes": bytes_,
+            "collective_bytes": coll_bytes,
+            "collective_by_kind": coll_by_kind,
+        }
+
+    def _collective_bytes(self, op: Op, table: Dict[str, int]) -> float:
+        g = 2
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+        if m:
+            g = int(m.group(2))
+        else:
+            m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.line)
+            if m:
+                g = len(m.group(1).split(","))
+        out_b = op.result_bytes
+        kind = op.opcode.replace("-start", "")
+        if kind == "all-reduce":
+            return 2.0 * out_b * (g - 1) / g
+        if kind == "all-gather":
+            return out_b * (g - 1) / g
+        if kind == "reduce-scatter":
+            return out_b * (g - 1)
+        if kind == "all-to-all":
+            return out_b * (g - 1) / g
+        return float(out_b)  # collective-permute

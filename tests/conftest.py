@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 device;
+only launch/dryrun.py (and tests that spawn their own debug mesh via
+xla_force_host_platform_device_count in a subprocess) use more."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,44 @@
+"""int8 KV cache (beyond-paper): fidelity + end-to-end serve-path checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.model_zoo import build_model
+
+V = 128
+
+
+def _model():
+    cfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=V)
+    m = build_model(cfg)
+    return m, m.init_params(jax.random.key(0))
+
+
+def test_int8_kv_close_to_bf16():
+    m, p = _model()
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, V)
+    c16 = m.make_cache(2, 64, attn_chunk=16)
+    c8 = m.make_cache(2, 64, attn_chunk=16, kv_dtype=jnp.int8)
+    lg16, c16 = m.prefill(p, toks, c16, attn_chunk=16)
+    lg8, c8 = m.prefill(p, toks, c8, attn_chunk=16)
+    assert c8["k"].dtype == jnp.int8
+    rel = float(jnp.abs(lg16 - lg8).max() / (jnp.abs(lg16).max() + 1e-9))
+    assert rel < 0.1, rel
+    # verify path still works and commits
+    h8, ck, _ = m.decode_forward(p, c8, toks[:, :3], attn_chunk=16)
+    assert bool(jnp.isfinite(h8).all())
+    committed = m.commit(ck, jnp.array([2, 3], jnp.int32))
+    assert committed["k"].dtype == jnp.int8
+    assert committed["length"].tolist() == [18, 19]
+
+
+def test_int8_kv_footprint_halves():
+    m, _ = _model()
+    c16 = m.make_cache(2, 64, attn_chunk=16, spec_only=True)
+    c8 = m.make_cache(2, 64, attn_chunk=16, spec_only=True, kv_dtype=jnp.int8)
+    b16 = c16["k"].size * c16["k"].dtype.itemsize
+    b8 = c8["k"].size * c8["k"].dtype.itemsize
+    assert b8 * 2 == b16

@@ -1,0 +1,84 @@
+"""Serving layer: simulator physics, scheduler policies, fault tolerance."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import BatchPlanner, VerifyRequest
+from repro.serving.devices import A100_X4, RPI5, V5E_16
+from repro.serving.simulator import SimConfig, capacity, simulate
+
+
+def _base(**kw):
+    d = dict(mode="sled", n_devices=8, device_rate=8.0, acceptance=0.9,
+             spec_len=4, server_batch=8, batch_policy="deadline", sim_time=20.0)
+    d.update(kw)
+    return SimConfig(**d)
+
+
+def test_sled_beats_centralized_capacity():
+    """The paper's Table-I claim: >2x capacity at the same response rate."""
+    sled = capacity(_base(), A100_X4, n_max=256)
+    cent = capacity(_base(mode="centralized"), A100_X4, n_max=256)
+    assert sled / max(cent, 1) > 2.0, (sled, cent)
+
+
+def test_wstgr_beats_centralized_at_saturation():
+    """Fig. 4 claim: >2x system throughput at equal batch once the server is
+    the binding resource for both systems.  (Below centralized capacity the
+    centralized server simply streams faster than slow edge drafting — the
+    paper's "identical conditions" comparison is at scale, where SLED's
+    server does K+1 tokens per row per round.)"""
+    cfg = _base(n_devices=1024, server_batch=16, sim_time=15.0)
+    sled = simulate(cfg, A100_X4)
+    cent = simulate(dataclasses.replace(cfg, mode="centralized"), A100_X4)
+    assert cent.server_busy_frac > 0.9  # centralized saturated
+    assert sled.wstgr / cent.wstgr > 2.0, (sled.wstgr, cent.wstgr)
+
+
+def test_speclen_tradeoff_direction():
+    """Fig. 5: longer speculation -> lower device rate, higher capacity."""
+    r_short = simulate(_base(spec_len=1), A100_X4)
+    r_long = simulate(_base(spec_len=16), A100_X4)
+    assert r_long.per_device_rate < r_short.per_device_rate
+    cap_short = capacity(_base(spec_len=1, sim_time=8.0), A100_X4, n_max=256)
+    cap_long = capacity(_base(spec_len=16, sim_time=8.0), A100_X4, n_max=256)
+    assert cap_long > cap_short
+
+
+def test_timeout_fallback_keeps_devices_alive():
+    """Paper §III-A: network loss triggers local-draft fallback, the system
+    degrades gracefully instead of stalling (fault tolerance on the
+    serving path)."""
+    r = simulate(_base(drop_prob=0.5, verify_timeout=0.2), A100_X4)
+    assert r.timeouts > 0
+    assert r.fallback_tokens > 0
+    assert r.wstgr > 0.2 * 8 * 8.0 * 0.5  # still makes real progress
+
+
+def test_straggler_eviction():
+    p = BatchPlanner(batch_size=4, k_max=4, policy="static", straggler_timeout=0.1)
+    p.add(VerifyRequest(0, arrival=0.0, prev_token=0,
+                        draft_tokens=np.zeros(2, np.int32)))
+    p.add(VerifyRequest(1, arrival=5.0, prev_token=0,
+                        draft_tokens=np.zeros(2, np.int32)))
+    assert p.next_batch(5.01, True) is None  # static: batch not full
+    assert len(p.dropped) == 1 and p.dropped[0].device_id == 0
+
+
+def test_continuous_batching_beats_static_latency():
+    """Beyond-paper scheduler: continuous batching cuts round latency when
+    the server is underutilized."""
+    st = simulate(_base(batch_policy="static", server_batch=8, n_devices=8), A100_X4)
+    co = simulate(_base(batch_policy="continuous", server_batch=8, n_devices=8), A100_X4)
+    assert co.mean_round_latency <= st.mean_round_latency * 1.05
+
+
+def test_v5e_profile_serves():
+    r = simulate(_base(), V5E_16)
+    assert r.wstgr > 0
+
+
+def test_dynamic_draft_lengths():
+    r = simulate(_base(dynamic=True, c_th_mean_len=3.0), A100_X4)
+    assert r.wstgr > 0

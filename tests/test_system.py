@@ -1,0 +1,109 @@
+"""End-to-end behaviour of the SLED system (paper-level invariants)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import drafting, verification
+from repro.core.engine_loop import autoregressive_generate, sled_generate
+from repro.models.model_zoo import build_model
+
+V = 96
+
+
+def _pair():
+    dcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=V)
+    tcfg = dataclasses.replace(get_config("phi3-mini-3.8b").reduced(),
+                               name="t", vocab_size=V)
+    dm, tm = build_model(dcfg), build_model(tcfg)
+    return dm, dm.init_params(jax.random.key(1)), tm, tm.init_params(jax.random.key(2))
+
+
+def test_end_to_end_heterogeneous_drafts_one_target():
+    """SLED's core serving property: ONE target model verifies drafts from
+    DIFFERENT draft models (device heterogeneity, §III-B) — outputs stay
+    exactly the target's greedy outputs either way."""
+    dm1, dp1, tm, tp = _pair()
+    dcfg2 = dataclasses.replace(get_config("qwen2-1.5b").reduced(),
+                                name="d2", vocab_size=V, num_layers=1, d_ff=64)
+    dm2 = build_model(dcfg2)
+    dp2 = dm2.init_params(jax.random.key(7))
+    prompts = jax.random.randint(jax.random.key(3), (2, 10), 0, V)
+    ref = autoregressive_generate(tm, tp, prompts, max_new=16)
+    out1, _, _ = sled_generate(dm1, dp1, tm, tp, prompts, max_new=16, k_max=3)
+    out2, _, _ = sled_generate(dm2, dp2, tm, tp, prompts, max_new=16, k_max=5)
+    np.testing.assert_array_equal(out1, ref)
+    np.testing.assert_array_equal(out2, ref)
+
+
+def test_verify_step_batch_padding_matches_unpadded():
+    """The server's padded static batch (paper: 'applies appropriate
+    padding to equalize token lengths') gives identical verdicts to
+    per-request processing."""
+    _, _, tm, tp = _pair()
+    B, P, K = 3, 8, 4
+    prompts = jax.random.randint(jax.random.key(5), (B, P), 0, V)
+    cache = tm.make_cache(B, 64, attn_chunk=16)
+    pf = jax.jit(verification.make_prefill_step(tm, attn_chunk=16))
+    _, cache, prev = pf(tp, cache, prompts)
+    drafts = jax.random.randint(jax.random.key(6), (B, K), 0, V)
+    lengths = jnp.array([4, 2, 1], jnp.int32)
+    vs = jax.jit(verification.make_verify_step(tm, greedy=True, attn_chunk=16))
+    batch = verification.make_verify_batch(prev, drafts, lengths, seed=0)
+    res, _ = vs(tp, cache, batch)
+    # row-by-row with its own exact length must agree
+    for i in range(B):
+        c1 = tm.make_cache(1, 64, attn_chunk=16)
+        _, c1, prev1 = pf(tp, c1, prompts[i : i + 1])
+        b1 = verification.make_verify_batch(
+            prev1, drafts[i : i + 1], lengths[i : i + 1], seed=0)
+        r1, _ = vs(tp, c1, b1)
+        assert int(r1.n_accepted[0]) == int(res.n_accepted[i])
+        assert int(r1.extra_token[0]) == int(res.extra_token[i])
+
+
+def test_draft_round_confidence_thresholding():
+    dm, dp, _, _ = _pair()
+    B, P = 2, 8
+    prompts = jax.random.randint(jax.random.key(5), (B, P), 0, V)
+    cache = dm.make_cache(B, 64, attn_chunk=16)
+    pf = jax.jit(verification.make_prefill_step(dm, attn_chunk=16))
+    _, cache, prev = pf(dp, cache, prompts)
+    # impossible threshold -> every round drafts exactly 1 token
+    res = drafting.draft_round(dm, dp, cache, prev, jax.random.key(0),
+                               k_max=6, c_th=1.1, greedy=True, attn_chunk=16)
+    assert res.lengths.tolist() == [1, 1]
+    # zero threshold -> always drafts k_max
+    res = drafting.draft_round(dm, dp, cache, prev, jax.random.key(0),
+                               k_max=6, c_th=0.0, greedy=True, attn_chunk=16)
+    assert res.lengths.tolist() == [6, 6]
+
+
+def test_resume_after_verify_rollback_consistency():
+    """Device cache rollback: after a rejection, re-drafting from the
+    rolled-back cache matches a fresh cache built from the committed
+    prefix only."""
+    dm, dp, tm, tp = _pair()
+    B, P, K = 1, 8, 4
+    prompts = jax.random.randint(jax.random.key(5), (B, P), 0, V)
+    cache = dm.make_cache(B, 64, attn_chunk=16)
+    pf = jax.jit(verification.make_prefill_step(dm, attn_chunk=16))
+    _, cache, prev = pf(dp, cache, prompts)
+    res = drafting.draft_round(dm, dp, cache, prev, jax.random.key(0),
+                               k_max=K, greedy=True, attn_chunk=16)
+    # pretend the server accepted 2 drafts and corrected with token 7
+    n_acc = jnp.array([2], jnp.int32)
+    rolled = drafting.resume_after_verify(dm, res, n_acc)
+    corr = jnp.array([7], jnp.int32)
+    res2 = drafting.draft_round(dm, dp, rolled, corr, jax.random.key(1),
+                                k_max=K, greedy=True, attn_chunk=16)
+    # reference: fresh cache over [prompt, d1, d2], then feed the correction
+    seq = jnp.concatenate([prompts, res.tokens[:, :2], corr[:, None]], axis=1)
+    c2 = dm.make_cache(B, 64, attn_chunk=16)
+    _, c2, prev2 = pf(dp, c2, seq)
+    ref2 = drafting.draft_round(dm, dp, c2, prev2, jax.random.key(1),
+                                k_max=K, greedy=True, attn_chunk=16)
+    np.testing.assert_array_equal(np.asarray(res2.tokens), np.asarray(ref2.tokens))

@@ -1,0 +1,136 @@
+"""Training substrate: convergence, checkpoint/resume, compression, data."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import get_config
+from repro.models.model_zoo import build_model
+from repro.training.data import DataConfig, batch_at
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      compress_grads_int8, lr_schedule)
+from repro.training.train_step import TrainConfig, make_train_step
+
+
+def _setup(vocab=256):
+    cfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=vocab)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_loss_decreases():
+    cfg, model, params = _setup()
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=50),
+                       loss_chunk=8, attn_chunk=16)
+    step = jax.jit(make_train_step(model, tcfg))
+    opt = adamw_init(params)
+    err = None
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=33, global_batch=8)
+    losses = []
+    for s in range(25):
+        b = {k: jnp.asarray(v) for k, v in batch_at(dcfg, s).items()}
+        params, opt, err, m = step(params, opt, err, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=4 computes the same update as one big batch (same math,
+    different schedule) — within fp tolerance."""
+    cfg, model, params = _setup(vocab=64)
+    dcfg = DataConfig(vocab_size=64, seq_len=17, global_batch=8)
+    batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, 0).items()}
+    outs = {}
+    for accum in (1, 4):
+        tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), grad_accum=accum,
+                           loss_chunk=8, attn_chunk=16)
+        step = jax.jit(make_train_step(model, tcfg))
+        p2, _, _, m = step(params, adamw_init(params), None, batch)
+        outs[accum] = (p2, float(m["loss"]))
+    np.testing.assert_allclose(outs[1][1], outs[4][1], rtol=2e-2)
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=0.1, atol=5e-3)
+
+
+def test_checkpoint_resume_bitwise():
+    """Kill-and-resume training reproduces the exact same trajectory
+    (fault tolerance: restart-safety of data pipeline + optimizer state)."""
+    cfg, model, params = _setup(vocab=64)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), loss_chunk=8, attn_chunk=16)
+    step = jax.jit(make_train_step(model, tcfg))
+    dcfg = DataConfig(vocab_size=64, seq_len=17, global_batch=4)
+
+    def run(p, opt, s0, n):
+        err = None
+        for s in range(s0, s0 + n):
+            b = {k: jnp.asarray(v) for k, v in batch_at(dcfg, s).items()}
+            p, opt, err, m = step(p, opt, err, b)
+        return p, opt, float(m["loss"])
+
+    opt = adamw_init(params)
+    p_full, _, loss_full = run(params, opt, 0, 6)
+
+    with tempfile.TemporaryDirectory() as d:
+        p3, opt3, _ = run(params, adamw_init(params), 0, 3)
+        ckpt.save(d, 3, {"p": p3, "opt": opt3})
+        restored, _ = ckpt.restore(d, {"p": p3, "opt": opt3})
+        p_res, _, loss_res = run(restored["p"], restored["opt"], 3, 3)
+    assert loss_res == loss_full
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4):
+            ckpt.save(d, s, {"x": jnp.ones(3)}, keep_last=2)
+        assert ckpt.latest_step(d) == 4
+        assert ckpt.all_steps(d) == [3, 4]
+
+
+def test_async_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        t = ckpt.save(d, 7, {"x": jnp.arange(5)}, async_save=True)
+        t.join(10)
+        r, _ = ckpt.restore(d, {"x": jnp.zeros(5, jnp.int32)})
+        np.testing.assert_array_equal(np.asarray(r["x"]), np.arange(5))
+
+
+def test_grad_compression_error_feedback():
+    """int8 error feedback: the quantization error is carried, so the SUM of
+    compressed grads tracks the sum of true grads (convergence-preserving)."""
+    g = {"w": jnp.linspace(-1, 1, 128).reshape(8, 16)}
+    err = None
+    tot_true = jnp.zeros((8, 16))
+    tot_comp = jnp.zeros((8, 16))
+    for i in range(20):
+        gi = {"w": g["w"] * (1 + 0.1 * i)}
+        comp, err = compress_grads_int8(gi, err)
+        tot_true += gi["w"]
+        tot_comp += comp["w"]
+    # error feedback keeps the accumulated difference bounded by one step's
+    # quantization error (not 20x)
+    diff = float(jnp.abs(tot_true - tot_comp).max())
+    one_step_err = float(jnp.abs(g["w"]).max()) * 3 / 127
+    assert diff < one_step_err * 2
+
+
+def test_lr_schedule_shape():
+    c = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_schedule(c, jnp.array(0))) == 0.0
+    assert float(lr_schedule(c, jnp.array(10))) == 1.0
+    assert 0.09 < float(lr_schedule(c, jnp.array(100))) < 0.11
+
+
+def test_elastic_restore_different_structure_dtype():
+    """Restore casts into the target dtype (elastic/precision migration)."""
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"w": jnp.ones((4, 4), jnp.float32)})
+        tgt = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+        r, _ = ckpt.restore(d, tgt)
+        assert r["w"].dtype == jnp.bfloat16
