@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks.common import emit
-from repro.serving.cost_model import cost_per_1k_tokens, hourly_cost, sled_cost_per_1k
+from repro.serving.cost_model import cost_per_1k_tokens, sled_cost_per_1k
 from repro.serving.devices import A100_X4, RPI5
 from repro.serving.simulator import SimConfig, simulate
 

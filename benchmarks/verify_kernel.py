@@ -5,14 +5,22 @@ pure-XLA flash verification attention, walk its HLO with the trip-aware
 cost model, and compare bytes moved against the Pallas kernel's analytic
 minimum (stream KV exactly once + write O(Sq) output).  Correctness of the
 kernel itself is covered by tests/test_kernels.py (interpret-mode sweeps).
+
+``--engine`` compares the paged (slot-gather/scatter) verify step against
+the dense lock-step verify step the same way: both are lowered for matched
+shapes and their HLO byte totals quantify what continuous batching pays for
+arbitrary row-subset dispatch (the gather/scatter tax a paged attention
+kernel would eliminate — see ROADMAP).
 """
 from __future__ import annotations
+
+import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
-from repro.kernels import ops
+from benchmarks.common import emit
 from repro.models.layers import flash_attention
 from repro.roofline.hlo_cost import HloCostModel
 
@@ -50,5 +58,53 @@ def run(quick: bool = False) -> list:
     return rows
 
 
+def run_engine(quick: bool = False) -> list:
+    """Lower dense vs paged verify steps for matched bucket shapes and
+    compare trip-aware HLO bytes: the paged step's extra traffic is the
+    row gather/scatter that buys arbitrary-subset continuous batching."""
+    from repro.configs.base import get_config
+    from repro.core import verification
+    from repro.models.model_zoo import build_model
+
+    vocab = 128
+    cfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=vocab)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    n_slots, k_max, max_len = (4, 4, 64) if quick else (8, 4, 128)
+
+    rows = []
+    for bucket in ((2,) if quick else (2, 4, 8)):
+        pool = model.make_cache(n_slots + 1, max_len, attn_chunk=32)
+        dense_cache = model.make_cache(bucket, max_len, attn_chunk=32)
+        batch = verification.verify_batch_spec(bucket, k_max)
+        batch = {k: jnp.zeros(v.shape, v.dtype) for k, v in batch.items()}
+        slots = jnp.arange(bucket, dtype=jnp.int32)
+
+        dense = verification.make_verify_step(model, greedy=True, attn_chunk=32)
+        paged = verification.make_paged_verify_step(
+            model, scratch_slot=n_slots, greedy=True, attn_chunk=32
+        )
+        dense_hlo = jax.jit(dense).lower(params, dense_cache, batch).compile().as_text()
+        paged_hlo = (
+            jax.jit(paged).lower(params, pool, slots, batch).compile().as_text()
+        )
+        d_bytes = HloCostModel(dense_hlo).totals()["bytes"]
+        p_bytes = HloCostModel(paged_hlo).totals()["bytes"]
+        rows.append({
+            "bucket": bucket,
+            "pool_slots": n_slots,
+            "dense_bytes_mb": round(d_bytes / 1e6, 2),
+            "paged_bytes_mb": round(p_bytes / 1e6, 2),
+            "paging_tax": round(p_bytes / max(d_bytes, 1), 2),
+        })
+    emit(rows, "engine_verify_step")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", action="store_true",
+                    help="compare paged vs dense verify-step HLO traffic")
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    (run_engine if a.engine else run)(quick=a.quick)

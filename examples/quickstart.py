@@ -10,7 +10,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.engine_loop import autoregressive_generate, sled_generate

@@ -1,0 +1,39 @@
+"""Version portability shims for the narrow band of jax APIs we use.
+
+The repo targets the modern public API (``jax.shard_map``, ``jax.set_mesh``),
+but CI and edge boxes pin older jax (0.4.x) where those live under
+``jax.experimental.shard_map`` / don't exist.  Everything else we call is
+stable across the supported range, so the shim surface stays tiny: import
+``shard_map`` / ``use_mesh`` from here instead of ``jax``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` with fallback to the 0.4.x experimental entry point.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); both default
+    off because our collectives intentionally produce per-shard values.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def use_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager activating ``mesh``: ``jax.set_mesh`` when available,
+    else the legacy resource-env behaviour of ``with mesh:`` (jax 0.4.x)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -6,9 +6,8 @@ cells (train_4k / prefill_32k / decode_32k / long_500k).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, List, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration

@@ -19,7 +19,7 @@ Rollback protocol (device side, mirrors core/verification.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ correctness — e.g. greedy SLED output must equal greedy target-only output.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.core import drafting, verification
 from repro.core.speculative import PAD_TOKEN
-from repro.models.layers import NO_MESH
 
 
 @dataclasses.dataclass

@@ -15,14 +15,13 @@ SLED's entire server-side hot loop.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.speculative import VerifyResult, speculative_verify
+from repro.models.kvcache import gather_slots, scatter_slots
 from repro.models.layers import MeshContext, NO_MESH
 
 
@@ -83,6 +82,56 @@ def make_verify_step(
         )
         new_cache = model.commit(ck_cache, res.n_commit)
         return res, new_cache
+
+    return verify_step
+
+
+def make_paged_verify_step(
+    model,
+    *,
+    scratch_slot: int,
+    ctx: MeshContext = NO_MESH,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    attn_chunk: int = 1024,
+):
+    """Slot-indexed verify step for continuous batching over a row pool.
+
+    Returns ``verify_step(params, pool, slots, batch) -> (VerifyResult, pool')``
+    where ``pool`` is a PagedKVCache.cache pytree, ``slots`` is (B_bucket,)
+    int32 pool-row indices, and ``batch`` is a padded verify request of the
+    same bucket size.  Rows are gathered into a dense sub-cache, verified by
+    the model's ordinary decode_forward/commit path, and scattered back —
+    the jitted shapes depend only on (bucket, k_max), never on which devices
+    happen to be scheduled, so heterogeneous partial fills reuse one
+    executable per bucket.
+
+    Padding convention: unused entries point at ``scratch_slot`` with
+    ``lengths = 0``; the step resets the scratch row's committed length so
+    repeated padding can never walk scratch state off the end of the buffer.
+    """
+
+    def verify_step(params, pool, slots, batch) -> Tuple[VerifyResult, Any]:
+        sub = gather_slots(pool, slots)
+        h, ck_sub, _ = model.decode_forward(
+            params, sub, batch["tokens_in"], ctx, attn_chunk=attn_chunk
+        )
+        logits = model.lm_head(params, h)  # (B_bucket, K+1, V) fp32
+        key = jax.random.key(batch["seed"])
+        res = speculative_verify(
+            batch["draft_tokens"],
+            logits,
+            key,
+            lengths=batch["lengths"],
+            draft_q=batch.get("draft_q"),
+            draft_q_full=batch.get("draft_q_full"),
+            temperature=temperature,
+            greedy=greedy,
+        )
+        new_sub = model.commit(ck_sub, res.n_commit)
+        new_pool = scatter_slots(pool, slots, new_sub)
+        new_pool["length"] = new_pool["length"].at[scratch_slot].set(0)
+        return res, new_pool
 
     return verify_step
 

@@ -20,12 +20,13 @@ sequence range — new rows may straddle a shard boundary.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.models.layers import MeshContext, flash_attention
 
@@ -87,7 +88,7 @@ def sp_append_attend(
             l_g.astype(jnp.float32), 1e-30)[..., None]  # (B, Sq, Hkv, G, D)
         return out.reshape(q.shape[0], Sq, Hq, D).astype(q.dtype), kc, vc
 
-    out, kc, vc = jax.shard_map(
+    out, kc, vc = shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(

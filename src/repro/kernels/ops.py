@@ -4,13 +4,11 @@ shapes/dtypes in interpret mode."""
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.ssd_scan import ssd_scan_chunked
 from repro.kernels.verify_attn import verify_attention_packed
 

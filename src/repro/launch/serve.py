@@ -1,43 +1,38 @@
-"""SLED server launcher: real models + batch planner, single-host demo of
-the deployment path (the production mesh path is exercised by dryrun.py).
+"""SLED server launcher on the continuous-batching engine (single-host demo
+of the deployment path; the production mesh path is exercised by dryrun.py).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --requests 6
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --devices 6
 
-Runs the server loop: requests (prompt + device draft stream) arrive, the
-BatchPlanner forms padded verification batches, the jitted verify_step
-commits tokens, timeouts evict stragglers.  Uses reduced configs on CPU;
---arch selects which assigned architecture plays the target.
+Real models end-to-end: edge devices (batch-1 draft loops) join at staggered
+times, draft at heterogeneous lengths, and stream verification requests into
+a ServerEngine whose BatchPlanner policy (default ``continuous``) dispatches
+whatever subset is queued — so batches are PARTIAL by construction, slots
+free as devices finish, and waiting devices are admitted mid-stream.  With
+``--check`` (default) the committed greedy tokens are verified token-for-
+token against the lock-step reference loop (engine_loop.sled_generate):
+continuous batching must not change outputs, only scheduling.
 """
+
 import argparse
 import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import drafting, verification
-from repro.core.scheduler import BatchPlanner, VerifyRequest
-from repro.models.model_zoo import build_model, frontend_stub
+from repro.core.engine_loop import sled_generate
+from repro.core.server_engine import EdgeDeviceKit, ServerEngine
+from repro.models.model_zoo import build_model
 from repro.quant.quantize import dequantize_pytree, quantize_pytree
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", type=str, default="qwen2-1.5b")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--k-max", type=int, default=4)
-    ap.add_argument("--c-th", type=float, default=0.3)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--batch", type=int, default=3)
-    ap.add_argument("--bits", type=int, default=16, choices=(4, 8, 16))
-    args = ap.parse_args()
-
+def serve(args) -> dict:
     vocab = 256
     tcfg = dataclasses.replace(get_config(args.arch).reduced(), vocab_size=vocab)
-    dcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(),
-                               name="edge-draft", vocab_size=vocab, num_layers=1)
+    dcfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(), name="edge-draft", vocab_size=vocab, num_layers=1
+    )
     target = build_model(tcfg)
     draft = build_model(dcfg)
     kw = {"max_pos": 256} if not tcfg.use_rope else {}
@@ -47,56 +42,103 @@ def main() -> None:
         print(f"serving int{args.bits} weight-only quantized target")
     dp = draft.init_params(jax.random.key(1))
 
-    B = args.requests
-    prompts = jax.random.randint(jax.random.key(2), (B, 12), 0, vocab)
-    ckw = {"enc_len": tcfg.encoder_seq} if tcfg.family == "encdec" else {}
-    t_cache = target.make_cache(B, 128, attn_chunk=32, **ckw)
-    d_cache = draft.make_cache(B, 128, attn_chunk=32)
-    pkw = {}
-    if tcfg.family in ("encdec", "vlm"):
-        stub = frontend_stub(tcfg, B)
-        pkw["enc_frames" if tcfg.family == "encdec" else "embeds_prefix"] = stub
-    t_pf = jax.jit(verification.make_prefill_step(
-        target, attn_chunk=32, with_frontend=bool(pkw)))
-    d_pf = jax.jit(verification.make_prefill_step(draft, attn_chunk=32))
-    verify = jax.jit(verification.make_verify_step(target, greedy=True, attn_chunk=32))
+    N, max_len = args.devices, 128
+    prompts = jax.random.randint(jax.random.key(2), (N, 12), 0, vocab)
+    engine = ServerEngine(
+        target,
+        tp,
+        n_slots=args.slots or N,
+        max_len=max_len,
+        k_max=args.k_max,
+        policy=args.policy,
+        max_wait=args.max_wait,
+        attn_chunk=32,
+    )
+    kit = EdgeDeviceKit(draft, dp, k_max=args.k_max, c_th=args.c_th, greedy=True, attn_chunk=32)
 
-    _, t_cache, prev = t_pf(tp, t_cache, prompts, *(pkw.values() or []))
-    _, d_cache, _ = d_pf(dp, d_cache, prompts)
-
-    # the demo's target cache is row-per-device, so each round verifies the
-    # full device set (row-subset batches need paged caches — the simulator
-    # models partial fills; see serving/simulator.py)
-    planner = BatchPlanner(batch_size=B, k_max=args.k_max,
-                           policy="deadline", max_wait=0.0)
-    committed = np.zeros(B, np.int64)
-    rounds = 0
+    # staggered joins: device i shows up i * stagger rounds into the run, so
+    # early rounds verify a strict subset and late rounds drain the tail
+    join_at = {i: i * args.stagger for i in range(N)}
+    devices, outputs, waiting = {}, {}, set(range(N))
     t0 = time.time()
-    while committed.min() < args.max_new:
-        dres = drafting.draft_round(draft, dp, d_cache, prev, jax.random.key(rounds),
-                                    k_max=args.k_max, c_th=args.c_th,
-                                    greedy=True, attn_chunk=32)
-        # requests enter the planner (device -> server hop)
-        for i in range(B):
-            planner.add(VerifyRequest(
-                device_id=i, arrival=time.time() - t0, prev_token=int(prev[i]),
-                draft_tokens=np.asarray(dres.tokens[i, : int(dres.lengths[i])]),
-                request_id=rounds * B + i))
-        batch = planner.next_batch(time.time() - t0, server_idle=True)
-        assert batch is not None
-        prev_np, toks, _, lens = batch.padded_arrays()
-        vb = verification.make_verify_batch(
-            jnp.asarray(prev_np), jnp.asarray(toks), jnp.asarray(lens), seed=rounds)
-        res, t_cache = verify(tp, t_cache, vb)
-        d_cache = drafting.resume_after_verify(draft, dres, res.n_accepted)
-        prev = res.extra_token
-        committed += np.asarray(res.n_commit)
+    tick, rounds = 0, 0
+    min_fill, max_fill = N, 0
+    while len(outputs) < N:
+        tick += 1
+        now = time.time() - t0
+        for i in sorted(waiting):
+            if join_at[i] > tick:
+                continue
+            if engine.admit(i, prompts[i], now) is None:
+                break  # pool full: stays waiting, admitted when a slot frees
+            devices[i] = kit.spawn(i, prompts[i], max_len=max_len, seed=1000 + i)
+            waiting.discard(i)
+        for i, dev in devices.items():
+            if not dev.awaiting:
+                engine.submit(i, dev.draft(), time.time() - t0)
+        verdicts = engine.step(time.time() - t0)
+        if verdicts is None:
+            continue
         rounds += 1
-        print(f"round {rounds:3d}: batch {batch.size} "
-              f"acc {np.asarray(res.n_accepted).tolist()} committed {committed.tolist()}")
-    dt = time.time() - t0
-    print(f"served {committed.sum()} tokens across {B} devices in {rounds} rounds "
-          f"({committed.sum()/dt:.1f} tok/s on CPU)")
+        min_fill = min(min_fill, len(verdicts))
+        max_fill = max(max_fill, len(verdicts))
+        for v in verdicts:
+            dev = devices[v.device_id]
+            dev.on_verdict(v)
+            if len(dev.committed) >= args.max_new:
+                outputs[v.device_id] = dev.committed[: args.max_new]
+                engine.retire(v.device_id)
+                del devices[v.device_id]
+        if rounds % 5 == 0 or len(verdicts) < N:
+            print(
+                f"round {rounds:3d}: batch {len(verdicts)}/{N} "
+                f"queue {engine.queue_depth} active {len(devices)} "
+                f"done {len(outputs)}"
+            )
+
+    now = time.time() - t0
+    stats = engine.stats(now)
+    print(
+        f"served {stats.streams_served} streams, "
+        f"{sum(len(o) for o in outputs.values())} tokens in {stats.rounds} rounds "
+        f"({stats.wstgr:.1f} tok/s on CPU) — mean batch fill "
+        f"{stats.mean_batch_fill:.2f}/{N}, {stats.partial_rounds} partial rounds, "
+        f"fill range [{min_fill}, {max_fill}]"
+    )
+    if args.policy == "continuous" and N > 1:
+        # deadline/static deliberately wait for fill; only the continuous
+        # policy must dispatch whatever subset is queued
+        assert min_fill < N, "staggered arrivals should produce a partial batch"
+
+    if args.check:
+        ref, _, _ = sled_generate(
+            draft, dp, target, tp, prompts,
+            max_new=args.max_new, k_max=args.k_max, c_th=args.c_th, greedy=True,
+        )
+        eng = np.array([outputs[i] for i in range(N)])
+        match = np.array_equal(eng, np.asarray(ref))
+        print(f"greedy lock-step reference match: {'OK' if match else 'MISMATCH'}")
+        assert match, "continuous-batching engine must be output-identical to sled_generate"
+    return stats.as_dict()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="qwen2-1.5b")
+    ap.add_argument("--devices", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=0, help="cache pool rows (0: = devices)")
+    ap.add_argument("--k-max", type=int, default=4)
+    ap.add_argument("--c-th", type=float, default=0.3)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--policy", choices=("continuous", "deadline", "static"),
+                    default="continuous")
+    ap.add_argument("--max-wait", type=float, default=0.05)
+    ap.add_argument("--stagger", type=int, default=3,
+                    help="device i joins i*stagger scheduler ticks into the run")
+    ap.add_argument("--bits", type=int, default=16, choices=(4, 8, 16))
+    ap.add_argument("--check", action=argparse.BooleanOptionalAction, default=True,
+                    help="verify engine output equals the lock-step reference")
+    serve(ap.parse_args())
 
 
 if __name__ == "__main__":

@@ -15,7 +15,6 @@ with compute (documented here because the CPU container can't measure them).
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp

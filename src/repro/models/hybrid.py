@@ -9,7 +9,7 @@ the shared-attention caches roll back via ``length`` like any KV cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

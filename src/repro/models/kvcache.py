@@ -10,7 +10,7 @@ per-position state checkpoints during verification instead (see mamba2.py).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -43,3 +43,126 @@ def kv_cache_spec(num_layers, batch, max_len, num_kv_heads, head_dim, dtype=jnp.
 def rollback(cache: Dict[str, jax.Array], new_length: jax.Array) -> Dict[str, jax.Array]:
     """O(1) rollback: commit only ``new_length`` entries per row."""
     return {**cache, "length": new_length.astype(jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Paged (slot-pool) cache: continuous batching over a fixed row pool
+# ---------------------------------------------------------------------------
+#
+# Every cache family in this repo shares one layout convention: ``length`` is
+# (B,) and every other leaf carries the batch on axis 1 (k/v: (L, B, S, H, D),
+# ssm: (L, B, H, P, N), conv: (L, B, cw-1, C), cross_k/v: (L, B, F, H, D)).
+# That makes "a device's cache" a fixed set of rows, so continuous batching
+# reduces to a slot allocator over a pool of rows plus gather/scatter of the
+# scheduled subset into a dense verify batch.  A production kernel would
+# index slots inside the attention kernel instead of materialising the
+# gather (ROADMAP); here the gathered sub-batch is what the jitted verify
+# step sees, so compiled shapes depend only on the bucket size — devices can
+# join, leave, or idle without recompiles.
+
+
+def _batch_axis(leaf: jax.Array) -> int:
+    return 0 if leaf.ndim == 1 else 1  # "length" vs stacked per-layer leaves
+
+
+def gather_slots(cache: Dict[str, jax.Array], slots: jax.Array) -> Dict[str, jax.Array]:
+    """Dense sub-cache holding pool rows ``slots`` (jit-traceable)."""
+    return jax.tree.map(lambda a: jnp.take(a, slots, axis=_batch_axis(a)), cache)
+
+
+def scatter_slots(
+    pool: Dict[str, jax.Array], slots: jax.Array, sub: Dict[str, jax.Array]
+) -> Dict[str, jax.Array]:
+    """Write dense sub-cache rows back into pool rows ``slots``.
+
+    Duplicate slot ids are allowed (the verify step pads partial batches with
+    the scratch slot); which duplicate wins is undefined, which is fine
+    because scratch contents are never read as committed state.
+    """
+
+    def put(p, s):
+        if p.ndim == 1:
+            return p.at[slots].set(s)
+        return p.at[:, slots].set(s)
+
+    return jax.tree.map(put, pool, sub)
+
+
+class SlotExhausted(RuntimeError):
+    """No free cache row: admission must wait for a stream to retire."""
+
+
+class SlotAllocator:
+    """Host-side free-list over ``n_slots`` cache rows (LIFO reuse)."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._used: set = set()
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise SlotExhausted(f"all {self.n_slots} cache slots in use")
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+
+class PagedKVCache:
+    """Fixed pool of cache rows + slot map: the server-side state behind
+    continuous-batching verification.
+
+    The pool holds ``n_slots`` device rows plus ONE scratch row (index
+    ``n_slots``) that jitted steps use to pad partial batches up to a bucket
+    size — padding rows gather scratch, compute garbage, and scatter it back
+    to scratch, so real rows are untouched by fill.
+
+    Works for every model family because it only relies on the shared cache
+    layout convention (see module comment); rollback semantics stay the
+    model's own (``model.commit`` runs on the gathered dense sub-cache).
+    """
+
+    def __init__(self, model: Any, n_slots: int, max_len: int, **cache_kw):
+        self.model = model
+        self.n_slots = n_slots
+        self.scratch_slot = n_slots
+        self.max_len = max_len
+        self.cache_kw = dict(cache_kw)
+        self.cache = model.make_cache(n_slots + 1, max_len, **cache_kw)
+        self.allocator = SlotAllocator(n_slots)
+
+    def alloc(self) -> int:
+        return self.allocator.alloc()
+
+    def free(self, slot: int) -> None:
+        self.allocator.free(slot)
+
+    @property
+    def n_free(self) -> int:
+        return self.allocator.n_free
+
+    def make_row_cache(self) -> Dict[str, jax.Array]:
+        """Fresh dense batch-1 cache shaped to scatter into one pool row
+        (prefill target: same max_len, so trailing dims line up)."""
+        return self.model.make_cache(1, self.max_len, **self.cache_kw)
+
+    def write_slot(self, slot: int, row_cache: Dict[str, jax.Array]) -> None:
+        """Install a prefilled batch-1 cache into pool row ``slot``."""
+        self.cache = scatter_slots(self.cache, jnp.asarray([slot], jnp.int32), row_cache)
+
+    def lengths(self) -> jax.Array:
+        return self.cache["length"][: self.n_slots]

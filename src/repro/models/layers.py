@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 Params = Dict[str, Any]
 
 NEG_INF = -1e30  # large-negative instead of -inf: keeps fully-masked rows NaN-free
@@ -155,7 +157,7 @@ def embed_lookup(embed: jax.Array, tokens: jax.Array, ctx: "MeshContext") -> jax
         rows = jnp.where(ok[..., None], rows, jnp.zeros((), rows.dtype))
         return jax.lax.psum(rows, ax)
 
-    return jax.shard_map(
+    return shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(P(ax, None), P(bspec, None)),
@@ -598,7 +600,7 @@ def moe_block(x: jax.Array, p: Params, cfg, ctx: MeshContext) -> Tuple[jax.Array
         aux = jax.lax.psum(aux, ax)
         return out.reshape(tb, S, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         shard_fn,
         mesh=ctx.mesh,
         in_specs=(P(ctx.batch_axes if ctx.batch_axes else None, None, None), w_specs),

@@ -16,7 +16,7 @@ assignment ("the modality frontend is a STUB").
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.models import hybrid as HY
 from repro.models import mamba2 as M2
 from repro.models import transformer as T
-from repro.models.layers import MeshContext, NO_MESH
+from repro.models.layers import NO_MESH
 
 
 @dataclasses.dataclass(frozen=True)

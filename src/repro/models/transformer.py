@@ -8,7 +8,6 @@ prefill (S = prompt length, cache_len = 0) and SLED verification
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -10,7 +10,6 @@ quantized along their last axis; norms/biases/scalars stay fp.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

@@ -14,12 +14,9 @@ by the collective's algorithmic byte multiplier on a ring.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-import numpy as np
 
 # TPU v5e hardware constants (assignment-provided)
 PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip

@@ -14,7 +14,7 @@ also be taken directly from the dry-run roofline (benchmarks wire that up).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

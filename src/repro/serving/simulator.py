@@ -24,13 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
 import random
-from collections import deque
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.core.scheduler import BatchPlanner, VerifyRequest
-from repro.serving.devices import DeviceProfile, ServerProfile
+from repro.serving.devices import ServerProfile
 
 
 @dataclasses.dataclass

@@ -22,7 +22,6 @@ import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.layers import MeshContext

@@ -12,14 +12,12 @@ cross-entropy actually decreases during the example training runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model_zoo import frontend_stub
-from repro.training.train_step import IGNORE
 
 
 @dataclasses.dataclass(frozen=True)

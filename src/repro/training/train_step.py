@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ import pytest
 
 from repro.configs.base import SHAPES, get_config, list_configs, shape_applicable
 from repro.models.model_zoo import build_model, frontend_stub
-from repro.training.data import DataConfig, batch_at
 from repro.training.optimizer import AdamWConfig, adamw_init
 from repro.training.train_step import TrainConfig, make_train_step
 

@@ -3,7 +3,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.models.model_zoo import build_model

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.scheduler import BatchPlanner, VerifyRequest

@@ -1,0 +1,239 @@
+"""Paged KV cache + continuous-batching engine (core/server_engine.py).
+
+The load-bearing test is equivalence: greedy committed tokens from the
+engine under PARTIAL batches (staggered joins, heterogeneous draft lengths,
+mid-stream retirement) must equal the lock-step reference loop token-for-
+token — continuous batching may change scheduling, never outputs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import verification
+from repro.core.engine_loop import sled_generate
+from repro.core.server_engine import EdgeDeviceKit, ServerEngine
+from repro.models.kvcache import (
+    SlotAllocator,
+    SlotExhausted,
+    gather_slots,
+    init_kv_cache,
+    scatter_slots,
+)
+from repro.models.model_zoo import build_model
+
+V = 128
+
+
+def _models():
+    dcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=V)
+    tcfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(), name="tgt", vocab_size=V, num_layers=3
+    )
+    dm, tm = build_model(dcfg), build_model(tcfg)
+    return dm, dm.init_params(jax.random.key(1)), tm, tm.init_params(jax.random.key(2))
+
+
+# ---------------------------------------------------------------------------
+# Slot allocator
+# ---------------------------------------------------------------------------
+
+
+def test_slot_allocator_alloc_free_reuse():
+    a = SlotAllocator(3)
+    s0, s1, s2 = a.alloc(), a.alloc(), a.alloc()
+    assert sorted([s0, s1, s2]) == [0, 1, 2]
+    assert a.n_free == 0 and a.n_used == 3
+    a.free(s1)
+    assert a.n_free == 1
+    assert a.alloc() == s1  # LIFO reuse
+    a.free(s0)
+    a.free(s2)
+    assert a.n_used == 1 and a.n_free == 2
+
+
+def test_slot_allocator_exhaustion_and_double_free():
+    a = SlotAllocator(1)
+    s = a.alloc()
+    with pytest.raises(SlotExhausted):
+        a.alloc()
+    a.free(s)
+    with pytest.raises(ValueError):
+        a.free(s)
+    assert a.alloc() == s
+
+
+# ---------------------------------------------------------------------------
+# Gather/scatter over the pool
+# ---------------------------------------------------------------------------
+
+
+def test_gather_scatter_roundtrip():
+    pool = init_kv_cache(num_layers=2, batch=5, max_len=8, num_kv_heads=2, head_dim=4)
+    key = jax.random.key(0)
+    pool["k"] = jax.random.normal(key, pool["k"].shape, pool["k"].dtype)
+    pool["length"] = jnp.arange(5, dtype=jnp.int32)
+    slots = jnp.asarray([3, 0], jnp.int32)
+    sub = gather_slots(pool, slots)
+    assert sub["k"].shape == (2, 2, 8, 2, 4)
+    np.testing.assert_array_equal(np.asarray(sub["length"]), [3, 0])
+    np.testing.assert_array_equal(np.asarray(sub["k"][:, 0]), np.asarray(pool["k"][:, 3]))
+
+    sub["length"] = sub["length"] + 7
+    sub["k"] = sub["k"] + 1.0
+    back = scatter_slots(pool, slots, sub)
+    np.testing.assert_array_equal(np.asarray(back["length"]), [7, 1, 2, 10, 4])
+    np.testing.assert_array_equal(np.asarray(back["k"][:, 3]), np.asarray(sub["k"][:, 0]))
+    # untouched rows stay bit-identical
+    np.testing.assert_array_equal(np.asarray(back["k"][:, 1]), np.asarray(pool["k"][:, 1]))
+
+
+def test_paged_verify_subset_matches_dense(rng):
+    """One verify round on a gathered row subset == the dense verify step on
+    those same rows (the per-row math must not see the pool)."""
+    _, _, tm, tp = _models()
+    B, P, k_max = 3, 10, 4
+    prompts = jax.random.randint(jax.random.key(3), (B, P), 0, V)
+
+    dense_cache = tm.make_cache(B, 64, attn_chunk=32)
+    prefill = jax.jit(verification.make_prefill_step(tm, attn_chunk=32))
+    _, dense_cache, prev = prefill(tp, dense_cache, prompts)
+
+    pool = tm.make_cache(B + 2, 64, attn_chunk=32)  # B rows + spare + scratch
+    slots_all = jnp.arange(B, dtype=jnp.int32)
+    pool = scatter_slots(pool, slots_all, dense_cache)
+
+    drafts = jax.random.randint(jax.random.key(4), (B, k_max), 0, V)
+    lengths = jnp.asarray([4, 2, 3], jnp.int32)
+    sub_ids = [2, 0]  # verify a strict subset, out of order
+    batch_sub = verification.make_verify_batch(
+        prev[jnp.asarray(sub_ids)], drafts[jnp.asarray(sub_ids)], lengths[jnp.asarray(sub_ids)]
+    )
+    paged = verification.make_paged_verify_step(tm, scratch_slot=B + 1, attn_chunk=32)
+    res_p, pool2 = jax.jit(paged)(tp, pool, jnp.asarray(sub_ids, jnp.int32), batch_sub)
+
+    dense = verification.make_verify_step(tm, greedy=True, attn_chunk=32)
+    batch_all = verification.make_verify_batch(prev, drafts, lengths)
+    res_d, dense2 = jax.jit(dense)(tp, dense_cache, batch_all)
+
+    for i, row in enumerate(sub_ids):
+        assert int(res_p.n_accepted[i]) == int(res_d.n_accepted[row])
+        np.testing.assert_array_equal(
+            np.asarray(res_p.out_tokens[i]), np.asarray(res_d.out_tokens[row])
+        )
+        assert int(pool2["length"][row]) == int(dense2["length"][row])
+    # rows not in the subset are untouched
+    assert int(pool2["length"][1]) == int(dense_cache["length"][1])
+    np.testing.assert_array_equal(np.asarray(pool2["k"][:, 1]), np.asarray(pool["k"][:, 1]))
+    assert int(pool2["length"][B + 1]) == 0  # scratch row reset
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_engine_admission_exhaustion_and_readmit():
+    _, _, tm, tp = _models()
+    engine = ServerEngine(tm, tp, n_slots=1, max_len=64, k_max=4, attn_chunk=32)
+    prompt = jnp.zeros((8,), jnp.int32)
+    assert engine.admit(0, prompt, 0.0) is not None
+    assert engine.admit(1, prompt, 0.0) is None  # pool full -> wait
+    engine.retire(0)
+    st = engine.admit(1, prompt, 1.0)
+    assert st is not None and st.slot == 0  # freed slot is reused
+    assert engine.pool.n_free == 0
+
+
+def test_engine_rejects_second_inflight_request():
+    """Two queued requests from one device would scatter the same cache row
+    twice (undefined winner) — the engine must refuse the second."""
+    _, _, tm, tp = _models()
+    engine = ServerEngine(tm, tp, n_slots=2, max_len=64, k_max=4, attn_chunk=32)
+    engine.admit(0, jnp.zeros((8,), jnp.int32), 0.0)
+    engine.submit(0, np.asarray([1, 2], np.int32), 0.0)
+    with pytest.raises(ValueError, match="in flight"):
+        engine.submit(0, np.asarray([3], np.int32), 0.1)
+    engine.step(0.2)  # verdict delivered -> a new request is fine again
+    engine.submit(0, np.asarray([3], np.int32), 0.3)
+
+
+def test_engine_static_policy_drains_after_retirement():
+    """Static batching caps its fill target at the active stream count so
+    the last streams can finish after others retire (closed-loop cap)."""
+    dm, dp, tm, tp = _models()
+    B, max_new = 2, 6
+    prompts = jax.random.randint(jax.random.key(5), (B, 10), 0, V)
+    engine = ServerEngine(
+        tm, tp, n_slots=B, max_len=128, k_max=4, policy="static", attn_chunk=32
+    )
+    kit = EdgeDeviceKit(dm, dp, k_max=4, c_th=0.3, greedy=True, attn_chunk=32)
+    devices = {
+        i: kit.spawn(i, prompts[i], max_len=128, seed=i) for i in range(B)
+    }
+    for i in range(B):
+        engine.admit(i, prompts[i], 0.0)
+    outputs, now = {}, 0.0
+    for _ in range(200):
+        if len(outputs) >= B:
+            break
+        now += 1.0
+        for i, dev in devices.items():
+            if i not in outputs and not dev.awaiting:
+                engine.submit(i, dev.draft(), now)
+        for v in engine.step(now) or []:
+            devices[v.device_id].on_verdict(v)
+            if len(devices[v.device_id].committed) >= max_new:
+                outputs[v.device_id] = devices[v.device_id].committed[:max_new]
+                engine.retire(v.device_id)
+    assert len(outputs) == B, "static policy deadlocked after first retirement"
+
+
+def test_engine_partial_batches_match_lockstep_reference():
+    """Staggered joins + continuous policy: every round verifies whichever
+    subset is queued, devices retire mid-stream, and the greedy output still
+    equals sled_generate exactly."""
+    dm, dp, tm, tp = _models()
+    B, max_new, k_max = 3, 12, 4
+    prompts = jax.random.randint(jax.random.key(3), (B, 12), 0, V)
+
+    engine = ServerEngine(
+        tm, tp, n_slots=B, max_len=128, k_max=k_max, policy="continuous", attn_chunk=32
+    )
+    kit = EdgeDeviceKit(dm, dp, k_max=k_max, c_th=0.3, greedy=True, attn_chunk=32)
+    devices, outputs, fills = {}, {}, []
+    now = 0.0
+    while len(outputs) < B:
+        now += 1.0
+        for i in range(B):
+            if i not in devices and i not in outputs and i * 2 < now:
+                assert engine.admit(i, prompts[i], now) is not None
+                devices[i] = kit.spawn(i, prompts[i], max_len=128, seed=100 + i)
+        for i, dev in devices.items():
+            if not dev.awaiting:
+                engine.submit(i, dev.draft(), now)
+        verdicts = engine.step(now)
+        if verdicts is None:
+            continue
+        fills.append(len(verdicts))
+        for v in verdicts:
+            devices[v.device_id].on_verdict(v)
+            if len(devices[v.device_id].committed) >= max_new:
+                outputs[v.device_id] = devices[v.device_id].committed[:max_new]
+                engine.retire(v.device_id)
+                del devices[v.device_id]
+
+    assert min(fills) < B, "staggered arrivals must produce partial batches"
+    stats = engine.stats(now)
+    assert stats.partial_rounds > 0 and stats.streams_served == B
+    assert stats.rounds == len(fills)
+
+    ref, _, _ = sled_generate(
+        dm, dp, tm, tp, prompts, max_new=max_new, k_max=k_max, c_th=0.3, greedy=True
+    )
+    eng = np.array([outputs[i] for i in range(B)])
+    np.testing.assert_array_equal(eng, np.asarray(ref))

@@ -2,10 +2,9 @@
 import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.core.scheduler import BatchPlanner, VerifyRequest
-from repro.serving.devices import A100_X4, RPI5, V5E_16
+from repro.serving.devices import A100_X4, V5E_16
 from repro.serving.simulator import SimConfig, capacity, simulate
 
 

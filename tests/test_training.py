@@ -10,7 +10,7 @@ from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import get_config
 from repro.models.model_zoo import build_model
 from repro.training.data import DataConfig, batch_at
-from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+from repro.training.optimizer import (AdamWConfig, adamw_init, 
                                       compress_grads_int8, lr_schedule)
 from repro.training.train_step import TrainConfig, make_train_step
 
