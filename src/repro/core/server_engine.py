@@ -69,7 +69,12 @@ class RoundStats:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Aggregate serving stats; field names mirror simulator.SimResult."""
+    """Aggregate serving stats; field names mirror simulator.SimResult.
+
+    The wire fields (bytes/frames both directions, drops) are zero for the
+    in-process driver and filled in by transport.server.TransportServer from
+    its link stats, so benchmarks emit one uniform record either way.
+    """
 
     wstgr: float
     per_device_rate: float
@@ -82,6 +87,15 @@ class EngineStats:
     server_rounds_per_s: float
     partial_rounds: int = 0
     streams_served: int = 0
+    acceptance_rate: float = 0.0
+    mean_queue_depth: float = 0.0
+    # wire stats (transport runtime only)
+    bytes_tx: int = 0
+    bytes_rx: int = 0
+    frames_tx: int = 0
+    frames_rx: int = 0
+    frames_dropped: int = 0
+    fallback_rounds: int = 0
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -159,6 +173,9 @@ class ServerEngine:
         self._prefill = jax.jit(
             verification.make_prefill_step(model, ctx=ctx, attn_chunk=attn_chunk)
         )
+        self._extend = jax.jit(
+            verification.make_force_extend_step(model, ctx=ctx, attn_chunk=attn_chunk)
+        )
         self.streams: Dict[int, DeviceStream] = {}
         self.round_log: List[RoundStats] = []
         self._inflight: set = set()  # device_ids with a queued request
@@ -171,6 +188,10 @@ class ServerEngine:
         self._streams_served = 0
         self._busy_seconds = 0.0
         self._latencies: List[float] = []
+        self._drafted = 0
+        self._accepted = 0
+        self._fallback_tokens = 0
+        self._fallback_rounds = 0
 
     # -- admission -----------------------------------------------------------
 
@@ -223,6 +244,11 @@ class ServerEngine:
             raise ValueError(f"device {device_id} already has a request in flight")
         if not self.greedy and draft_q is None:
             raise ValueError("sampling mode needs per-request draft_q")
+        if self.greedy:
+            # greedy verification ignores q — and feeding it anyway would
+            # change the jitted verify batch's pytree structure and recompile
+            # every bucket behind warmup()'s back
+            draft_q = None
         self.planner.add(
             VerifyRequest(
                 device_id=device_id,
@@ -236,6 +262,54 @@ class ServerEngine:
         self._inflight.add(device_id)
         self._req_id += 1
 
+    def cancel_request(self, device_id: int) -> bool:
+        """Withdraw the device's queued request (transport fallback protocol:
+        the device timed out and released its drafts locally).  Returns False
+        when nothing is queued — i.e. the request was already verified and a
+        verdict is on its way, which the caller must treat as authoritative."""
+        if device_id not in self._inflight:
+            return False
+        self.planner.queue = type(self.planner.queue)(
+            r for r in self.planner.queue if r.device_id != device_id
+        )
+        self._inflight.discard(device_id)
+        return True
+
+    def force_extend(self, device_id: int, tokens: np.ndarray) -> int:
+        """Append ``tokens`` to the stream unverified (§III-A fallback resync:
+        the device already released them to the user).  Returns the stream's
+        new prev token; the device drafts from there next round."""
+        stream = self.streams[device_id]
+        if device_id in self._inflight:
+            raise ValueError(f"device {device_id} still has a request in flight")
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if toks.size == 0:
+            return stream.prev_token
+        if toks.size > self.k_max + 1:
+            raise ValueError(f"fallback run of {toks.size} exceeds k_max+1")
+        # KV invariant: the last committed token is never in the cache, so we
+        # feed [prev, t_1 .. t_{n-1}] and the new prev becomes t_n
+        feed = np.concatenate([[stream.prev_token], toks[:-1]]).astype(np.int32)
+        padded = np.zeros((self.k_max + 1,), np.int32)
+        padded[: feed.size] = feed
+        self.pool.cache = self._extend(
+            self.params,
+            self.pool.cache,
+            jnp.asarray([stream.slot], jnp.int32),
+            jnp.asarray(padded[None, :]),
+            jnp.asarray([feed.size], jnp.int32),
+        )
+        stream.committed.extend(int(t) for t in toks)
+        stream.prev_token = int(toks[-1])
+        self._committed_total += toks.size
+        self._fallback_tokens += toks.size
+        self._fallback_rounds += 1
+        return stream.prev_token
+
+    def has_inflight(self, device_id: int) -> bool:
+        """True while the device has a queued (unverdicted) request."""
+        return device_id in self._inflight
+
     @property
     def queue_depth(self) -> int:
         return len(self.planner.queue)
@@ -245,6 +319,21 @@ class ServerEngine:
             if b >= n:
                 return b
         return self.buckets[-1]
+
+    def warmup(self) -> None:
+        """Compile the verify step for every bucket size up front (batches of
+        scratch-slot rows), so measured runs never pay a mid-serving compile.
+        Safe anytime: scratch contents are never read as committed state."""
+        for b in self.buckets:
+            vb = verification.make_verify_batch(
+                jnp.zeros((b,), jnp.int32),
+                jnp.zeros((b, self.k_max), jnp.int32),
+                jnp.zeros((b,), jnp.int32),
+                draft_q=None if self.greedy else jnp.zeros((b, self.k_max), jnp.float32),
+                seed=np.uint32(0),
+            )
+            slots = jnp.full((b,), self.pool.scratch_slot, jnp.int32)
+            _, self.pool.cache = self._verify(self.params, self.pool.cache, slots, vb)
 
     # -- the serving hot loop ------------------------------------------------
 
@@ -257,8 +346,9 @@ class ServerEngine:
         self.planner.batch_size = max(1, min(self._batch_cap, len(self.streams) or 1))
         batch = self.planner.next_batch(now, server_idle=True)
         # straggler-evicted requests from still-active streams are requeued
-        # with a fresh arrival (in-process devices can't die); the paper's
-        # §III-A device-side fallback stays simulator-only
+        # with a fresh arrival; a device that gave up instead cancels via
+        # cancel_request + force_extend (the transport fallback protocol) —
+        # in-process drivers never abandon, so requeueing is always safe here
         if self.planner.dropped:
             for req in self.planner.dropped:
                 if req.device_id in self.streams:
@@ -302,6 +392,8 @@ class ServerEngine:
         for i, req in enumerate(batch.requests):
             stream = self.streams[req.device_id]
             self._inflight.discard(req.device_id)
+            self._drafted += int(lens[i])
+            self._accepted += int(n_accepted[i])
             n = int(n_commit[i])
             toks_i = out_tokens[i, :n]
             stream.committed.extend(int(t) for t in toks_i)
@@ -345,12 +437,19 @@ class ServerEngine:
             server_busy_frac=self._busy_seconds / elapsed,
             rounds=len(self.round_log),
             timeouts=self._timeouts,
-            fallback_tokens=0,  # §III-A device fallback is simulator-only
+            fallback_tokens=self._fallback_tokens,  # transport resyncs land here
             mean_batch_fill=float(np.mean(fills)) if fills else 0.0,
             mean_round_latency=float(np.mean(self._latencies)) if self._latencies else 0.0,
             server_rounds_per_s=len(self.round_log) / elapsed,
             partial_rounds=sum(1 for r in self.round_log if r.size < self._batch_cap),
             streams_served=self._streams_served,
+            acceptance_rate=self._accepted / max(self._drafted, 1),
+            mean_queue_depth=(
+                float(np.mean([r.queue_depth for r in self.round_log]))
+                if self.round_log
+                else 0.0
+            ),
+            fallback_rounds=self._fallback_rounds,
         )
 
 
@@ -399,6 +498,18 @@ class EdgeDeviceKit:
                 attn_chunk=attn_chunk,
             )
         )
+
+        # greedy next-token peek (no cache commit): the device's own guess at
+        # the bonus token, which seeds pipelined draft-ahead rounds
+        def _peek_fn(p, cache, tok):
+            h, _, _ = draft_model.decode_forward(p, cache, tok[:, None], attn_chunk=attn_chunk)
+            return jnp.argmax(draft_model.lm_head(p, h)[:, 0], axis=-1).astype(jnp.int32)
+
+        self._peek = jax.jit(_peek_fn)
+        # draft-ahead replays the post-acceptance state exactly; attention
+        # caches roll back by length, but ssm/hybrid recurrences would need
+        # checkpoint surgery mid-round — those kits draft strictly in-order
+        self.supports_pipeline = greedy and draft_model.cfg.family not in ("ssm", "hybrid")
         self._attn_chunk = attn_chunk
 
     def spawn(self, device_id: int, prompt: jax.Array, *, max_len: int, seed: int = 0):
@@ -406,7 +517,19 @@ class EdgeDeviceKit:
 
 
 class EdgeDevice:
-    """One edge device's drafting loop (SLED §III-A), batch size 1."""
+    """One edge device's drafting loop (SLED §III-A), batch size 1.
+
+    Supports pipelined draft-ahead (SpecEdge-style): after submitting a round
+    the device may keep drafting on the assumption that every token will be
+    accepted, seeding the ahead round with its own greedy guess at the bonus
+    token.  If the verdict confirms both (full acceptance AND the bonus guess
+    was right), the pre-drafted round is submitted with zero draft latency —
+    and because greedy drafting is deterministic from (cache, prev), those
+    tokens are bit-identical to what a fresh round would have produced, so
+    pipelining never changes outputs.  On any miss the ahead work is simply
+    discarded (JAX caches are immutable pytrees; rollback is keeping the old
+    reference).
+    """
 
     def __init__(self, kit: EdgeDeviceKit, device_id: int, prompt, *, max_len: int, seed: int):
         self.kit = kit
@@ -417,29 +540,110 @@ class EdgeDevice:
         self.key = jax.random.key(seed)
         self.committed: List[int] = []
         self._pending: Optional[drafting.DraftResult] = None
+        self._ahead: Optional[tuple] = None  # (bonus_guess, cache_acc, dres)
         self.pending_q: Optional[np.ndarray] = None
+        self.pipeline_hits = 0
+        self.pipeline_misses = 0
+        self.fallback_tokens = 0
+        self.drafted = 0
+        self.draft_seconds = 0.0  # wall time inside draft() — calibrates
+        # the simulator's device_rate against real measured drafting
 
     def draft(self) -> np.ndarray:
         """Draft up to k_max tokens; returns the variable-length proposal.
         ``pending_q`` holds the matching q(token) row for sampling-mode
         submits (engine.submit(..., draft_q=dev.pending_q))."""
         assert self._pending is None, "previous round still awaiting a verdict"
+        t = time.perf_counter()
         self.key, k = jax.random.split(self.key)
         dres = self.kit._draft(self.kit.params, self.cache, self.prev, k)
+        self._set_pending(dres)
+        n = int(dres.lengths[0])
+        toks = np.asarray(dres.tokens[0, :n])  # materialize: honest timing
+        self.draft_seconds += time.perf_counter() - t
+        self.drafted += n
+        return toks
+
+    def _set_pending(self, dres: drafting.DraftResult) -> None:
         self._pending = dres
         n = int(dres.lengths[0])
         self.pending_q = np.asarray(dres.q_sel[0, :n])
-        return np.asarray(dres.tokens[0, :n])
 
-    def on_verdict(self, verdict: Verdict) -> None:
-        """Roll the draft cache back to the verified prefix and resync."""
+    def draft_ahead(self) -> Optional[np.ndarray]:
+        """Pre-draft the next round while the current one is in flight.
+
+        Returns the ahead proposal (or None if unsupported); it becomes live
+        only if on_verdict() confirms the speculation.
+        """
+        assert self._pending is not None, "draft_ahead needs a round in flight"
+        if self._ahead is not None or not self.kit.supports_pipeline:
+            return None
+        pend = self._pending
+        n = int(pend.lengths[0])
+        last = pend.tokens[:, n - 1]
+        # peek at the draft model's bonus-position prediction: feed d_n against
+        # the cache rolled to just-before-d_n (no commit — logits only)
+        peek_cache = {**pend.cache, "length": pend.base_length + n}
+        bonus_guess = int(self.kit._peek(self.kit.params, peek_cache, last)[0])
+        # state as if all n drafts were accepted; identical transform to the
+        # full-acceptance verdict path, so a hit replays the exact fresh state
+        cache_acc = drafting.resume_after_verify(self.kit.model, pend, jnp.asarray([n], jnp.int32))
+        self.key, k = jax.random.split(self.key)
+        prev_guess = jnp.asarray([bonus_guess], jnp.int32)
+        dres = self.kit._draft(self.kit.params, cache_acc, prev_guess, k)
+        self._ahead = (bonus_guess, cache_acc, dres)
+        m = int(dres.lengths[0])
+        return np.asarray(dres.tokens[0, :m])
+
+    def on_verdict(self, verdict: Verdict) -> Optional[np.ndarray]:
+        """Roll the draft cache back to the verified prefix and resync.
+
+        Returns the next round's proposal when pipelined draft-ahead was
+        confirmed (submit it immediately — the device is already drafting
+        ahead of the server), else None (call draft() as usual).
+        """
         assert self._pending is not None
+        pend = self._pending
+        n = int(pend.lengths[0])
+        self.committed.extend(int(t) for t in verdict.tokens)
+        if self._ahead is not None:
+            bonus_guess, cache_acc, ahead = self._ahead
+            self._ahead = None
+            if verdict.n_accepted == n and verdict.next_prev == bonus_guess:
+                self.pipeline_hits += 1
+                self.cache = cache_acc
+                self.prev = jnp.asarray([bonus_guess], jnp.int32)
+                self._set_pending(ahead)
+                m = int(ahead.lengths[0])
+                return np.asarray(ahead.tokens[0, :m])
+            self.pipeline_misses += 1
         self.cache = drafting.resume_after_verify(
-            self.kit.model, self._pending, jnp.asarray([verdict.n_accepted], jnp.int32)
+            self.kit.model, pend, jnp.asarray([verdict.n_accepted], jnp.int32)
         )
         self.prev = jnp.asarray([verdict.next_prev], jnp.int32)
-        self.committed.extend(int(t) for t in verdict.tokens)
         self._pending = None
+        return None
+
+    def fallback_release(self) -> np.ndarray:
+        """§III-A timeout fallback: release the in-flight drafts locally and
+        continue as if they were committed.  The caller must resync the
+        server (engine.force_extend / transport Fallback frame) with the
+        returned tokens before the next verification round."""
+        assert self._pending is not None
+        pend = self._pending
+        n = int(pend.lengths[0])
+        toks = np.asarray(pend.tokens[0, :n])
+        # accept n-1 drafts cache-side, then the nth rides as prev_token —
+        # preserving the "last committed token is never in the KV" invariant
+        self.cache = drafting.resume_after_verify(
+            self.kit.model, pend, jnp.asarray([n - 1], jnp.int32)
+        )
+        self.prev = jnp.asarray([int(toks[-1])], jnp.int32)
+        self.committed.extend(int(t) for t in toks)
+        self.fallback_tokens += n
+        self._pending = None
+        self._ahead = None
+        return toks
 
     @property
     def awaiting(self) -> bool:

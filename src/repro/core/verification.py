@@ -136,6 +136,29 @@ def make_paged_verify_step(
     return verify_step
 
 
+def make_force_extend_step(model, *, ctx: MeshContext = NO_MESH, attn_chunk: int = 1024):
+    """Slot-indexed forced cache extension (no verification, no sampling).
+
+    Returns ``extend_step(params, pool, slots, tokens_in, n) -> pool'`` that
+    appends ``n[i]`` tokens of ``tokens_in[i]`` (padded to a fixed width) to
+    pool row ``slots[i]``.  Used by the transport server to resync a stream
+    after a §III-A timeout fallback: the device already released its local
+    drafts to the user, so the server force-commits those exact tokens into
+    the stream's row and verification resumes from the new tail — lossy by
+    construction (that is the paper's fallback trade), but state-consistent.
+    """
+
+    def extend_step(params, pool, slots, tokens_in, n):
+        sub = gather_slots(pool, slots)
+        _, ck_sub, _ = model.decode_forward(
+            params, sub, tokens_in, ctx, attn_chunk=attn_chunk
+        )
+        new_sub = model.commit(ck_sub, n.astype(jnp.int32))
+        return scatter_slots(pool, slots, new_sub)
+
+    return extend_step
+
+
 def make_prefill_step(model, *, ctx: MeshContext = NO_MESH, attn_chunk: int = 1024,
                       with_frontend: bool = False, uniform: bool = False):
     """Returns prefill_step(params, cache, tokens, [stub_embeds]) for serving.

@@ -1,19 +1,28 @@
-"""SLED server launcher on the continuous-batching engine (single-host demo
-of the deployment path; the production mesh path is exercised by dryrun.py).
+"""SLED serving launcher: N edge clients + 1 verification server.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --devices 6
+Three transports share the same models, engine, and equivalence check:
 
-Real models end-to-end: edge devices (batch-1 draft loops) join at staggered
-times, draft at heterogeneous lengths, and stream verification requests into
-a ServerEngine whose BatchPlanner policy (default ``continuous``) dispatches
-whatever subset is queued — so batches are PARTIAL by construction, slots
-free as devices finish, and waiting devices are admitted mid-stream.  With
-``--check`` (default) the committed greedy tokens are verified token-for-
-token against the lock-step reference loop (engine_loop.sled_generate):
-continuous batching must not change outputs, only scheduling.
+  loopback  (default) clients and server exchange wire-protocol frames over
+            zero-latency in-memory links — the full codec/admission/verdict
+            path with no network effects, so committed tokens must equal the
+            lock-step reference (engine_loop.sled_generate) token-for-token
+            under EVERY batch policy.
+  sim       frames pay latency/bandwidth/jitter/drop from a NetProfile
+            (serving/devices.py NETS) per link: RTT hiding via pipelined
+            draft-ahead, straggler timeouts, and §III-A local fallback are
+            real runtime behaviour.  Lossy profiles trade equivalence for
+            availability (fallback tokens are unverified) — exactly the
+            paper's trade.
+  inproc    PR-1's in-process driver loop (no wire protocol), kept as the
+            minimal engine demo.
+
+    PYTHONPATH=src python -m repro.launch.serve --devices 6                # loopback
+    PYTHONPATH=src python -m repro.launch.serve --transport sim --net wlan
+    PYTHONPATH=src python -m repro.launch.serve --transport sim --net lossy-wlan --no-check
 """
 
 import argparse
+import asyncio
 import dataclasses
 import time
 
@@ -23,11 +32,16 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.core.engine_loop import sled_generate
 from repro.core.server_engine import EdgeDeviceKit, ServerEngine
-from repro.models.model_zoo import build_model
+from repro.models.model_zoo import build_model, perturb_params
 from repro.quant.quantize import dequantize_pytree, quantize_pytree
+from repro.serving.devices import NETS
+from repro.transport.client import EdgeClient
+from repro.transport.links import make_link
+from repro.transport.server import TransportServer
 
 
-def serve(args) -> dict:
+def build_stack(args):
+    """Models, engine, device kit, prompts — shared by every transport."""
     vocab = 256
     tcfg = dataclasses.replace(get_config(args.arch).reduced(), vocab_size=vocab)
     dcfg = dataclasses.replace(
@@ -40,23 +54,123 @@ def serve(args) -> dict:
     if args.bits < 16:
         tp = dequantize_pytree(quantize_pytree(tp, args.bits))
         print(f"serving int{args.bits} weight-only quantized target")
-    dp = draft.init_params(jax.random.key(1))
+    dp = perturb_params(draft.init_params(jax.random.key(1)), args.draft_noise)
 
-    N, max_len = args.devices, 128
+    N = args.devices
     prompts = jax.random.randint(jax.random.key(2), (N, 12), 0, vocab)
     engine = ServerEngine(
         target,
         tp,
         n_slots=args.slots or N,
-        max_len=max_len,
+        max_len=128,
         k_max=args.k_max,
         policy=args.policy,
         max_wait=args.max_wait,
+        straggler_timeout=args.verify_timeout,
         attn_chunk=32,
     )
     kit = EdgeDeviceKit(draft, dp, k_max=args.k_max, c_th=args.c_th, greedy=True, attn_chunk=32)
+    return draft, dp, target, tp, engine, kit, prompts
 
-    # staggered joins: device i shows up i * stagger rounds into the run, so
+
+def check_outputs(outputs, draft, dp, target, tp, prompts, args) -> bool:
+    ref, _, _ = sled_generate(
+        draft, dp, target, tp, prompts,
+        max_new=args.max_new, k_max=args.k_max, c_th=args.c_th, greedy=True,
+    )
+    eng = np.array([outputs[i] for i in range(args.devices)])
+    match = np.array_equal(eng, np.asarray(ref))
+    print(f"greedy lock-step reference match: {'OK' if match else 'MISMATCH'}")
+    return match
+
+
+# ---------------------------------------------------------------------------
+# transport modes: wire protocol over loopback / simulated links
+# ---------------------------------------------------------------------------
+
+
+async def serve_transport(args) -> dict:
+    draft, dp, target, tp, engine, kit, prompts = build_stack(args)
+    N = args.devices
+    net = NETS[args.net]
+    if args.transport == "sim":
+        print(
+            f"simulated links: rtt {net.rtt_mean*1e3:.1f}ms ± {net.rtt_jitter*1e3:.1f}ms, "
+            f"{net.bandwidth_bps/1e6:.0f} Mbps, drop {net.drop_prob:.1%}"
+        )
+
+    server = TransportServer(engine)
+    clients = []
+    for i in range(N):
+        link = make_link(
+            "sim" if args.transport == "sim" else "loopback", net=net, seed=1000 + i
+        )
+        server.attach(link.server)
+        clients.append(
+            EdgeClient(
+                kit, i, np.asarray(prompts[i]), link.device,
+                max_new=args.max_new, max_len=128,
+                qmode=args.qmode, pipeline=args.pipeline,
+                verify_timeout=args.verify_timeout, admit_timeout=args.verify_timeout,
+                seed=1000 + i,
+            )
+        )
+
+    async def run_client(i: int, c: EdgeClient):
+        await asyncio.sleep(i * args.stagger_s)  # staggered joins
+        return await c.run()
+
+    t0 = time.time()
+    outputs = await asyncio.gather(*(run_client(i, c) for i, c in enumerate(clients)))
+    wall = time.time() - t0
+    for _ in range(500):  # let in-flight Close frames retire their streams
+        if not engine.streams:
+            break
+        await asyncio.sleep(0.01)
+    stats = server.stats()
+    await server.stop()
+
+    hits = sum(c.stats.pipeline_hits for c in clients)
+    misses = sum(c.stats.pipeline_misses for c in clients)
+    fb_rounds = sum(c.stats.fallback_rounds for c in clients)
+    drops = stats.frames_dropped + sum(c.stats.frames_dropped for c in clients)
+    print(
+        f"served {stats.streams_served} streams, "
+        f"{sum(len(o) for o in outputs)} tokens in {stats.rounds} rounds / {wall:.1f}s "
+        f"({stats.wstgr:.1f} tok/s) — mean fill {stats.mean_batch_fill:.2f}/{N}, "
+        f"{stats.partial_rounds} partial, queue depth {stats.mean_queue_depth:.2f}, "
+        f"acceptance {stats.acceptance_rate:.2f}"
+    )
+    print(
+        f"wire: {stats.bytes_rx} B up / {stats.bytes_tx} B down in "
+        f"{stats.frames_rx + stats.frames_tx} frames, {drops} dropped — "
+        f"pipeline {hits} hits / {misses} misses, "
+        f"{fb_rounds} fallback rounds ({stats.fallback_tokens} unverified tokens)"
+    )
+
+    result = stats.as_dict()
+    result["clients"] = [c.stats.as_dict() for c in clients]
+    if args.check:
+        if stats.fallback_tokens:
+            print("skipping equivalence check: fallback released unverified tokens")
+        else:
+            out_map = {i: o for i, o in enumerate(outputs)}
+            assert check_outputs(out_map, draft, dp, target, tp, prompts, args), (
+                "transport serving must be output-identical to sled_generate"
+            )
+    return result
+
+
+# ---------------------------------------------------------------------------
+# inproc mode: PR-1's in-process engine driver (no wire protocol)
+# ---------------------------------------------------------------------------
+
+
+def serve_inproc(args) -> dict:
+    draft, dp, target, tp, engine, kit, prompts = build_stack(args)
+    N, max_len = args.devices, 128
+
+    # staggered joins: device i shows up i * stagger ticks into the run, so
     # early rounds verify a strict subset and late rounds drain the tail
     join_at = {i: i * args.stagger for i in range(N)}
     devices, outputs, waiting = {}, {}, set(range(N))
@@ -111,33 +225,50 @@ def serve(args) -> dict:
         assert min_fill < N, "staggered arrivals should produce a partial batch"
 
     if args.check:
-        ref, _, _ = sled_generate(
-            draft, dp, target, tp, prompts,
-            max_new=args.max_new, k_max=args.k_max, c_th=args.c_th, greedy=True,
+        assert check_outputs(outputs, draft, dp, target, tp, prompts, args), (
+            "continuous-batching engine must be output-identical to sled_generate"
         )
-        eng = np.array([outputs[i] for i in range(N)])
-        match = np.array_equal(eng, np.asarray(ref))
-        print(f"greedy lock-step reference match: {'OK' if match else 'MISMATCH'}")
-        assert match, "continuous-batching engine must be output-identical to sled_generate"
     return stats.as_dict()
+
+
+def serve(args) -> dict:
+    if args.transport == "inproc":
+        return serve_inproc(args)
+    return asyncio.run(serve_transport(args))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default="qwen2-1.5b")
+    ap.add_argument("--transport", choices=("loopback", "sim", "inproc"), default="loopback")
+    ap.add_argument("--net", choices=sorted(NETS), default="wlan",
+                    help="NetProfile for --transport sim links")
     ap.add_argument("--devices", type=int, default=6)
     ap.add_argument("--slots", type=int, default=0, help="cache pool rows (0: = devices)")
     ap.add_argument("--k-max", type=int, default=4)
     ap.add_argument("--c-th", type=float, default=0.3)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-new", "--steps", dest="max_new", type=int, default=24,
+                    help="tokens committed per device")
     ap.add_argument("--policy", choices=("continuous", "deadline", "static"),
                     default="continuous")
     ap.add_argument("--max-wait", type=float, default=0.05)
+    ap.add_argument("--qmode", choices=("none", "f32", "f16", "int8"), default="none",
+                    help="draft-probability payload precision on the wire")
+    ap.add_argument("--pipeline", action=argparse.BooleanOptionalAction, default=True,
+                    help="draft ahead while a verify round is in flight")
+    ap.add_argument("--verify-timeout", type=float, default=30.0,
+                    help="device-side round timeout before §III-A fallback "
+                         "(generous default: first rounds pay jit compiles)")
     ap.add_argument("--stagger", type=int, default=3,
-                    help="device i joins i*stagger scheduler ticks into the run")
+                    help="inproc: device i joins i*stagger scheduler ticks in")
+    ap.add_argument("--stagger-s", type=float, default=0.2,
+                    help="transport: device i joins i*stagger_s seconds in")
     ap.add_argument("--bits", type=int, default=16, choices=(4, 8, 16))
+    ap.add_argument("--draft-noise", type=float, default=0.0,
+                    help="perturb draft params (random-init models otherwise "
+                         "agree greedily -> trivial 1.0 acceptance)")
     ap.add_argument("--check", action=argparse.BooleanOptionalAction, default=True,
-                    help="verify engine output equals the lock-step reference")
+                    help="verify output equals the lock-step reference")
     serve(ap.parse_args())
 
 

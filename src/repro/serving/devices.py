@@ -18,12 +18,44 @@ from typing import Dict, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
+class NetProfile:
+    """Edge<->server link characteristics (paper §IV service-area network).
+
+    One profile drives BOTH the discrete-event simulator's RTT model and the
+    transport runtime's SimulatedLink (transport/links.py), so predictions and
+    measurements share a single network configuration.
+    """
+
+    name: str
+    rtt_mean: float          # seconds, full round trip
+    rtt_jitter: float        # gaussian sigma on the round trip
+    bandwidth_bps: float     # per-direction serialization rate
+    drop_prob: float = 0.0   # per-frame loss -> exercises §III-A fallback
+
+    @property
+    def one_way(self) -> float:
+        return self.rtt_mean / 2
+
+
+ETHERNET = NetProfile("ethernet", rtt_mean=0.001, rtt_jitter=0.0001, bandwidth_bps=1e9)
+WLAN = NetProfile("wlan", rtt_mean=0.020, rtt_jitter=0.005, bandwidth_bps=100e6)
+LTE = NetProfile("lte", rtt_mean=0.050, rtt_jitter=0.015, bandwidth_bps=20e6, drop_prob=0.005)
+LOSSY_WLAN = NetProfile(
+    "lossy-wlan", rtt_mean=0.020, rtt_jitter=0.005, bandwidth_bps=100e6, drop_prob=0.05
+)
+
+NETS = {n.name: n for n in (ETHERNET, WLAN, LTE, LOSSY_WLAN)}
+
+
+@dataclasses.dataclass(frozen=True)
 class DeviceProfile:
     name: str
     price_usd: float
     power_w: float
     # decode tokens/s by (draft model, bits)
     draft_rate: Dict[Tuple[str, int], float]
+    # how this device class reaches the edge server (paper testbed: WLAN)
+    net: NetProfile = WLAN
 
     def rate(self, model: str = "llama-1b-draft", bits: int = 4) -> float:
         return self.draft_rate[(model, bits)]

@@ -1,0 +1,49 @@
+"""Async edge<->server transport runtime (wire protocol + links + loops).
+
+Decouples edge devices from the verification server behind an explicit,
+versioned wire protocol so network effects — RTT, jitter, bandwidth,
+stragglers, timeout fallback — are real runtime behaviour instead of
+simulator-only abstractions:
+
+  codec.py   — length-prefixed binary frames (DraftPacket / Verdict /
+               admission + fallback control) with optional fp16/int8
+               quantization of the draft-probability payload
+  links.py   — channel abstraction: zero-latency loopback and a
+               SimulatedLink imposing per-NetProfile latency/bandwidth/
+               jitter/drop on every frame
+  server.py  — asyncio TransportServer wrapping core.server_engine
+  client.py  — asyncio EdgeClient: pipelined draft-ahead device loop
+"""
+
+from repro.transport.codec import (
+    Admit,
+    Close,
+    CodecError,
+    DraftPacket,
+    Fallback,
+    FallbackAck,
+    FrameDecoder,
+    Hello,
+    Verdict,
+    decode_frame,
+    encode_frame,
+)
+from repro.transport.links import LinkStats, LoopbackLink, SimulatedLink, make_link
+
+__all__ = [
+    "Admit",
+    "Close",
+    "CodecError",
+    "DraftPacket",
+    "Fallback",
+    "FallbackAck",
+    "FrameDecoder",
+    "Hello",
+    "Verdict",
+    "decode_frame",
+    "encode_frame",
+    "LinkStats",
+    "LoopbackLink",
+    "SimulatedLink",
+    "make_link",
+]

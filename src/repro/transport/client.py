@@ -1,0 +1,230 @@
+"""Asyncio edge-device client: pipelined drafting over a transport link.
+
+``EdgeClient`` runs one device's §III-A loop against a TransportServer:
+
+  admission   Hello -> Admit (retried on loss; waits out a full pool)
+  round       DraftPacket(seq) -> [draft ahead while in flight] -> Verdict
+  pipelining  after sending a round the client keeps drafting on the
+              assumption of full acceptance (EdgeDevice.draft_ahead); a
+              confirmed guess submits the pre-drafted round immediately —
+              draft latency hides under the network round trip, which is
+              where edge-assisted serving wins (SpecEdge)
+  timeout     no verdict within ``verify_timeout`` -> the client releases
+              its drafts locally (paper fallback) and sends a Fallback
+              frame; the server's reply arbitrates the race — FallbackAck
+              confirms the resync, a (late) Verdict overrides it.  The
+              client never mutates draft-cache state until the server has
+              arbitrated, so client and server token streams can never
+              diverge.
+
+The client's committed stream is exactly the server's committed stream for
+its slot; on zero-latency lossless links it is token-for-token identical to
+the lock-step reference (tests + launch/serve.py --check enforce this).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.server_engine import EdgeDevice, EdgeDeviceKit
+from repro.transport import codec
+from repro.transport.links import Endpoint
+
+
+@dataclasses.dataclass
+class ClientStats:
+    device_id: int
+    rounds: int = 0
+    committed: int = 0
+    pipeline_hits: int = 0
+    pipeline_misses: int = 0
+    fallback_rounds: int = 0
+    fallback_tokens: int = 0
+    late_verdicts: int = 0
+    hello_retries: int = 0
+    bytes_tx: int = 0
+    bytes_rx: int = 0
+    frames_tx: int = 0
+    frames_rx: int = 0
+    frames_dropped: int = 0
+    wall_seconds: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class ProtocolError(RuntimeError):
+    pass
+
+
+class EdgeClient:
+    def __init__(
+        self,
+        kit: EdgeDeviceKit,
+        device_id: int,
+        prompt: np.ndarray,
+        endpoint: Endpoint,
+        *,
+        max_new: int,
+        max_len: int,
+        qmode: str = "none",
+        pipeline: bool = True,
+        verify_timeout: float = 2.0,
+        admit_timeout: float = 2.0,
+        max_retries: int = 64,
+        draft_rate: Optional[float] = None,
+        seed: int = 0,
+    ):
+        self.kit = kit
+        self.device_id = device_id
+        self.prompt = np.asarray(prompt, np.int32)
+        self.ep = endpoint
+        self.max_new = max_new
+        self.max_len = max_len
+        self.qmode = qmode
+        self.pipeline = pipeline and kit.supports_pipeline
+        self.verify_timeout = verify_timeout
+        self.admit_timeout = admit_timeout
+        self.max_retries = max_retries
+        # emulated device speed (tokens/s): tiny reduced models draft orders
+        # of magnitude faster than the paper's edge boards, so a fleet can
+        # throttle to DeviceProfile rates — the sleep overlaps other clients'
+        # compute, restoring the concurrency a real fleet would have
+        self.draft_rate = draft_rate
+        self.seed = seed
+        self.stats = ClientStats(device_id=device_id)
+        self.device: Optional[EdgeDevice] = None
+
+    # -- wire helpers --------------------------------------------------------
+
+    async def _send(self, msg) -> None:
+        await self.ep.send(codec.encode_frame(msg))
+
+    async def _recv(self, timeout: Optional[float]):
+        """One decoded message, or None on timeout; ConnectionError if the
+        server side closed."""
+        try:
+            frame = await asyncio.wait_for(self.ep.recv(), timeout)
+        except asyncio.TimeoutError:
+            return None
+        if frame is None:
+            raise ConnectionError(f"device {self.device_id}: server closed the link")
+        return codec.decode_frame(frame)[0]
+
+    # -- protocol phases -----------------------------------------------------
+
+    async def _admission(self) -> None:
+        for _ in range(self.max_retries):
+            await self._send(codec.Hello(self.device_id, self.prompt))
+            deadline = asyncio.get_running_loop().time() + self.admit_timeout
+            while True:
+                left = deadline - asyncio.get_running_loop().time()
+                msg = await self._recv(max(left, 0.0)) if left > 0 else None
+                if msg is None:
+                    self.stats.hello_retries += 1
+                    break  # resend Hello
+                if isinstance(msg, codec.Admit):
+                    if msg.ok:
+                        return
+                    # pool full: the server queued us; wait for the real Admit
+                    # without a deadline cap tied to admission retries
+                    deadline = asyncio.get_running_loop().time() + 60.0
+                # anything else pre-admission is a stale frame; keep waiting
+        raise ProtocolError(f"device {self.device_id}: admission failed after retries")
+
+    async def _await_verdict(self, seq: int, draft_tokens: np.ndarray):
+        """Wait out one round.  Returns (verdict, fell_back): a codec.Verdict
+        for seq (authoritative), or (None, True) after a server-confirmed
+        fallback resync."""
+        sent_fallback = False
+        for _ in range(self.max_retries):
+            msg = await self._recv(self.verify_timeout)
+            if msg is None:
+                # round timed out: ask the server to resync on our local
+                # release; state stays untouched until the server arbitrates
+                sent_fallback = True
+                await self._send(codec.Fallback(self.device_id, seq, draft_tokens))
+                continue
+            if isinstance(msg, codec.Verdict):
+                if msg.seq == seq:
+                    if sent_fallback:
+                        self.stats.late_verdicts += 1
+                    return msg, False
+                continue  # duplicate of an older round
+            if isinstance(msg, codec.FallbackAck):
+                if msg.seq == seq:
+                    return None, True
+                continue
+            if isinstance(msg, codec.Admit):
+                continue  # duplicate admission reply
+            raise ProtocolError(f"device {self.device_id}: unexpected {type(msg).__name__}")
+        raise ProtocolError(f"device {self.device_id}: round {seq} unresolved after retries")
+
+    # -- main loop -----------------------------------------------------------
+
+    async def run(self) -> List[int]:
+        t0 = asyncio.get_running_loop().time()
+        await self._admission()
+        dev = self.device = EdgeDevice(
+            self.kit, self.device_id, self.prompt, max_len=self.max_len, seed=self.seed
+        )
+        loop = asyncio.get_running_loop()
+
+        async def throttle(n: int, since: Optional[float] = None) -> None:
+            """Emulate drafting ``n`` tokens at the device's rate; time spent
+            waiting on the network (``since``) already counts (sim's
+            draft-ahead carry: need/device_rate)."""
+            if self.draft_rate:
+                need = n / self.draft_rate
+                if since is not None:
+                    need -= loop.time() - since
+                if need > 0:
+                    await asyncio.sleep(need)
+
+        seq = 0
+        tokens = dev.draft()
+        await throttle(len(tokens))
+        while True:
+            q = dev.pending_q if self.qmode != "none" else None
+            await self._send(
+                codec.DraftPacket(self.device_id, seq, tokens, draft_q=q, qmode=self.qmode)
+            )
+            self.stats.rounds += 1
+            t_sent = loop.time()
+            if self.pipeline:
+                # the round trip is in flight: keep drafting on speculation
+                dev.draft_ahead()
+                await asyncio.sleep(0)  # hand the loop to the server/link
+            verdict, fell_back = await self._await_verdict(seq, tokens)
+            if fell_back:
+                dev.fallback_release()
+                self.stats.fallback_rounds += 1
+                next_tokens = None
+            else:
+                next_tokens = dev.on_verdict(verdict)
+            seq += 1
+            if len(dev.committed) >= self.max_new:
+                break
+            if next_tokens is not None:
+                tokens = next_tokens
+                # pre-drafted during the round trip; pay only the remainder
+                await throttle(len(tokens), since=t_sent)
+            else:
+                tokens = dev.draft()
+                await throttle(len(tokens))
+        await self._send(codec.Close(self.device_id))
+        self.ep.close()
+        self.stats.committed = min(len(dev.committed), self.max_new)
+        self.stats.pipeline_hits = dev.pipeline_hits
+        self.stats.pipeline_misses = dev.pipeline_misses
+        self.stats.fallback_tokens = dev.fallback_tokens
+        self.stats.bytes_tx = self.ep.stats.bytes_tx
+        self.stats.bytes_rx = self.ep.stats.bytes_rx
+        self.stats.frames_tx = self.ep.stats.frames_tx
+        self.stats.frames_rx = self.ep.stats.frames_rx
+        self.stats.frames_dropped = self.ep.stats.frames_dropped
+        self.stats.wall_seconds = asyncio.get_running_loop().time() - t0
+        return dev.committed[: self.max_new]

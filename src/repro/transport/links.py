@@ -1,0 +1,195 @@
+"""Pluggable edge<->server channels: loopback and simulated network links.
+
+A link is a pair of :class:`Endpoint` halves (device side, server side); each
+half sends and receives whole encoded frames (bytes).  Two implementations:
+
+  LoopbackLink  — in-memory queues, zero latency, nothing dropped: the
+                  baseline for token-for-token equivalence checks.
+  SimulatedLink — every frame pays serialization (bytes * 8 / bandwidth, a
+                  shared per-direction line: back-to-back frames queue behind
+                  each other) plus propagation (one-way latency + gaussian
+                  jitter), and may be dropped.  Delivery is FIFO per
+                  direction — jitter never reorders frames, it only widens
+                  gaps — which mirrors a TCP-like transport and keeps the
+                  protocol free of sequence-gap handling.
+
+Per-endpoint LinkStats count frames/bytes both ways plus drops, so wire cost
+is measurable end-to-end (benchmarks/wstgr.py --transport emits them).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import random
+from typing import Optional, Tuple
+
+from repro.serving.devices import NetProfile
+
+_CLOSE = object()  # queue sentinel: peer closed its sending half
+
+
+@dataclasses.dataclass
+class LinkStats:
+    frames_tx: int = 0
+    bytes_tx: int = 0
+    frames_rx: int = 0
+    bytes_rx: int = 0
+    frames_dropped: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class Endpoint:
+    """One half of a link: ``await send(frame)`` / ``await recv()``.
+
+    ``recv`` returns None once the peer has closed and all in-flight frames
+    have drained.  Concrete pipes are installed by the Link constructors.
+    """
+
+    def __init__(self):
+        self.stats = LinkStats()
+        self._out: Optional["_Pipe"] = None
+        self._in: Optional["_Pipe"] = None
+        self._closed = False
+
+    async def send(self, frame: bytes) -> None:
+        if self._closed:
+            raise ConnectionError("endpoint is closed")
+        self.stats.frames_tx += 1
+        self.stats.bytes_tx += len(frame)
+        await self._out.put(frame)
+
+    async def recv(self) -> Optional[bytes]:
+        frame = await self._in.get()
+        if frame is _CLOSE:
+            return None
+        self.stats.frames_rx += 1
+        self.stats.bytes_rx += len(frame)
+        return frame
+
+    def close(self) -> None:
+        """Close the sending half; the peer's recv() drains then returns None."""
+        if not self._closed:
+            self._closed = True
+            self._out.put_nowait_close()
+
+
+class _Pipe:
+    """Direct queue pipe (loopback): frames appear immediately, in order."""
+
+    def __init__(self):
+        self.q: asyncio.Queue = asyncio.Queue()
+
+    async def put(self, frame) -> None:
+        self.q.put_nowait(frame)
+
+    def put_nowait_close(self) -> None:
+        self.q.put_nowait(_CLOSE)
+
+    async def get(self):
+        return await self.q.get()
+
+
+class _SimPipe(_Pipe):
+    """One direction of a simulated link.
+
+    The sender computes each frame's arrival time (line-busy serialization +
+    propagation + jitter, monotonically non-decreasing so delivery stays
+    FIFO); a forwarder task sleeps until that wall-clock instant and only
+    then exposes the frame to the receiver.
+    """
+
+    def __init__(self, net: NetProfile, rng: random.Random, stats: LinkStats):
+        super().__init__()
+        self.net = net
+        self.rng = rng
+        self.stats = stats
+        self._staged: asyncio.Queue = asyncio.Queue()
+        self._line_free = 0.0
+        self._last_arrival = 0.0
+        self._task: Optional[asyncio.Task] = None
+
+    def _ensure_forwarder(self) -> None:
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(self._forward())
+
+    async def put(self, frame) -> None:
+        self._ensure_forwarder()
+        if self.rng.random() < self.net.drop_prob:
+            self.stats.frames_dropped += 1
+            return
+        now = asyncio.get_running_loop().time()
+        start = max(now, self._line_free)
+        self._line_free = start + len(frame) * 8.0 / self.net.bandwidth_bps
+        propagation = max(0.0, self.net.one_way + self.rng.gauss(0.0, self.net.rtt_jitter / 2))
+        arrival = max(self._line_free + propagation, self._last_arrival)
+        self._last_arrival = arrival
+        self._staged.put_nowait((arrival, frame))
+
+    def put_nowait_close(self) -> None:
+        # the close rides the wire behind any staged frames
+        if self._task is None:
+            self.q.put_nowait(_CLOSE)
+        else:
+            self._staged.put_nowait((self._last_arrival, _CLOSE))
+
+    async def _forward(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            arrival, frame = await self._staged.get()
+            delay = arrival - loop.time()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            self.q.put_nowait(frame)
+            if frame is _CLOSE:
+                return
+
+
+def _wire(a: Endpoint, b: Endpoint, ab: _Pipe, ba: _Pipe) -> None:
+    a._out, b._in = ab, ab
+    b._out, a._in = ba, ba
+
+
+class LoopbackLink:
+    """Zero-latency, lossless in-memory link."""
+
+    def __init__(self):
+        self.device = Endpoint()
+        self.server = Endpoint()
+        _wire(self.device, self.server, _Pipe(), _Pipe())
+
+    @property
+    def endpoints(self) -> Tuple[Endpoint, Endpoint]:
+        return self.device, self.server
+
+
+class SimulatedLink:
+    """Link with a NetProfile imposed on every frame, both directions.
+
+    Uplink (device->server) and downlink share the profile but have
+    independent lines and jitter streams; ``seed`` makes a run reproducible.
+    """
+
+    def __init__(self, net: NetProfile, *, seed: int = 0):
+        self.net = net
+        self.device = Endpoint()
+        self.server = Endpoint()
+        up = _SimPipe(net, random.Random(seed * 2 + 1), self.device.stats)
+        down = _SimPipe(net, random.Random(seed * 2 + 2), self.server.stats)
+        _wire(self.device, self.server, up, down)
+
+    @property
+    def endpoints(self) -> Tuple[Endpoint, Endpoint]:
+        return self.device, self.server
+
+
+def make_link(kind: str, net: Optional[NetProfile] = None, *, seed: int = 0):
+    """Factory: ``loopback`` or ``sim`` (requires a NetProfile)."""
+    if kind == "loopback":
+        return LoopbackLink()
+    if kind == "sim":
+        if net is None:
+            raise ValueError("sim links need a NetProfile (serving/devices.py NETS)")
+        return SimulatedLink(net, seed=seed)
+    raise ValueError(f"unknown link kind {kind!r} (loopback | sim)")

@@ -2,6 +2,7 @@
 import dataclasses
 
 import numpy as np
+import pytest
 
 from repro.core.scheduler import BatchPlanner, VerifyRequest
 from repro.serving.devices import A100_X4, V5E_16
@@ -22,6 +23,7 @@ def test_sled_beats_centralized_capacity():
     assert sled / max(cent, 1) > 2.0, (sled, cent)
 
 
+@pytest.mark.slow
 def test_wstgr_beats_centralized_at_saturation():
     """Fig. 4 claim: >2x system throughput at equal batch once the server is
     the binding resource for both systems.  (Below centralized capacity the

@@ -69,7 +69,8 @@ def test_policy_specs_divisible():
     ("granite-moe-3b-a800m", "decode_32k"),   # f-TP MoE + seq-shard cache
     ("mamba2-370m", "long_500k"),
     ("zamba2-1.2b", "decode_32k"),
-    ("whisper-tiny", "train_4k"),
+    # whisper train_4k lowers+compiles for 40s+: slow tier
+    pytest.param("whisper-tiny", "train_4k", marks=pytest.mark.slow),
 ])
 def test_debug_mesh_lower_compile(arch, shape):
     """lower+compile succeeds on a small mesh for representative cells

@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import get_config
 from repro.core import drafting, verification
@@ -21,6 +22,7 @@ def _pair():
     return dm, dm.init_params(jax.random.key(1)), tm, tm.init_params(jax.random.key(2))
 
 
+@pytest.mark.slow
 def test_end_to_end_heterogeneous_drafts_one_target():
     """SLED's core serving property: ONE target model verifies drafts from
     DIFFERENT draft models (device heterogeneity, §III-B) — outputs stay

@@ -1,0 +1,406 @@
+"""Transport runtime: codec round-trips, link invariants, end-to-end serving.
+
+The load-bearing test mirrors PR 1's engine equivalence one level up the
+stack: N async EdgeClients talking to a TransportServer over zero-latency
+loopback links — the full wire protocol, admission, pipelined draft-ahead —
+must commit exactly the tokens the lock-step reference loop commits.  The
+network may change *when* things happen, never *what* is generated; only the
+§III-A fallback (exercised with a deliberately lossy link) is allowed to
+release unverified tokens, and even then client and server streams must
+agree token-for-token with each other.
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine_loop import sled_generate
+from repro.core.server_engine import EdgeDeviceKit, ServerEngine
+from repro.models.model_zoo import build_model, perturb_params
+from repro.serving.devices import NETS, NetProfile
+from repro.transport import codec
+from repro.transport.client import EdgeClient
+from repro.transport.links import LoopbackLink, SimulatedLink, make_link
+from repro.transport.server import TransportServer
+
+V = 128
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip(msg):
+    buf = codec.encode_frame(msg)
+    out, used = codec.decode_frame(buf)
+    assert used == len(buf)
+    return out
+
+
+def test_codec_roundtrip_all_messages():
+    toks = np.asarray([5, 0, 127, 3], np.int32)
+    hello = _roundtrip(codec.Hello(device_id=7, prompt=toks))
+    assert hello.device_id == 7
+    np.testing.assert_array_equal(hello.prompt, toks)
+
+    admit = _roundtrip(codec.Admit(device_id=7, ok=True, slot=3))
+    assert admit.ok and admit.slot == 3
+
+    d = _roundtrip(codec.DraftPacket(device_id=1, seq=42, tokens=toks))
+    assert (d.seq, d.qmode) == (42, "none") and d.draft_q is None
+    np.testing.assert_array_equal(d.tokens, toks)
+
+    v = _roundtrip(
+        codec.Verdict(device_id=1, seq=42, n_accepted=2, tokens=toks[:3], next_prev=-1)
+    )
+    assert v.n_accepted == 2 and v.next_prev == -1 and v.flags == 0
+    np.testing.assert_array_equal(v.tokens, toks[:3])
+
+    f = _roundtrip(codec.Fallback(device_id=2, seq=9, tokens=toks))
+    np.testing.assert_array_equal(f.tokens, toks)
+    a = _roundtrip(codec.FallbackAck(device_id=2, seq=9, next_prev=77))
+    assert a.next_prev == 77
+    assert _roundtrip(codec.Close(device_id=3)).device_id == 3
+
+
+def test_codec_empty_token_vector():
+    d = _roundtrip(codec.DraftPacket(device_id=0, seq=0, tokens=np.zeros((0,), np.int32)))
+    assert d.tokens.shape == (0,)
+
+
+def test_codec_rejects_bad_frames():
+    good = codec.encode_frame(codec.Close(device_id=1))
+    with pytest.raises(codec.CodecError, match="magic"):
+        codec.decode_frame(b"XX" + good[2:])
+    with pytest.raises(codec.CodecError, match="version"):
+        codec.decode_frame(good[:2] + bytes([99]) + good[3:])
+    with pytest.raises(codec.CodecError, match="unknown message type"):
+        codec.decode_frame(good[:3] + bytes([200]) + good[4:])
+    # payload longer than the message needs -> trailing bytes
+    padded = good[:4] + (len(good) - 8 + 2).to_bytes(4, "big") + good[8:] + b"\x00\x00"
+    with pytest.raises(codec.CodecError, match="trailing"):
+        codec.decode_frame(padded)
+
+
+def test_codec_rejects_every_truncation():
+    frame = codec.encode_frame(
+        codec.DraftPacket(
+            device_id=3, seq=1, tokens=np.asarray([1, 2, 3], np.int32),
+            draft_q=np.asarray([0.5, 0.25, 0.125], np.float32), qmode="int8",
+        )
+    )
+    for cut in range(len(frame)):
+        with pytest.raises(codec.CodecError):
+            codec.decode_frame(frame[:cut])
+
+
+@pytest.mark.parametrize("qmode,atol", [("f32", 0.0), ("f16", 1e-3), ("int8", 1e-2)])
+def test_codec_quantized_q_payload(qmode, atol):
+    rngq = np.random.default_rng(0)
+    q = rngq.uniform(0.0, 1.0, size=11).astype(np.float32)
+    msg = codec.DraftPacket(
+        device_id=0, seq=0, tokens=np.arange(11, dtype=np.int32), draft_q=q, qmode=qmode
+    )
+    out = _roundtrip(msg)
+    assert out.qmode == qmode
+    np.testing.assert_allclose(out.draft_q, q, atol=max(atol, 1e-7))
+    # the whole point: quantized payloads are smaller on the wire
+    size = {
+        m: len(codec.encode_frame(dataclasses.replace(msg, qmode=m)))
+        for m in ("f32", "f16", "int8")
+    }
+    assert size["int8"] < size["f16"] < size["f32"]
+
+
+def test_codec_property_roundtrip():
+    pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        dev=st.integers(0, 2**32 - 1),
+        seq=st.integers(0, 2**32 - 1),
+        toks=st.lists(st.integers(-(2**31), 2**31 - 1), max_size=40),
+        qmode=st.sampled_from(codec.QMODES),
+        qseed=st.integers(0, 2**16),
+    )
+    def check(dev, seq, toks, qmode, qseed):
+        toks = np.asarray(toks, np.int32)
+        q = None
+        if qmode != "none":
+            q = np.random.default_rng(qseed).uniform(0, 1, size=len(toks)).astype(np.float32)
+        out = _roundtrip(codec.DraftPacket(dev, seq, toks, draft_q=q, qmode=qmode))
+        assert (out.device_id, out.seq, out.qmode) == (dev, seq, qmode)
+        np.testing.assert_array_equal(out.tokens, toks)
+        if qmode == "none":
+            assert out.draft_q is None
+        else:
+            np.testing.assert_allclose(out.draft_q, q, atol=2e-2)
+
+    check()
+
+
+def test_frame_decoder_reassembles_byte_stream():
+    frames = [
+        codec.encode_frame(codec.Hello(1, np.asarray([1, 2], np.int32))),
+        codec.encode_frame(codec.DraftPacket(1, 0, np.asarray([3], np.int32))),
+        codec.encode_frame(codec.Close(1)),
+    ]
+    stream = b"".join(frames)
+    dec = codec.FrameDecoder()
+    got = []
+    for i in range(0, len(stream), 3):  # arbitrary chunking
+        dec.feed(stream[i : i + 3])
+        got.extend(dec)
+    assert [type(m).__name__ for m in got] == ["Hello", "DraftPacket", "Close"]
+
+
+# ---------------------------------------------------------------------------
+# links
+# ---------------------------------------------------------------------------
+
+
+def test_loopback_link_immediate_fifo():
+    async def inner():
+        link = LoopbackLink()
+        for i in range(5):
+            await link.device.send(bytes([i]))
+        got = [await link.server.recv() for _ in range(5)]
+        assert got == [bytes([i]) for i in range(5)]
+        assert link.device.stats.frames_tx == 5 and link.server.stats.frames_rx == 5
+        link.device.close()
+        assert await link.server.recv() is None
+
+    asyncio.run(inner())
+
+
+def test_simulated_link_latency_and_order():
+    net = NetProfile("t", rtt_mean=0.02, rtt_jitter=0.01, bandwidth_bps=1e6)
+
+    async def inner():
+        link = SimulatedLink(net, seed=3)
+        loop = asyncio.get_running_loop()
+        t0 = loop.time()
+        payloads = [bytes([i]) * 100 for i in range(10)]
+        for p in payloads:
+            await link.device.send(p)
+        got, times = [], []
+        for _ in payloads:
+            got.append(await link.server.recv())
+            times.append(loop.time() - t0)
+        # jitter must never reorder (FIFO invariant) ...
+        assert got == payloads
+        assert times == sorted(times)
+        # ... and every frame pays at least serialization + some propagation
+        assert times[0] >= 100 * 8 / 1e6
+        # 10 x 100B back-to-back on a 1 Mb/s line: serialization alone is 8ms
+        assert times[-1] >= 10 * 100 * 8 / 1e6
+
+    asyncio.run(inner())
+
+
+def test_simulated_link_drop_accounting():
+    net = NetProfile("lossy", rtt_mean=0.001, rtt_jitter=0.0, bandwidth_bps=1e9, drop_prob=1.0)
+
+    async def inner():
+        link = SimulatedLink(net, seed=0)
+        for i in range(4):
+            await link.device.send(bytes([i]))
+        assert link.device.stats.frames_dropped == 4
+        link.device.close()  # close still rides through
+        assert await link.server.recv() is None
+
+    asyncio.run(inner())
+
+
+def test_make_link_factory():
+    assert isinstance(make_link("loopback"), LoopbackLink)
+    assert isinstance(make_link("sim", NETS["wlan"]), SimulatedLink)
+    with pytest.raises(ValueError):
+        make_link("sim")
+    with pytest.raises(ValueError):
+        make_link("tcp")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over the wire
+# ---------------------------------------------------------------------------
+
+
+def _models():
+    tcfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(), name="tgt", vocab_size=V, num_layers=3
+    )
+    dcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=V)
+    dm, tm = build_model(dcfg), build_model(tcfg)
+    dp = perturb_params(dm.init_params(jax.random.key(1)), 0.03)  # partial acceptance
+    return dm, dp, tm, tm.init_params(jax.random.key(2))
+
+
+def _run_fleet(dm, dp, tm, tp, prompts, *, policy, max_new, k_max=4, link_factory=None,
+               verify_timeout=30.0, pipeline=True):
+    n_dev = prompts.shape[0]
+    engine = ServerEngine(
+        tm, tp, n_slots=n_dev, max_len=128, k_max=k_max, policy=policy,
+        max_wait=0.01, attn_chunk=32,
+    )
+    kit = EdgeDeviceKit(dm, dp, k_max=k_max, c_th=0.3, greedy=True, attn_chunk=32)
+    retired = {}
+    orig_retire = engine.retire
+    engine.retire = lambda dev: retired.setdefault(dev, orig_retire(dev))
+
+    async def inner():
+        server = TransportServer(engine)
+        clients = []
+        for i in range(n_dev):
+            link = link_factory(i) if link_factory else LoopbackLink()
+            server.attach(link.server)
+            clients.append(
+                EdgeClient(
+                    kit, i, np.asarray(prompts[i]), link.device,
+                    max_new=max_new, max_len=128, pipeline=pipeline,
+                    verify_timeout=verify_timeout, admit_timeout=verify_timeout,
+                    seed=100 + i,
+                )
+            )
+        outs = await asyncio.gather(*(c.run() for c in clients))
+        for _ in range(500):
+            if not engine.streams:
+                break
+            await asyncio.sleep(0.01)
+        stats = server.stats()
+        await server.stop()
+        return outs, clients, stats
+
+    outs, clients, stats = asyncio.run(inner())
+    return outs, clients, stats, retired
+
+
+def test_transport_loopback_matches_lockstep_reference():
+    """Zero-latency loopback, continuous policy, pipelining on: the full wire
+    path must be output-identical to sled_generate."""
+    dm, dp, tm, tp = _models()
+    B, max_new = 3, 10
+    prompts = jax.random.randint(jax.random.key(3), (B, 12), 0, V)
+    outs, clients, stats, _ = _run_fleet(
+        dm, dp, tm, tp, prompts, policy="continuous", max_new=max_new
+    )
+    ref, _, _ = sled_generate(
+        dm, dp, tm, tp, prompts, max_new=max_new, k_max=4, c_th=0.3, greedy=True
+    )
+    np.testing.assert_array_equal(np.array(outs), np.asarray(ref))
+    assert stats.streams_served == B
+    assert stats.bytes_rx > 0 and stats.bytes_tx > 0  # wire stats populated
+    assert stats.fallback_tokens == 0
+    # rejections happened, so the pipelined speculation must have missed too
+    assert stats.acceptance_rate < 1.0
+    assert sum(c.stats.pipeline_misses for c in clients) > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["static", "deadline"])
+def test_transport_loopback_all_policies(policy):
+    dm, dp, tm, tp = _models()
+    B, max_new = 2, 8
+    prompts = jax.random.randint(jax.random.key(4), (B, 12), 0, V)
+    outs, _, _, _ = _run_fleet(dm, dp, tm, tp, prompts, policy=policy, max_new=max_new)
+    ref, _, _ = sled_generate(
+        dm, dp, tm, tp, prompts, max_new=max_new, k_max=4, c_th=0.3, greedy=True
+    )
+    np.testing.assert_array_equal(np.array(outs), np.asarray(ref))
+
+
+@pytest.mark.slow
+def test_transport_sim_link_matches_reference():
+    """Latency and jitter (lossless) reorder nothing and change no tokens."""
+    dm, dp, tm, tp = _models()
+    B, max_new = 2, 8
+    prompts = jax.random.randint(jax.random.key(5), (B, 12), 0, V)
+    fast = NetProfile("fast", rtt_mean=0.004, rtt_jitter=0.002, bandwidth_bps=1e8)
+    outs, _, _, _ = _run_fleet(
+        dm, dp, tm, tp, prompts, policy="continuous", max_new=max_new,
+        link_factory=lambda i: SimulatedLink(fast, seed=i),
+    )
+    ref, _, _ = sled_generate(
+        dm, dp, tm, tp, prompts, max_new=max_new, k_max=4, c_th=0.3, greedy=True
+    )
+    np.testing.assert_array_equal(np.array(outs), np.asarray(ref))
+
+
+class _DropNthDraft(LoopbackLink):
+    """Loopback that eats exactly the n-th DraftPacket on the uplink."""
+
+    def __init__(self, n: int):
+        super().__init__()
+        self._n = n
+        self._count = 0
+        inner_put = self.device._out.put
+
+        async def put(frame):
+            msg, _ = codec.decode_frame(frame)
+            if isinstance(msg, codec.DraftPacket):
+                self._count += 1
+                if self._count == self._n:
+                    self.device.stats.frames_dropped += 1
+                    return
+            await inner_put(frame)
+
+        self.device._out.put = put
+
+
+@pytest.mark.slow
+def test_transport_fallback_resync_on_lost_request():
+    """A lost DraftPacket times out device-side: the device releases its
+    drafts locally (§III-A) and the server force-extends the stream, so both
+    sides stay token-identical even though the round was never verified."""
+    dm, dp, tm, tp = _models()
+    max_new = 10
+    prompts = jax.random.randint(jax.random.key(6), (1, 12), 0, V)
+    link = _DropNthDraft(2)
+    outs, clients, stats, retired = _run_fleet(
+        dm, dp, tm, tp, prompts, policy="continuous", max_new=max_new,
+        link_factory=lambda i: link, verify_timeout=1.5,
+    )
+    c = clients[0]
+    assert c.stats.fallback_rounds == 1
+    assert c.stats.fallback_tokens > 0
+    assert stats.fallback_tokens == c.stats.fallback_tokens
+    assert stats.fallback_rounds == 1
+    assert len(outs[0]) == max_new
+    # client and server committed streams agree exactly, including the
+    # unverified fallback run
+    assert retired[0].committed == c.device.committed
+
+
+# ---------------------------------------------------------------------------
+# engine hooks behind the transport
+# ---------------------------------------------------------------------------
+
+
+def test_engine_cancel_and_force_extend():
+    _, _, tm, tp = _models()
+    engine = ServerEngine(tm, tp, n_slots=1, max_len=64, k_max=4, attn_chunk=32)
+    prompt = jax.random.randint(jax.random.key(7), (8,), 0, V)
+    engine.admit(0, prompt, 0.0)
+    assert not engine.cancel_request(0)  # nothing queued
+    engine.submit(0, np.asarray([1, 2, 3], np.int32), 0.0)
+    assert engine.cancel_request(0)
+    assert engine.queue_depth == 0
+
+    before_len = int(engine.pool.lengths()[0])
+    stream = engine.streams[0]
+    prev = engine.force_extend(0, np.asarray([9, 8, 7], np.int32))
+    assert prev == 7 and stream.prev_token == 7
+    assert stream.committed[-3:] == [9, 8, 7]
+    assert int(engine.pool.lengths()[0]) == before_len + 3
+    assert engine.stats(1.0).fallback_tokens == 3
+    # the stream still verifies fine from the resynced tail
+    engine.submit(0, np.asarray([1], np.int32), 1.0)
+    verdicts = engine.step(1.1)
+    assert verdicts and verdicts[0].device_id == 0
