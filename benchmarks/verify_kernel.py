@@ -6,16 +6,28 @@ cost model, and compare bytes moved against the Pallas kernel's analytic
 minimum (stream KV exactly once + write O(Sq) output).  Correctness of the
 kernel itself is covered by tests/test_kernels.py (interpret-mode sweeps).
 
-``--engine`` compares the paged (slot-gather/scatter) verify step against
-the dense lock-step verify step the same way: both are lowered for matched
-shapes and their HLO byte totals quantify what continuous batching pays for
-arbitrary row-subset dispatch (the gather/scatter tax a paged attention
-kernel would eliminate — see ROADMAP).
+``--engine`` lowers THREE verify-step variants for matched bucket shapes
+and compares trip-aware HLO bytes:
+
+  dense        lock-step verify over a dense (bucket,)-batched cache — the
+               floor continuous batching is measured against
+  gather-paged the PR-1 fallback: gather the scheduled pool rows into a
+               dense sub-cache, verify, scatter everything back (the
+               "paging tax" — still what SSM/hybrid caches pay)
+  slot-paged   the slot-indexed fast path: the forward runs directly
+               against the pool, attention streams slot-indexed chunks and
+               only the K+1 fresh rows are written back
+               (verification.make_paged_verify_step(paged_attention=True),
+               mirrored on TPU by kernels/verify_attn.verify_attention_paged)
+
+``--json PATH`` records the rows as a BENCH JSON artifact so CI can track
+the paging-tax trajectory across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -24,17 +36,20 @@ from benchmarks.common import emit
 from repro.models.layers import flash_attention
 from repro.roofline.hlo_cost import HloCostModel
 
+KV_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "int8": jnp.int8}
 
-def run(quick: bool = False) -> list:
+
+def run(quick: bool = False, kv_dtype: str = "bf16") -> list:
     rows = []
+    kdt = KV_DTYPES[kv_dtype]
     shapes = [
         (8, 5, 48, 1, 4096, 128),   # granite-34b-like MQA verify
         (8, 5, 32, 4, 4096, 128),   # qwen3-moe-like GQA verify
     ] if not quick else [(4, 5, 8, 1, 1024, 64)]
     for (B, Sq, Hq, Hkv, Skv, D) in shapes:
         q = jax.ShapeDtypeStruct((B, Sq, Hq, D), jnp.bfloat16)
-        k = jax.ShapeDtypeStruct((B, Skv, Hkv, D), jnp.bfloat16)
-        v = jax.ShapeDtypeStruct((B, Skv, Hkv, D), jnp.bfloat16)
+        k = jax.ShapeDtypeStruct((B, Skv, Hkv, D), kdt)
+        v = jax.ShapeDtypeStruct((B, Skv, Hkv, D), kdt)
         kv_valid = jax.ShapeDtypeStruct((B,), jnp.int32)
 
         def xla_path(q, k, v, kv_valid):
@@ -44,11 +59,15 @@ def run(quick: bool = False) -> list:
 
         lowered = jax.jit(xla_path).lower(q, k, v, kv_valid)
         costs = HloCostModel(lowered.compile().as_text()).totals()
-        kv_bytes = 2 * B * Skv * Hkv * D * 2  # stream K and V exactly once
-        out_bytes = 2 * B * Sq * Hq * D * 2
+        # kernel floor: stream K and V exactly once at the CACHE dtype
+        # (int8-quantized caches stream half the bf16 bytes), read q + write
+        # o once at the activation dtype
+        kv_bytes = 2 * B * Skv * Hkv * D * jnp.dtype(kdt).itemsize
+        out_bytes = 2 * B * Sq * Hq * D * jnp.dtype(jnp.bfloat16).itemsize
         kernel_min = kv_bytes + out_bytes
         rows.append({
             "shape": f"B{B}xSq{Sq}xHq{Hq}/{Hkv}xS{Skv}xD{D}",
+            "kv_dtype": kv_dtype,
             "xla_bytes_mb": round(costs["bytes"] / 1e6, 1),
             "kernel_min_mb": round(kernel_min / 1e6, 1),
             "traffic_ratio": round(costs["bytes"] / kernel_min, 2),
@@ -59,9 +78,11 @@ def run(quick: bool = False) -> list:
 
 
 def run_engine(quick: bool = False) -> list:
-    """Lower dense vs paged verify steps for matched bucket shapes and
-    compare trip-aware HLO bytes: the paged step's extra traffic is the
-    row gather/scatter that buys arbitrary-subset continuous batching."""
+    """Lower dense vs gather-paged vs slot-indexed-paged verify steps for
+    matched bucket shapes and compare trip-aware HLO bytes.  The gather
+    variant's surplus is the row gather/scatter paging tax; the slot-indexed
+    variant must collapse to ~the dense step's traffic (acceptance: within
+    ~1.1x at every bucket size)."""
     from repro.configs.base import get_config
     from repro.core import verification
     from repro.models.model_zoo import build_model
@@ -81,30 +102,58 @@ def run_engine(quick: bool = False) -> list:
         slots = jnp.arange(bucket, dtype=jnp.int32)
 
         dense = verification.make_verify_step(model, greedy=True, attn_chunk=32)
+        gather = verification.make_paged_verify_step(
+            model, scratch_slot=n_slots, greedy=True, attn_chunk=32,
+            paged_attention=False,
+        )
         paged = verification.make_paged_verify_step(
-            model, scratch_slot=n_slots, greedy=True, attn_chunk=32
+            model, scratch_slot=n_slots, greedy=True, attn_chunk=32,
+            paged_attention=True,
         )
-        dense_hlo = jax.jit(dense).lower(params, dense_cache, batch).compile().as_text()
-        paged_hlo = (
-            jax.jit(paged).lower(params, pool, slots, batch).compile().as_text()
-        )
-        d_bytes = HloCostModel(dense_hlo).totals()["bytes"]
-        p_bytes = HloCostModel(paged_hlo).totals()["bytes"]
+        assert paged.paged_attention and not gather.paged_attention
+
+        def lowered_bytes(fn, *args):
+            hlo = jax.jit(fn).lower(*args).compile().as_text()
+            return HloCostModel(hlo).totals()["bytes"]
+
+        d_bytes = lowered_bytes(dense, params, dense_cache, batch)
+        g_bytes = lowered_bytes(gather, params, pool, slots, batch)
+        p_bytes = lowered_bytes(paged, params, pool, slots, batch)
         rows.append({
             "bucket": bucket,
             "pool_slots": n_slots,
             "dense_bytes_mb": round(d_bytes / 1e6, 2),
-            "paged_bytes_mb": round(p_bytes / 1e6, 2),
-            "paging_tax": round(p_bytes / max(d_bytes, 1), 2),
+            "gather_bytes_mb": round(g_bytes / 1e6, 2),
+            "slot_bytes_mb": round(p_bytes / 1e6, 2),
+            "gather_tax": round(g_bytes / max(d_bytes, 1), 2),
+            "slot_tax": round(p_bytes / max(d_bytes, 1), 2),
         })
     emit(rows, "engine_verify_step")
     return rows
 
 
-if __name__ == "__main__":
+def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", action="store_true",
-                    help="compare paged vs dense verify-step HLO traffic")
+                    help="compare dense/gather-paged/slot-paged verify-step HLO traffic")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--kv-dtype", choices=sorted(KV_DTYPES), default="bf16",
+                    help="cache dtype for the kernel-vs-XLA comparison "
+                         "(kernel_min derives from it — int8 halves the floor)")
+    ap.add_argument("--json", type=str, default="",
+                    help="also write the rows as a BENCH JSON artifact")
     a = ap.parse_args()
-    (run_engine if a.engine else run)(quick=a.quick)
+    if a.engine:
+        rows = run_engine(quick=a.quick)
+        name = "engine_verify_step"
+    else:
+        rows = run(quick=a.quick, kv_dtype=a.kv_dtype)
+        name = "verify_kernel"
+    if a.json:
+        with open(a.json, "w") as f:
+            json.dump({"benchmark": name, "quick": a.quick, "rows": rows}, f, indent=2)
+        print(f"wrote {a.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ per device, shared jitted step), used by launch/serve.py and the tests.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -31,8 +32,10 @@ import numpy as np
 
 from repro.core import drafting, verification
 from repro.core.scheduler import BatchPlanner, VerifyRequest
-from repro.models.kvcache import PagedKVCache, SlotExhausted
+from repro.models.kvcache import PagedKVCache, SlotExhausted, supports_paged_attention
 from repro.models.layers import NO_MESH, MeshContext
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -138,11 +141,16 @@ class ServerEngine:
         attn_chunk: int = 32,
         ctx: MeshContext = NO_MESH,
         buckets: Optional[Sequence[int]] = None,
+        paged_attention: bool = True,
     ):
         self.model = model
         self.params = params
         self.k_max = k_max
         self.greedy = greedy
+        # slot-indexed verify attention straight out of the pool; SSM/hybrid
+        # caches fall back to gather/scatter (their recurrent state leaves
+        # are not position-indexed K/V — see models/kvcache.py)
+        self.paged_attention = bool(paged_attention) and supports_paged_attention(model.cfg)
         self.pool = PagedKVCache(model, n_slots, max_len, attn_chunk=attn_chunk)
         cap = batch_size or n_slots
         self._batch_cap = cap
@@ -168,14 +176,21 @@ class ServerEngine:
                 greedy=greedy,
                 temperature=temperature,
                 attn_chunk=attn_chunk,
+                paged_attention=self.paged_attention,
             )
         )
         self._prefill = jax.jit(
             verification.make_prefill_step(model, ctx=ctx, attn_chunk=attn_chunk)
         )
         self._extend = jax.jit(
-            verification.make_force_extend_step(model, ctx=ctx, attn_chunk=attn_chunk)
+            verification.make_force_extend_step(
+                model,
+                ctx=ctx,
+                attn_chunk=attn_chunk,
+                paged_attention=self.paged_attention,
+            )
         )
+        self.compile_log: Dict[int, float] = {}  # bucket -> warmup seconds
         self.streams: Dict[int, DeviceStream] = {}
         self.round_log: List[RoundStats] = []
         self._inflight: set = set()  # device_ids with a queued request
@@ -320,11 +335,29 @@ class ServerEngine:
                 return b
         return self.buckets[-1]
 
-    def warmup(self) -> None:
-        """Compile the verify step for every bucket size up front (batches of
+    def warmup(self, buckets: Optional[Sequence[int]] = None) -> Dict[int, float]:
+        """Compile the verify step for bucket sizes up front (batches of
         scratch-slot rows), so measured runs never pay a mid-serving compile.
-        Safe anytime: scratch contents are never read as committed state."""
-        for b in self.buckets:
+        Safe anytime: scratch contents are never read as committed state.
+
+        ``buckets`` selects a subset of ``self.buckets`` (deployments budget
+        startup by warming only the fills they expect; the rest compile
+        lazily on first dispatch).  Returns ``{bucket: compile_seconds}``
+        for this call — also accumulated in ``self.compile_log`` and logged
+        at INFO so startup budgets are observable (ROADMAP "bucket
+        compilation budget")."""
+        if buckets is None:
+            selected = list(self.buckets)
+        else:
+            selected = sorted(set(int(b) for b in buckets))
+            unknown = [b for b in selected if b not in self.buckets]
+            if unknown:
+                raise ValueError(
+                    f"unknown warmup buckets {unknown}; engine buckets are {self.buckets}"
+                )
+        times: Dict[int, float] = {}
+        for b in selected:
+            t0 = time.perf_counter()
             vb = verification.make_verify_batch(
                 jnp.zeros((b,), jnp.int32),
                 jnp.zeros((b, self.k_max), jnp.int32),
@@ -334,6 +367,11 @@ class ServerEngine:
             )
             slots = jnp.full((b,), self.pool.scratch_slot, jnp.int32)
             _, self.pool.cache = self._verify(self.params, self.pool.cache, slots, vb)
+            jax.block_until_ready(self.pool.cache["length"])
+            times[b] = time.perf_counter() - t0
+            log.info("warmup: bucket %d verify step ready in %.2fs", b, times[b])
+        self.compile_log.update(times)
+        return times
 
     # -- the serving hot loop ------------------------------------------------
 

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.speculative import VerifyResult, speculative_verify
-from repro.models.kvcache import gather_slots, scatter_slots
+from repro.models.kvcache import gather_slots, scatter_slots, supports_paged_attention
 from repro.models.layers import MeshContext, NO_MESH
 
 
@@ -94,31 +94,41 @@ def make_paged_verify_step(
     greedy: bool = True,
     temperature: float = 1.0,
     attn_chunk: int = 1024,
+    paged_attention: bool = True,
 ):
     """Slot-indexed verify step for continuous batching over a row pool.
 
     Returns ``verify_step(params, pool, slots, batch) -> (VerifyResult, pool')``
     where ``pool`` is a PagedKVCache.cache pytree, ``slots`` is (B_bucket,)
     int32 pool-row indices, and ``batch`` is a padded verify request of the
-    same bucket size.  Rows are gathered into a dense sub-cache, verified by
-    the model's ordinary decode_forward/commit path, and scattered back —
-    the jitted shapes depend only on (bucket, k_max), never on which devices
-    happen to be scheduled, so heterogeneous partial fills reuse one
-    executable per bucket.
+    same bucket size.  The jitted shapes depend only on (bucket, k_max),
+    never on which devices happen to be scheduled, so heterogeneous partial
+    fills reuse one executable per bucket.
 
-    Padding convention: unused entries point at ``scratch_slot`` with
-    ``lengths = 0``; the step resets the scratch row's committed length so
-    repeated padding can never walk scratch state off the end of the buffer.
+    Two dispatch modes (kvcache.py module note):
+
+      * ``paged_attention=True`` (default) on attention-cache families: the
+        forward runs directly against the pool — ``decode_forward(slots=)``
+        scatters the K+1 fresh K/V rows into pool rows and attention streams
+        slot-indexed chunks, so the per-round gather/scatter round-trip of
+        every cache leaf disappears; commit is an O(B) ``length`` update at
+        the slot rows (rollback stays O(1)).
+      * gather fallback (``paged_attention=False``, or any SSM/hybrid model
+        — their recurrent state leaves cannot be slot-indexed): rows are
+        gathered into a dense sub-cache, verified by the model's ordinary
+        decode_forward/commit path, and scattered back.
+
+    Padding convention (both modes): unused entries point at
+    ``scratch_slot`` with ``lengths = 0``; the step resets the scratch row's
+    committed length so repeated padding can never walk scratch state off
+    the end of the buffer.
     """
+    use_paged = paged_attention and supports_paged_attention(model.cfg)
 
-    def verify_step(params, pool, slots, batch) -> Tuple[VerifyResult, Any]:
-        sub = gather_slots(pool, slots)
-        h, ck_sub, _ = model.decode_forward(
-            params, sub, batch["tokens_in"], ctx, attn_chunk=attn_chunk
-        )
+    def _verify_logits(params, h, batch) -> VerifyResult:
         logits = model.lm_head(params, h)  # (B_bucket, K+1, V) fp32
         key = jax.random.key(batch["seed"])
-        res = speculative_verify(
+        return speculative_verify(
             batch["draft_tokens"],
             logits,
             key,
@@ -128,15 +138,39 @@ def make_paged_verify_step(
             temperature=temperature,
             greedy=greedy,
         )
+
+    def paged_verify_step(params, pool, slots, batch) -> Tuple[VerifyResult, Any]:
+        base_len = jnp.take(pool["length"], slots, axis=0)
+        h, new_pool, _ = model.decode_forward(
+            params, pool, batch["tokens_in"], ctx, attn_chunk=attn_chunk, slots=slots
+        )
+        res = _verify_logits(params, h, batch)
+        # commit = per-slot length bump; duplicate scratch entries race, but
+        # the scratch row is reset right after (and never read as committed)
+        length = new_pool["length"].at[slots].set(
+            (base_len + res.n_commit).astype(jnp.int32)
+        )
+        length = length.at[scratch_slot].set(0)
+        return res, {**new_pool, "length": length}
+
+    def gather_verify_step(params, pool, slots, batch) -> Tuple[VerifyResult, Any]:
+        sub = gather_slots(pool, slots)
+        h, ck_sub, _ = model.decode_forward(
+            params, sub, batch["tokens_in"], ctx, attn_chunk=attn_chunk
+        )
+        res = _verify_logits(params, h, batch)
         new_sub = model.commit(ck_sub, res.n_commit)
         new_pool = scatter_slots(pool, slots, new_sub)
         new_pool["length"] = new_pool["length"].at[scratch_slot].set(0)
         return res, new_pool
 
+    verify_step = paged_verify_step if use_paged else gather_verify_step
+    verify_step.paged_attention = use_paged  # introspection for engine/tests
     return verify_step
 
 
-def make_force_extend_step(model, *, ctx: MeshContext = NO_MESH, attn_chunk: int = 1024):
+def make_force_extend_step(model, *, ctx: MeshContext = NO_MESH, attn_chunk: int = 1024,
+                           paged_attention: bool = True):
     """Slot-indexed forced cache extension (no verification, no sampling).
 
     Returns ``extend_step(params, pool, slots, tokens_in, n) -> pool'`` that
@@ -146,9 +180,24 @@ def make_force_extend_step(model, *, ctx: MeshContext = NO_MESH, attn_chunk: int
     drafts to the user, so the server force-commits those exact tokens into
     the stream's row and verification resumes from the new tail — lossy by
     construction (that is the paper's fallback trade), but state-consistent.
-    """
 
-    def extend_step(params, pool, slots, tokens_in, n):
+    Same two dispatch modes as ``make_paged_verify_step``: pool-resident
+    slot-indexed forward on attention families, gather/scatter fallback
+    otherwise.
+    """
+    use_paged = paged_attention and supports_paged_attention(model.cfg)
+
+    def paged_extend_step(params, pool, slots, tokens_in, n):
+        base_len = jnp.take(pool["length"], slots, axis=0)
+        _, new_pool, _ = model.decode_forward(
+            params, pool, tokens_in, ctx, attn_chunk=attn_chunk, slots=slots
+        )
+        length = new_pool["length"].at[slots].set(
+            (base_len + n).astype(jnp.int32)
+        )
+        return {**new_pool, "length": length}
+
+    def gather_extend_step(params, pool, slots, tokens_in, n):
         sub = gather_slots(pool, slots)
         _, ck_sub, _ = model.decode_forward(
             params, sub, tokens_in, ctx, attn_chunk=attn_chunk
@@ -156,6 +205,8 @@ def make_force_extend_step(model, *, ctx: MeshContext = NO_MESH, attn_chunk: int
         new_sub = model.commit(ck_sub, n.astype(jnp.int32))
         return scatter_slots(pool, slots, new_sub)
 
+    extend_step = paged_extend_step if use_paged else gather_extend_step
+    extend_step.paged_attention = use_paged
     return extend_step
 
 

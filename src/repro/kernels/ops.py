@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.kernels.ssd_scan import ssd_scan_chunked
 from repro.kernels.verify_attn import verify_attention_packed
+from repro.kernels.verify_attn import verify_attention_paged as _paged_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -31,6 +32,30 @@ def verify_attention(
     qp = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, Sq * G, D)
     o = verify_attention_packed(qp, k, v, kv_valid.astype(jnp.int32), sq=Sq,
                                 block_k=block_k, interpret=interpret)
+    return o.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Sq, Hq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def verify_attention_paged(
+    q: jax.Array,         # (B, Sq, Hq, D)
+    k_pool: jax.Array,    # (n_slots+1, Skv, Hkv, D) — PagedKVCache pool rows
+    v_pool: jax.Array,
+    slots: jax.Array,     # (B,) int32 pool row per batch entry
+    kv_valid: jax.Array,  # (B,)
+    *,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Slot-indexed verification attention straight out of the cache pool —
+    the scalar-prefetched index maps pick pool row ``slots[b]`` per chunk,
+    so no gathered dense K/V ever exists (see verify_attn.py)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    qp = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, Sq * G, D)
+    o = _paged_kernel(qp, k_pool, v_pool, slots.astype(jnp.int32),
+                      kv_valid.astype(jnp.int32), sq=Sq, block_k=block_k,
+                      interpret=interpret)
     return o.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Sq, Hq, D)
 
 

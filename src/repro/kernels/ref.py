@@ -32,6 +32,25 @@ def verify_attention_ref(
     return o.reshape(B, Sq, Hq, D).astype(q.dtype)
 
 
+def verify_attention_paged_ref(
+    q: jax.Array,         # (B, Sq, Hq, D)
+    k_pool: jax.Array,    # (n_slots+1, Skv, Hkv, D) cache-row pool
+    v_pool: jax.Array,
+    slots: jax.Array,     # (B,) int32 pool row per batch entry
+    kv_valid: jax.Array,  # (B,)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Pool-indexed oracle: materialise the gather, then dense attention.
+
+    The Pallas paged kernel must match this bit-for-tolerance — the gather
+    here is the very traffic the kernel's scalar-prefetched index maps
+    eliminate, but as an oracle it is the cleanest statement of semantics.
+    """
+    k = jnp.take(k_pool, slots, axis=0)
+    v = jnp.take(v_pool, slots, axis=0)
+    return verify_attention_ref(q, k, v, kv_valid, scale=scale)
+
+
 def ssd_scan_ref(
     x: jax.Array,    # (B, S, H, P)
     dt: jax.Array,   # (B, S, H) fp32, post-softplus

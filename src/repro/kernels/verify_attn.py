@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: SLED batched-verification attention.
+"""Pallas TPU kernels: SLED batched-verification attention (dense + paged).
 
 The server's hot loop attends Sq = K+1 fresh tokens per request against a
 long KV cache.  TPU adaptation (vs the CUDA "append attention" kernels GPU
@@ -14,11 +14,41 @@ serving engines use — DESIGN.md §3):
     kv-chunk grid axis (TPU grids iterate the last axis sequentially);
   * the causal offset mask (query i sits at absolute position
     kv_valid - Sq + i) is computed from iota over packed rows — no mask
-    tensor is ever materialised.
+    tensor is ever materialised;
+  * ``Skv`` need not divide ``block_k``: the final partial chunk is handled
+    by masking the out-of-range lanes (scores forced to NEG_INF, the
+    corresponding V rows zeroed so unspecified out-of-bounds data can never
+    poison the accumulator).
+
+Two entry points share that math:
+
+``verify_attention_packed`` — dense layout: each batch row owns its own
+contiguous (Skv, Hkv, D) K/V buffer.  The lock-step server path.
+
+``verify_attention_paged`` — pool layout for continuous batching: K/V live
+in one shared pool of cache rows shaped ``(n_slots + 1, Skv, Hkv, D)`` (the
++1 row is the scratch slot that pads partial batches), and a ``(B,)``
+``slots`` vector names which pool row each batch entry attends against.
+``slots`` is a *scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``):
+it lands in SMEM before the kernel body runs, so the BlockSpec index maps
+can compute each K/V tile's HBM address as ``(slots[b], j, h, 0)`` — the
+grid walks ``(B, Hkv, n_blk)`` and every chunk DMA reads straight out of
+the pool row the slot map points at.  Nothing is ever gathered into a dense
+sub-batch and nothing but the O(K+1) fresh rows is ever written back, which
+deletes the gather/scatter paging tax the engine's verify step used to pay
+(benchmarks/verify_kernel.py --engine measures it).  Duplicate slot ids are
+legal (padding rows all point at the scratch slot); their outputs are
+garbage by construction and discarded by the caller.
+
+The gather path still exists for model families whose caches hold
+non-attention leaves (Mamba2 SSM state / conv windows, hybrid checkpoints):
+those leaves are recurrent state, not position-indexed K/V, so they cannot
+be slot-indexed by this kernel and keep riding ``kvcache.gather_slots`` —
+they are tiny next to the attention pool.
 
 Layouts: q is pre-packed to (B, Hkv, Sq*G, D) by ops.py (tiny transpose);
-k/v stay (B, Skv, Hkv, D) — BlockSpec index maps stride the head dim, so
-the multi-GB cache is never transposed.
+k/v stay (B, Skv, Hkv, D) / (n_slots+1, Skv, Hkv, D) — BlockSpec index maps
+stride the head dim, so the multi-GB cache is never transposed.
 """
 from __future__ import annotations
 
@@ -34,8 +64,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(kv_valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, block_k: int, sq: int, scale: float):
+def _attend_chunk(kv_valid, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, block_k: int, sq: int, skv: int, scale: float):
+    """One online-softmax step over the current kv chunk (grid axis 2).
+
+    Shared by the dense and paged kernels — only how the chunk was addressed
+    differs (BlockSpec index maps), never the math.  Requires
+    ``kv_valid >= sq`` (the Sq fresh rows are in the cache), which makes the
+    first chunk contain at least one valid position for every packed row.
+    """
     j_blk = pl.program_id(2)
     n_blk = pl.num_programs(2)
 
@@ -54,13 +91,17 @@ def _kernel(kv_valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale  # (rows, block_k)
 
-    kv_valid = kv_valid_ref[0]
     # packed row r -> query index i = r // G; abs position = kv_valid - Sq + i
     g = rows // sq
     i_vec = jax.lax.broadcasted_iota(jnp.int32, (rows, block_k), 0) // g
     j_vec = jax.lax.broadcasted_iota(jnp.int32, (rows, block_k), 1) + j_blk * block_k
-    mask = j_vec <= (kv_valid - sq + i_vec)
+    mask = (j_vec <= (kv_valid - sq + i_vec)) & (j_vec < skv)
     s = jnp.where(mask, s, NEG_INF)
+    # Partial tail chunk: lanes past Skv read unspecified data (NaN in
+    # interpret mode).  Their weights are exactly 0, but 0 * NaN = NaN would
+    # still poison acc — zero the out-of-range V rows explicitly.
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0) + j_blk * block_k
+    v = jnp.where(col < skv, v, jnp.zeros((), v.dtype))
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -76,6 +117,23 @@ def _kernel(kv_valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     @pl.when(j_blk == n_blk - 1)
     def _finalize():
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _kernel(kv_valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_k: int, sq: int, skv: int, scale: float):
+    _attend_chunk(kv_valid_ref[0], q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, block_k=block_k, sq=sq, skv=skv, scale=scale)
+
+
+def _paged_kernel(slots_ref, kv_valid_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref,
+                  *, block_k: int, sq: int, skv: int, scale: float):
+    # slots_ref is consumed by the BlockSpec index maps (scalar prefetch);
+    # the body only needs the per-request valid length.
+    del slots_ref
+    b = pl.program_id(0)
+    _attend_chunk(kv_valid_ref[b], q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, block_k=block_k, sq=sq, skv=skv, scale=scale)
 
 
 def verify_attention_packed(
@@ -94,10 +152,10 @@ def verify_attention_packed(
     if scale is None:
         scale = 1.0 / math.sqrt(D)
     block_k = min(block_k, Skv)
-    assert Skv % block_k == 0, "cache buffers are sized to block multiples"
-    n_blk = Skv // block_k
+    n_blk = -(-Skv // block_k)  # partial tail chunk is masked in-kernel
 
-    kernel = functools.partial(_kernel, block_k=block_k, sq=sq, scale=float(scale))
+    kernel = functools.partial(_kernel, block_k=block_k, sq=sq, skv=Skv,
+                               scale=float(scale))
     return pl.pallas_call(
         kernel,
         grid=(B, Hkv, n_blk),
@@ -116,3 +174,58 @@ def verify_attention_packed(
         ],
         interpret=interpret,
     )(kv_valid, q, k, v)
+
+
+def verify_attention_paged(
+    q: jax.Array,        # (B, Hkv, rows=Sq*G, D)
+    k_pool: jax.Array,   # (n_slots+1, Skv, Hkv, D) — the PagedKVCache pool
+    v_pool: jax.Array,
+    slots: jax.Array,     # (B,) int32 pool row per batch entry (dups legal)
+    kv_valid: jax.Array,  # (B,) int32 valid entries incl. the Sq fresh rows
+    *,
+    sq: int,
+    scale: Optional[float] = None,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Slot-indexed verification attention over a shared cache-row pool.
+
+    ``slots`` and ``kv_valid`` ride scalar prefetch: the index maps address
+    each (block_k, D) K/V tile as ``(slots[b], j, h, 0)`` directly in the
+    pool, so the chunk DMAs stream exactly the scheduled rows — no dense
+    gather ever exists (see module docstring).
+    """
+    B, Hkv, rows, D = q.shape
+    Skv = k_pool.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, Skv)
+    n_blk = -(-Skv // block_k)
+
+    kernel = functools.partial(_paged_kernel, block_k=block_k, sq=sq, skv=Skv,
+                               scale=float(scale))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # slots, kv_valid
+        grid=(B, Hkv, n_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, D), lambda b, h, j, slots, kvv: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, D), lambda b, h, j, slots, kvv: (slots[b], j, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, D), lambda b, h, j, slots, kvv: (slots[b], j, h, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, D), lambda b, h, j, slots, kvv: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),   # m
+            pltpu.VMEM((rows, 1), jnp.float32),   # l
+            pltpu.VMEM((rows, D), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rows, D), q.dtype),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), kv_valid.astype(jnp.int32), q, k_pool, v_pool)

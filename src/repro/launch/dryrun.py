@@ -47,6 +47,8 @@ def run_cell(cfg, shape, mesh, mesh_name: str, *, verbose: bool = True,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     # trip-count-aware HLO walk: XLA's cost_analysis counts loop bodies ONCE
     # (scan-over-layers / grad-accum would be undercounted by 88x / 8x)

@@ -68,7 +68,10 @@ def build_stack(args):
         max_wait=args.max_wait,
         straggler_timeout=args.verify_timeout,
         attn_chunk=32,
+        paged_attention=args.paged_attention,
     )
+    if args.paged_attention and not engine.paged_attention:
+        print(f"paged attention unsupported for family {tcfg.family}: gather fallback")
     kit = EdgeDeviceKit(draft, dp, k_max=args.k_max, c_th=args.c_th, greedy=True, attn_chunk=32)
     return draft, dp, target, tp, engine, kit, prompts
 
@@ -256,6 +259,9 @@ def main() -> None:
                     help="draft-probability payload precision on the wire")
     ap.add_argument("--pipeline", action=argparse.BooleanOptionalAction, default=True,
                     help="draft ahead while a verify round is in flight")
+    ap.add_argument("--paged-attention", action=argparse.BooleanOptionalAction, default=True,
+                    help="slot-indexed verify attention straight out of the KV "
+                         "pool (gather/scatter fallback when off or unsupported)")
     ap.add_argument("--verify-timeout", type=float, default=30.0,
                     help="device-side round timeout before §III-A fallback "
                          "(generous default: first rounds pay jit compiles)")

@@ -53,12 +53,32 @@ def rollback(cache: Dict[str, jax.Array], new_length: jax.Array) -> Dict[str, ja
 # (B,) and every other leaf carries the batch on axis 1 (k/v: (L, B, S, H, D),
 # ssm: (L, B, H, P, N), conv: (L, B, cw-1, C), cross_k/v: (L, B, F, H, D)).
 # That makes "a device's cache" a fixed set of rows, so continuous batching
-# reduces to a slot allocator over a pool of rows plus gather/scatter of the
-# scheduled subset into a dense verify batch.  A production kernel would
-# index slots inside the attention kernel instead of materialising the
-# gather (ROADMAP); here the gathered sub-batch is what the jitted verify
-# step sees, so compiled shapes depend only on the bucket size — devices can
+# reduces to a slot allocator over a pool of rows.  Two dispatch modes share
+# the pool:
+#
+#   * slot-indexed (default for attention families): the verify forward runs
+#     DIRECTLY against the pool — per-row lengths come from length[slots],
+#     fresh K/V rows scatter into pool rows, and attention streams
+#     slot-indexed chunks (transformer.decode_forward(slots=...), mirrored
+#     on TPU by kernels/verify_attn.verify_attention_paged's
+#     scalar-prefetched index maps).  Pool traffic per round is one read of
+#     the scheduled rows plus an O(B * (K+1)) fresh-row write.
+#   * gather/scatter (fallback): the scheduled subset is materialised into a
+#     dense sub-batch, verified, and scattered back.  Still required for
+#     SSM/hybrid families whose recurrent state leaves (ssm, conv,
+#     checkpoints) are not position-indexed K/V — those leaves are tiny next
+#     to the attention pool, so the fallback tax is bounded.
+#
+# Either way compiled shapes depend only on the bucket size — devices can
 # join, leave, or idle without recompiles.
+
+
+def supports_paged_attention(cfg) -> bool:
+    """True when every cache leaf the verify forward touches is attention-
+    shaped (k/v/cross buffers + length), so the slot-indexed fast path can
+    run against the pool.  SSM and hybrid caches carry recurrent state
+    leaves that must still ride the gather/scatter fallback."""
+    return getattr(cfg, "family", None) not in ("ssm", "hybrid")
 
 
 def _batch_axis(leaf: jax.Array) -> int:

@@ -204,6 +204,13 @@ def flash_attention(
     layer: Optional[jax.Array] = None,  # stream chunks straight from a
     # stacked (L, B, S, H, D) cache buffer — avoids materialising a per-layer
     # slice copy of the cache inside the layer loop (§Perf memory fix)
+    slots: Optional[jax.Array] = None,  # (B,) pool-row indices: k/v are a
+    # PagedKVCache pool ((n_pool, S, H, D), or (L, n_pool, S, H, D) with
+    # ``layer``) and batch entry b attends against pool row slots[b].  Each
+    # kv chunk is sliced from the pool FIRST and row-indexed second, so only
+    # chunk-sized slot-indexed tiles ever materialise — the XLA mirror of
+    # kernels/verify_attn.verify_attention_paged's scalar-prefetch indexing
+    # (no step-level gather of the multi-GB cache).
     pos_offset: Optional[jax.Array] = None,  # global position of k[:, 0]
     # (sequence-parallel shards pass their shard offset)
     return_stats: bool = False,  # return (acc, m, l) un-normalised for
@@ -221,6 +228,7 @@ def flash_attention(
     B, Sq, Hq, D = q.shape
     stacked = layer is not None
     Skv, Hkv = (k.shape[2], k.shape[3]) if stacked else (k.shape[1], k.shape[2])
+    Bk = k.shape[1] if stacked else k.shape[0]  # pool rows when slots given
     G = Hq // Hkv
     if scale is None:
         scale = 1.0 / math.sqrt(D)
@@ -229,6 +237,9 @@ def flash_attention(
         if stacked:
             k = jax.lax.dynamic_index_in_dim(k, layer, 0, keepdims=False)
             v = jax.lax.dynamic_index_in_dim(v, layer, 0, keepdims=False)
+        if slots is not None:
+            k = jnp.take(k, slots, axis=0)
+            v = jnp.take(v, slots, axis=0)
         seq_ax = 1
         kv = (k.astype(jnp.float32).mean(axis=seq_ax)
               + v.astype(jnp.float32).mean(axis=seq_ax))  # one pass over K+V
@@ -258,12 +269,16 @@ def flash_attention(
     if stacked:
         def chunk_at(a, idx):
             sl = jax.lax.dynamic_slice(
-                a, (layer, 0, idx * chunk, 0, 0), (1, B, chunk, Hkv, D)
-            )
-            return sl[0]
+                a, (layer, 0, idx * chunk, 0, 0), (1, Bk, chunk, Hkv, D)
+            )[0]
+            # pool layout: slice the chunk first, row-index second — only a
+            # (B, chunk, H, D) slot-indexed tile materialises, never a dense
+            # gathered copy of the cache rows
+            return jnp.take(sl, slots, axis=0) if slots is not None else sl
     else:
         def chunk_at(a, idx):
-            return jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)
+            sl = jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)
+            return jnp.take(sl, slots, axis=0) if slots is not None else sl
 
     qg = q.reshape(B, Sq, Hkv, G, D)
 
@@ -353,6 +368,8 @@ def attention_block(
     chunk: int = 1024,
     ctx: "MeshContext" = NO_MESH,
     flash_remat: bool = False,
+    slots: Optional[jax.Array] = None,  # kv_cache is a slot pool; batch row
+    # b owns pool row slots[b] (PagedKVCache continuous batching)
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """QKV -> (optional cache append) -> flash attention -> output proj.
 
@@ -362,6 +379,10 @@ def attention_block(
     With ``cache_layer``, the cache is the stacked (L, B, S, H, D) buffer:
     only the S new rows are written (tiny scatter) and attention streams
     chunks directly from the stack — the layer loop never copies the cache.
+    With ``slots``, the cache batch axis is a PagedKVCache row pool: the
+    fresh K/V rows are scattered straight into pool rows ``slots`` and
+    attention streams slot-indexed chunks from the pool (flash_attention
+    ``slots=``) — the pool is only ever touched at O(B*S) fresh rows.
     Cross-attention ignores caches for K/V and uses ``cross_kv``.
     """
     B, S, d = x.shape
@@ -376,7 +397,7 @@ def attention_block(
         k, v = cross_kv
         out = flash_attention(
             q, k, v, q_pos=positions, kv_valid=cross_len, causal=False,
-            chunk=chunk, layer=cross_layer,
+            chunk=chunk, layer=cross_layer, slots=slots,
         )
         return (out.reshape(B, S, hq * hd) @ p["wo"], None)
 
@@ -393,6 +414,10 @@ def attention_block(
         k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
+    if slots is not None and ctx.seq_shard_kv:
+        raise NotImplementedError("slot-pool caches are not sequence-sharded")
+    if slots is not None and uniform_start is not None:
+        raise ValueError("slot-pool rows have per-row lengths; uniform_start does not apply")
     if kv_cache is not None and ctx.seq_shard_kv:
         # sequence-parallel cache: append + flash-decoding combine in one
         # shard_map (distributed/collectives.py)
@@ -417,6 +442,28 @@ def attention_block(
                      jnp.int32(0))
             ck = jax.lax.dynamic_update_slice(ck, kq, start)
             cv = jax.lax.dynamic_update_slice(cv, vq, start)
+        elif slots is not None:
+            # slot pool: batch row b appends its S fresh rows into pool row
+            # slots[b].  A static unroll of per-row dynamic_update_slice
+            # (one contiguous (1, S, H, D) window each) is the ONLY pool
+            # write of the step — a scatter here would be rewritten by XLA's
+            # scatter expander into a B*S-trip select loop over the whole
+            # pool buffer.  Duplicate scratch-slot rows overwrite in order
+            # (deterministic last-writer; scratch is never read as
+            # committed).  NB dynamic_update_slice clamps, so callers size
+            # max_len >= committed + S (same contract the engine already
+            # keeps for the dense path's drop-mode scatter).
+            for b in range(B):
+                row = slots[b].astype(jnp.int32)
+                pos = cache_len[b].astype(jnp.int32)
+                if cache_layer is not None:
+                    start = (cache_layer, row, pos, jnp.int32(0), jnp.int32(0))
+                    ck = jax.lax.dynamic_update_slice(ck, kq[b][None, None], start)
+                    cv = jax.lax.dynamic_update_slice(cv, vq[b][None, None], start)
+                else:
+                    start = (row, pos, jnp.int32(0), jnp.int32(0))
+                    ck = jax.lax.dynamic_update_slice(ck, kq[b][None], start)
+                    cv = jax.lax.dynamic_update_slice(cv, vq[b][None], start)
         else:
             b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]  # (B,1)
             s_idx = cache_len[:, None] + jnp.arange(S, dtype=jnp.int32)[None]  # (B,S)
@@ -430,7 +477,7 @@ def attention_block(
         kv_valid = cache_len + S
         out = flash_attention(
             q, ck, cv, q_pos=positions, kv_valid=kv_valid, causal=causal,
-            chunk=chunk, layer=cache_layer,
+            chunk=chunk, layer=cache_layer, slots=slots,
         )
     else:
         out = flash_attention(q, k, v, q_pos=positions, causal=causal, chunk=chunk,

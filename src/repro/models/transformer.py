@@ -110,6 +110,7 @@ def _block(
     cross_layer: Optional[jax.Array] = None,
     attn_chunk: int = 1024,
     flash_remat: bool = False,
+    slots: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]], jax.Array]:
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
     a, new_kv = L.attention_block(
@@ -117,6 +118,7 @@ def _block(
         positions=positions, kv_cache=kv, cache_len=cache_len,
         cache_layer=cache_layer, uniform_start=uniform_start,
         causal=causal, chunk=attn_chunk, ctx=ctx, flash_remat=flash_remat,
+        slots=slots,
     )
     x = x + a
     if cross is not None:
@@ -124,7 +126,7 @@ def _block(
         a, _ = L.attention_block(
             h, lp["xattn"], cfg,
             positions=positions, cross_kv=cross, cross_len=cross_len,
-            cross_layer=cross_layer, chunk=attn_chunk,
+            cross_layer=cross_layer, chunk=attn_chunk, slots=slots,
         )
         x = x + a
     h = L.apply_norm(x, lp["ln2"], cfg.norm)
@@ -248,16 +250,25 @@ def decode_forward(
     embeds: Optional[jax.Array] = None,  # override token embedding (VLM prefill)
     attn_chunk: int = 1024,
     uniform: bool = False,  # all rows share one insert position (padded static batch)
+    slots: Optional[jax.Array] = None,  # (B,) cache is a PagedKVCache pool;
+    # batch row b runs against pool row slots[b] (continuous batching)
 ) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array]:
     """Run S_new tokens against the cache starting at ``cache['length']``.
 
     Returns (hidden (B, S_new, d), cache', aux).  ``cache'`` has the new K/V
     written but ``length`` unchanged — callers commit via kvcache.rollback
     (for SLED: after the acceptance count is known).
+
+    With ``slots``, cache leaves keep their pool shape (L, n_pool, S, H, D)
+    end to end: per-row lengths come from ``length[slots]``, the K+1 fresh
+    K/V rows are scattered straight into pool rows ``slots``, and attention
+    streams slot-indexed chunks out of the stacked pool — no dense gathered
+    sub-cache and no per-layer write-back ever exist.  This is the XLA
+    mirror of the Pallas ``verify_attention_paged`` kernel's addressing.
     """
     x = L.embed_lookup(params["embed"], tokens, ctx) if embeds is None else embeds.astype(jnp.bfloat16)
     B, S, _ = x.shape
-    cache_len = cache["length"]
+    cache_len = cache["length"] if slots is None else jnp.take(cache["length"], slots, axis=0)
     positions = cache_len[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
     if "pos_embed" in params:
         x = x + params["pos_embed"][positions]
@@ -284,6 +295,17 @@ def decode_forward(
         h, k_all, v_all, aux = carry
         lp = jax.tree.map(lambda a: idx(a, l), params["layers"])
         cross = (idx(cache["cross_k"], l), idx(cache["cross_v"], l)) if cfg.is_encdec else None
+        if slots is not None:
+            # pool-resident path: hand the whole stacked pool to the block
+            # (cache_layer addressing); fresh rows scatter into slot rows,
+            # attention slot-indexes its chunks, nothing is written back
+            # wholesale — the carry is updated only at the fresh rows.
+            h, new_kv, a = _block(
+                h, lp, cfg, ctx, positions=positions, kv=(k_all, v_all),
+                cache_len=cache_len, cache_layer=l, slots=slots,
+                cross=cross, cross_len=cross_len, attn_chunk=attn_chunk,
+            )
+            return (h, new_kv[0], new_kv[1], aux + a)
         h, new_kv, a = _block(
             h, lp, cfg, ctx, positions=positions, kv=(idx(k_all, l), idx(v_all, l)),
             cache_len=cache_len, uniform_start=uniform_start,

@@ -113,8 +113,24 @@ class HloCostModel:
             if not m:
                 continue
             name, rtype, opcode, args = m.groups()
-            operands = [a.strip().lstrip("%") for a in self._split_args(args)]
+            operands = [self._operand_name(a) for a in self._split_args(args)]
             self.comps[cur].append(Op(name, opcode, rtype, operands, line))
+
+    @staticmethod
+    def _operand_name(arg: str) -> str:
+        """Extract the operand reference from one argument string.
+
+        Post-optimization HLO prints operands typed — ``f32[2,4]{1,0}
+        %name`` — so the reference is the last %-prefixed token; bare
+        ``%name`` / ``name`` forms (older printers) fall through unchanged.
+        Without this, operand byte lookups silently miss and every
+        dynamic-update-slice/scatter falls back to "charge the whole
+        buffer", burying the in-place semantics this model exists to apply.
+        """
+        for tok in reversed(arg.split()):
+            if tok.startswith("%"):
+                return tok.lstrip("%")
+        return arg.lstrip("%")
 
     @staticmethod
     def _split_args(args: str) -> List[str]:
@@ -205,9 +221,12 @@ class HloCostModel:
 
     def _fusion_kind(self, op: Op) -> str:
         """Classify a fusion by its callee's interior: dus | scatter |
-        slice | artifact | compute.  'artifact' = pure layout/precision
-        plumbing (bf16->f32 upcasts, transposed copies for CPU dot layouts)
-        that a TPU executable wouldn't materialise."""
+        gather | slice | artifact | compute.  'artifact' = pure layout/
+        precision plumbing (bf16->f32 upcasts, transposed copies for CPU dot
+        layouts) that a TPU executable wouldn't materialise; 'gather' is
+        split from 'slice' because a random-access row gather materialises
+        its result (charged), while a contiguous slice window is charged at
+        the consumer."""
         m = re.search(r"calls=%?([\w\.\-]+)", op.line)
         callee = m.group(1) if m else None
         key = (op.name, callee)
@@ -215,26 +234,91 @@ class HloCostModel:
         if cached is not None:
             return cached[0]
         kind = "compute"
-        inner = {o.opcode for o in self.comps.get(callee, [])}
+        callee_ops = self.comps.get(callee, [])
+        inner = {o.opcode for o in callee_ops}
         if "dynamic-update-slice" in inner:
             kind = "dus"
         elif "scatter" in inner:
             kind = "scatter"
-        elif inner & {"dynamic-slice", "slice", "gather"}:
+        elif "gather" in inner:
+            kind = "gather"
+        elif inner & {"dynamic-slice", "slice"}:
             kind = "slice"
         elif inner and inner <= self._ARTIFACT_OPS and not (
             inner & {"dot", "reduce", "convolution"}
         ):
             # only cheap elementwise/layout ops inside: a precision/layout hop
             kind = "artifact"
-        self._fkind_cache[key] = (kind, "convert" in inner)
+        self._fkind_cache[key] = (kind, self._storage_factor(callee_ops))
         return kind
 
-    def _fusion_has_convert(self, op: Op) -> bool:
+    # dtypes a cache/weight window is stored as (vs s32/u32/pred index
+    # plumbing, whose converts must not be mistaken for the storage hop)
+    _STORAGE_DTYPES = {"bf16", "f16", "f32", "f64", "s8", "u8",
+                       "f8e4m3fn", "f8e5m2", "s4", "u4"}
+
+    def _storage_factor(self, callee_ops: List[Op]) -> float:
+        """Width factor for a fused storage->compute dtype hop: consumers
+        stream the window at its STORAGE width (bf16->f32 halves, int8->f32
+        quarters).  XLA:CPU emulates narrow dtypes with widened buffers plus
+        convert round-trips (f32 -> bf16 -> f32), so the storage width is
+        the narrowest storage dtype any convert in the fusion touches;
+        converts on s32/pred index plumbing are ignored."""
+        if not callee_ops:
+            return 1.0
+        root = callee_ops[-1].result_shapes  # ROOT is the last op parsed
+        if not root:
+            return 1.0
+        root_w = _DTYPE_BYTES.get(root[0][0], 4)
+        by_name = {o.name: o for o in callee_ops}
+        widths = []
+        for o in callee_ops:
+            if o.opcode != "convert" or not o.operands:
+                continue
+            sides = [o.result_shapes]
+            src_op = by_name.get(o.operands[0])
+            if src_op is not None:
+                sides.append(src_op.result_shapes)
+            for shapes in sides:
+                if shapes and shapes[0][0] in self._STORAGE_DTYPES:
+                    widths.append(_DTYPE_BYTES.get(shapes[0][0], 4))
+        if not widths or not root_w:
+            return 1.0
+        return min(min(widths), root_w) / root_w
+
+    def _update_bytes(self, op: Op, table: Dict[str, int]) -> int:
+        """Size of the in-place update window(s) of a dus/scatter (op or
+        fusion-wrapped).  HLO fixes the operand order — dynamic-update-slice
+        (operand, update, starts...), scatter(operands..., indices,
+        updates...) — so the update is positional, never "the smallest
+        operand" (start indices are scalars and would always win a min).
+        Fusions may loop-fuse SEVERAL updates (e.g. a per-row append unroll
+        lands as one fusion with B inner dus ops): all windows are summed."""
+        def from_inner(o: Op, t: Dict[str, int]) -> int:
+            if o.opcode == "dynamic-update-slice" and len(o.operands) > 1:
+                return t.get(o.operands[1], 0)
+            if o.opcode == "scatter" and len(o.operands) >= 3:
+                n = (len(o.operands) - 1) // 2  # N operands, indices, N updates
+                return sum(t.get(u, 0) for u in o.operands[-n:])
+            return 0
+
+        if op.opcode in ("dynamic-update-slice", "scatter"):
+            upd = from_inner(op, table)
+            return upd if upd else op.result_bytes
+        m = re.search(r"calls=%?([\w\.\-]+)", op.line)
+        callee = m.group(1) if m else None
+        if callee in self.comps:
+            inner_table = self._symbol_bytes(callee)
+            total = sum(from_inner(o, inner_table) for o in self.comps[callee])
+            if total:
+                return total
+        return op.result_bytes
+
+    def _fusion_convert_factor(self, op: Op) -> float:
         self._fusion_kind(op)
         m = re.search(r"calls=%?([\w\.\-]+)", op.line)
         callee = m.group(1) if m else None
-        return self._fkind_cache.get((op.name, callee), ("", False))[1]
+        return self._fkind_cache.get((op.name, callee), ("", 1.0))[1]
 
     def _is_artifact(self, op: Op) -> bool:
         if op.opcode in ("convert", "bitcast", "reshape", "transpose", "copy"):
@@ -243,18 +327,31 @@ class HloCostModel:
             return self._fusion_kind(op) == "artifact"
         return False
 
+    def _is_artifact_call(self, op: Op) -> bool:
+        """A ``call`` whose interior is pure layout/precision plumbing (e.g.
+        an outlined int8-dequant: convert+multiply) — consumers stream the
+        original storage, not the widened call result."""
+        if op.opcode != "call":
+            return False
+        m = re.search(r"to_apply=%?([\w\.\-]+)", op.line)
+        inner = self.comps.get(m.group(1) if m else "", [])
+        return bool(inner) and all(
+            o.opcode in self._ARTIFACT_OPS or self._is_artifact(o) for o in inner
+        )
+
     def _symbol_bytes(self, cname: str) -> Dict[str, int]:
         table: Dict[str, int] = {}
         for op in self.comps[cname]:
-            if self._is_artifact(op) and op.operands:
+            if (self._is_artifact(op) or self._is_artifact_call(op)) and op.operands:
                 # passthrough: consumers of an upcast/copy read the original
                 src = table.get(op.operands[0], op.result_bytes)
                 table[op.name] = min(src, op.result_bytes)
-            elif op.opcode == "fusion" and self._fusion_kind(op) == "slice":
-                # fused slice(+convert): consumers read the slice at its
-                # pre-upcast width
-                rb = op.result_bytes
-                table[op.name] = rb // 2 if self._fusion_has_convert(op) else rb
+            elif op.opcode == "fusion" and self._fusion_kind(op) in ("slice", "gather"):
+                # fused slice/gather(+convert): consumers read the window at
+                # its storage width (the dtype hop is a CPU-backend artifact
+                # — TPU streams the cache at its storage dtype, so an int8
+                # cache read through an int8->f32 convert charges 1/4)
+                table[op.name] = int(op.result_bytes * self._fusion_convert_factor(op))
             else:
                 table[op.name] = op.result_bytes
         return table
@@ -273,19 +370,23 @@ class HloCostModel:
         fkind = self._fusion_kind(op) if oc == "fusion" else ""
         if oc == "dynamic-update-slice" or fkind == "dus":
             # in-place on TPU: read+write the update window, not the buffer
-            upd = min((b for b in operand_bytes if b > 0), default=res)
-            return 2.0 * upd
+            return 2.0 * self._update_bytes(op, table)
         if oc == "scatter" or fkind == "scatter":
-            upd = min((b for b in operand_bytes if b > 0), default=res)
-            return 3.0 * upd  # indices+update read, window write (in-place)
+            # indices+update read, window write (in-place)
+            return 3.0 * self._update_bytes(op, table)
         if oc in ("dynamic-slice", "slice") or fkind == "slice":
             # pure data movement on a contiguous window: the CONSUMER is
             # charged for reading the slice (symbol-table passthrough), so
             # charging here too would double/triple-count weight streams
             # through slice->convert->dot chains
             return 0.0
-        if oc == "gather":
-            return 2.0 * res  # random access: table touch + result write
+        if oc == "gather" or fkind == "gather":
+            # random access: table touch + result write, at the storage
+            # width when the fusion folded a dtype hop into the gather
+            rb = res
+            if fkind == "gather":
+                rb = int(rb * self._fusion_convert_factor(op))
+            return 2.0 * rb
         if oc == "broadcast":
             return 2.0 * res
         return float(sum(operand_bytes) + res)

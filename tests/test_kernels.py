@@ -14,6 +14,8 @@ ATTN_SHAPES = [
     (3, 5, 12, 1, 256, 16, 64),    # MQA
     (2, 1, 8, 8, 128, 64, 32),     # plain decode (Sq=1)
     (1, 8, 16, 2, 512, 128, 128),  # deep GQA group
+    (2, 5, 8, 2, 80, 64, 64),      # Skv % block_k != 0 (partial tail chunk)
+    (1, 4, 8, 4, 100, 32, 32),     # partial tail chunk, GQA
 ]
 
 
@@ -46,6 +48,61 @@ def test_verify_attention_matches_model_flash():
     a = flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid, chunk=32)
     b = ops.verify_attention(q, k, v, kv_valid, block_k=32)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
+
+
+PAGED_SHAPES = [
+    # (n_slots, B, Sq, Hq, Hkv, Skv, D, block_k)
+    (6, 3, 5, 8, 2, 128, 64, 32),    # GQA, bucket < pool
+    (4, 2, 4, 4, 4, 96, 32, 64),     # MHA, Skv % block_k != 0
+    (5, 4, 5, 12, 1, 160, 16, 64),   # MQA, partial tail chunk
+    (3, 3, 2, 16, 2, 64, 32, 64),    # deep GQA group, block_k == Skv
+]
+
+
+@pytest.mark.parametrize("shape", PAGED_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_attention_paged_equivalence_sweep(shape, dtype):
+    """Slot-indexed pool kernel == gather + packed kernel == XLA reference,
+    across uneven per-slot lengths, duplicate scratch-slot padding rows, and
+    GQA/MQA head counts (interpret mode)."""
+    n_slots, B, Sq, Hq, Hkv, Skv, D, blk = shape
+    ks = jax.random.split(jax.random.key(sum(shape)), 5)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k_pool = jax.random.normal(ks[1], (n_slots + 1, Skv, Hkv, D), dtype)
+    v_pool = jax.random.normal(ks[2], (n_slots + 1, Skv, Hkv, D), dtype)
+    # real rows out of order + the last TWO entries padded with the
+    # duplicated scratch slot (the engine's partial-fill convention)
+    real = jax.random.permutation(ks[3], n_slots)[: max(B - 2, 1)]
+    slots = jnp.concatenate(
+        [real, jnp.full((B - real.shape[0],), n_slots)]
+    ).astype(jnp.int32)
+    kv_valid = jax.random.randint(ks[4], (B,), Sq, Skv + 1)
+
+    out_paged = ops.verify_attention_paged(q, k_pool, v_pool, slots, kv_valid, block_k=blk)
+    out_gather = ops.verify_attention(
+        q, k_pool[slots], v_pool[slots], kv_valid, block_k=blk
+    )
+    want = ref.verify_attention_paged_ref(q, k_pool, v_pool, slots, kv_valid)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out_paged, np.float32),
+                               np.asarray(out_gather, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(out_paged, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_verify_attention_partial_tail_chunk_finite():
+    """A cache length that is not a block multiple must degrade to masking,
+    not crash or leak NaN from the out-of-bounds tail lanes."""
+    B, Sq, Hq, Hkv, Skv, D = 2, 5, 8, 2, 80, 32
+    ks = jax.random.split(jax.random.key(11), 4)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D))
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D))
+    kv_valid = jnp.asarray([Skv, Sq], jnp.int32)  # full row + minimal row
+    out = ops.verify_attention(q, k, v, kv_valid, block_k=64)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    want = ref.verify_attention_ref(q, k, v, kv_valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-3, atol=2e-3)
 
 
 SSD_SHAPES = [

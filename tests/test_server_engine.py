@@ -132,6 +132,73 @@ def test_paged_verify_subset_matches_dense(rng):
     assert int(pool2["length"][B + 1]) == 0  # scratch row reset
 
 
+def test_slot_indexed_step_matches_gather_step():
+    """The slot-indexed fast path (pool-resident K/V, fresh-row-only writes)
+    must be bit-identical to the gather/scatter fallback on every real row —
+    including scratch-slot padded entries in the batch."""
+    _, _, tm, tp = _models()
+    n_slots, k_max, bucket = 4, 4, 4  # 2 real rows + 2 scratch-padded
+    prompts = jax.random.randint(jax.random.key(7), (2, 9), 0, V)
+
+    pool = tm.make_cache(n_slots + 1, 64, attn_chunk=32)
+    prefill = jax.jit(verification.make_prefill_step(tm, attn_chunk=32))
+    row_prev = []
+    for i in range(2):
+        row = tm.make_cache(1, 64, attn_chunk=32)
+        _, row, prev = prefill(tp, row, prompts[i][None, :])
+        pool = scatter_slots(pool, jnp.asarray([i + 1], jnp.int32), row)
+        row_prev.append(int(prev[0]))
+
+    drafts = jax.random.randint(jax.random.key(8), (bucket, k_max), 0, V)
+    lengths = jnp.asarray([4, 3, 0, 0], jnp.int32)
+    slots = jnp.asarray([2, 1, n_slots, n_slots], jnp.int32)  # scratch-padded
+    batch = verification.make_verify_batch(
+        jnp.asarray([row_prev[1], row_prev[0], 0, 0], jnp.int32), drafts, lengths
+    )
+
+    paged = verification.make_paged_verify_step(
+        tm, scratch_slot=n_slots, attn_chunk=32, paged_attention=True
+    )
+    gather = verification.make_paged_verify_step(
+        tm, scratch_slot=n_slots, attn_chunk=32, paged_attention=False
+    )
+    assert paged.paged_attention and not gather.paged_attention
+    res_p, pool_p = jax.jit(paged)(tp, pool, slots, batch)
+    res_g, pool_g = jax.jit(gather)(tp, pool, slots, batch)
+
+    np.testing.assert_array_equal(np.asarray(res_p.n_accepted), np.asarray(res_g.n_accepted))
+    np.testing.assert_array_equal(np.asarray(res_p.out_tokens), np.asarray(res_g.out_tokens))
+    np.testing.assert_array_equal(
+        np.asarray(pool_p["length"][:n_slots]), np.asarray(pool_g["length"][:n_slots])
+    )
+    for row in (1, 2):
+        n = int(pool_p["length"][row])
+        np.testing.assert_array_equal(
+            np.asarray(pool_p["k"][:, row, : n + 1]), np.asarray(pool_g["k"][:, row, : n + 1])
+        )
+    # untouched row 3 stays bit-identical in both
+    np.testing.assert_array_equal(np.asarray(pool_p["k"][:, 3]), np.asarray(pool["k"][:, 3]))
+    assert int(pool_p["length"][n_slots]) == 0  # scratch reset in the fast path
+
+
+def test_ssm_family_falls_back_to_gather():
+    """SSM/hybrid caches carry recurrent state leaves — the factory must
+    refuse the slot-indexed path for them even when asked for it."""
+    from repro.models.kvcache import supports_paged_attention
+
+    mcfg = dataclasses.replace(get_config("mamba2-370m").reduced(), vocab_size=V, num_layers=2)
+    assert not supports_paged_attention(mcfg)
+    mm = build_model(mcfg)
+    step = verification.make_paged_verify_step(
+        mm, scratch_slot=2, attn_chunk=32, paged_attention=True
+    )
+    assert not step.paged_attention
+    engine = ServerEngine(
+        mm, mm.init_params(jax.random.key(0)), n_slots=2, max_len=64, k_max=4, attn_chunk=32
+    )
+    assert not engine.paged_attention
+
+
 # ---------------------------------------------------------------------------
 # Engine end-to-end
 # ---------------------------------------------------------------------------
@@ -147,6 +214,25 @@ def test_engine_admission_exhaustion_and_readmit():
     st = engine.admit(1, prompt, 1.0)
     assert st is not None and st.slot == 0  # freed slot is reused
     assert engine.pool.n_free == 0
+
+
+def test_warmup_bucket_subset_and_compile_log():
+    """warmup(buckets=...) compiles only the selected buckets, logs per-
+    bucket compile time, and rejects sizes outside the engine's bucket set
+    (deployments budget startup instead of paying every bucket eagerly)."""
+    _, _, tm, tp = _models()
+    engine = ServerEngine(tm, tp, n_slots=4, max_len=64, k_max=4, attn_chunk=32)
+    assert engine.buckets == [1, 2, 4]
+    times = engine.warmup(buckets=[2])
+    assert set(times) == {2} and times[2] > 0
+    assert engine.compile_log == times
+    with pytest.raises(ValueError, match="unknown warmup buckets"):
+        engine.warmup(buckets=[3])
+    full = engine.warmup()
+    assert set(full) == {1, 2, 4}
+    assert set(engine.compile_log) == {1, 2, 4}
+    # warmed scratch rounds must leave the pool clean for real admissions
+    assert engine.admit(0, jnp.zeros((8,), jnp.int32), 0.0) is not None
 
 
 def test_engine_rejects_second_inflight_request():
