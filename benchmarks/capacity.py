@@ -3,10 +3,23 @@
 Capacity = number of edge devices the system supports at the same response
 rate.  The paper reports x2.60 (RPi 4B), x2.86 (RPi 5), x2.77 (Jetson) —
 our validation target is ratios in that x2-3 band.
+
+``--cluster`` switches to the REAL replica-sharded serving stack
+(cluster/router.py over tiny models): sweep the replica count, drive an
+offered load that oversubscribes one replica's slot pool, and measure
+admitted-stream capacity (peak concurrently-admitted streams) at a fixed
+per-round deadline — capacity should scale ~linearly in replicas at a
+matched deadline-miss rate, which is the multi-server half of the paper's
+capacity claim.  The same mode then runs an adaptive-k vs fixed-k fleet over
+loopback transport (closed-loop spec length, serving/speclen.py) and reports
+wstgr side by side.  ``--json PATH`` records everything as a BENCH artifact.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import time
 
 from benchmarks.common import emit
 from repro.serving.devices import A100_X4, DEVICES
@@ -38,5 +51,260 @@ def run(quick: bool = False) -> list:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# real cluster: replica capacity scaling + adaptive spec length
+# ---------------------------------------------------------------------------
+
+
+def _cluster_models(quick: bool):
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.model_zoo import build_model, perturb_params
+
+    vocab = 128
+    tcfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(), name="tgt", vocab_size=vocab,
+        num_layers=2 if quick else 3,
+    )
+    dcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=vocab)
+    target, draft = build_model(tcfg), build_model(dcfg)
+    tp = target.init_params(jax.random.key(0))
+    # random-init pairs agree greedily (trivial 1.0 acceptance); perturb the
+    # draft so rejections are real and the adaptive controller has a signal
+    dp = perturb_params(draft.init_params(jax.random.key(1)), 0.05)
+    return target, tp, draft, dp, vocab
+
+
+def _capacity_rows(target, tp, draft, dp, vocab, *, quick: bool) -> list:
+    """Replica sweep under oversubscribed offered load, in-process driver.
+
+    Admission is DEADLINE-GATED: a new stream is admitted only while the
+    trailing window of verdict latencies meets the per-round deadline, so
+    peak admitted streams is a measured serving capacity — pool-bound when
+    the replicas keep up (``gated_by: pool``), compute-bound when they
+    don't (``gated_by: deadline``) — not pool-size arithmetic.  All routers
+    share one VerifySteps bundle, so every replica count runs the same
+    compiled executables (the sweep measures capacity, not compiles).
+    """
+    import jax
+
+    from repro.cluster import Router
+    from repro.core.server_engine import EdgeDeviceKit, ServerEngine
+
+    slots, max_new, k_max = (2, 5, 4) if quick else (3, 10, 4)
+    replica_counts = (1, 2) if quick else (1, 2, 4)
+    n_offer = 2 * max(replica_counts) * slots  # oversubscribe every config
+    deadline_s = 2.0  # generous CPU-CI round deadline (matched across sweeps)
+    miss_cap = 0.1  # stop admitting while >10% of recent rounds miss
+    window = 16  # trailing latencies consulted by the admission gate
+    prompts = jax.random.randint(jax.random.key(2), (n_offer, 10), 0, vocab)
+    kit = EdgeDeviceKit(draft, dp, k_max=k_max, c_th=0.3, greedy=True, attn_chunk=32)
+
+    # one shared step bundle across the whole sweep (homogeneous replicas),
+    # with every jitted path — verify buckets, prefill, draft — compiled up
+    # front so the sweep measures capacity, not compiles
+    seed_engine = ServerEngine(
+        target, tp, n_slots=slots, max_len=128, k_max=k_max, attn_chunk=32
+    )
+    steps = seed_engine.steps
+    seed_engine.warmup()
+    seed_engine.admit(-1, prompts[0], 0.0)
+    warm_dev = kit.spawn(-1, prompts[0], max_len=128, seed=0)
+    seed_engine.submit(-1, warm_dev.draft(), 0.0)
+    for v in seed_engine.step(0.0) or []:
+        warm_dev.on_verdict(v)
+    seed_engine.retire(-1)
+
+    rows = []
+    base_capacity = None
+    for n_rep in replica_counts:
+        router = Router(
+            [
+                ServerEngine(
+                    target, tp, n_slots=slots, max_len=128, k_max=k_max,
+                    attn_chunk=32, steps=steps,
+                )
+                for _ in range(n_rep)
+            ]
+        )
+        devices, outputs, waiting = {}, {}, list(range(n_offer))
+        submit_at, latencies = {}, []
+        peak_admitted = 0
+        deadline_gated = False
+        t0 = time.time()
+        while len(outputs) < n_offer:
+            now = time.time() - t0
+            recent = latencies[-window:]
+            meeting_deadline = (
+                sum(1 for lat in recent if lat > deadline_s)
+                <= miss_cap * len(recent)
+            )
+            deadline_gated |= not meeting_deadline
+            while waiting and router.n_free > 0 and meeting_deadline:
+                i = waiting.pop(0)
+                stream = router.admit(i, prompts[i], now)
+                assert stream is not None, "router reported a free slot"
+                devices[i] = kit.spawn(i, prompts[i], max_len=128, seed=i)
+            peak_admitted = max(peak_admitted, len(router.streams))
+            for i, dev in devices.items():
+                if not dev.awaiting:
+                    now = time.time() - t0
+                    router.submit(i, dev.draft(), now)
+                    submit_at[i] = now
+            verdicts = router.step(time.time() - t0)
+            now = time.time() - t0
+            for v in verdicts or []:
+                latencies.append(now - submit_at[v.device_id])
+                dev = devices[v.device_id]
+                dev.on_verdict(v)
+                if len(dev.committed) >= max_new:
+                    outputs[v.device_id] = dev.committed[:max_new]
+                    router.retire(v.device_id)
+                    del devices[v.device_id]
+        wall = time.time() - t0
+        st = router.stats(wall)
+        misses = sum(1 for lat in latencies if lat > deadline_s)
+        if base_capacity is None:
+            base_capacity = peak_admitted
+        rows.append({
+            "section": "capacity",
+            "replicas": n_rep,
+            "slots_per_replica": slots,
+            "offered_streams": n_offer,
+            "capacity_streams": peak_admitted,
+            "capacity_ratio": round(peak_admitted / max(base_capacity, 1), 2),
+            "gated_by": "deadline" if deadline_gated else "pool",
+            "deadline_s": deadline_s,
+            "deadline_miss_rate": round(misses / max(len(latencies), 1), 4),
+            "streams_served": st.streams_served,
+            "wstgr": round(n_offer * max_new / wall, 2),
+            "rounds": st.rounds,
+            "mean_batch_fill": round(st.mean_batch_fill, 2),
+            "migrations": router.migrations,
+            "wall_s": round(wall, 2),
+        })
+        print(
+            f"[capacity] {n_rep} replica(s): peak {peak_admitted} admitted "
+            f"({rows[-1]['capacity_ratio']}x), miss rate "
+            f"{rows[-1]['deadline_miss_rate']:.1%}, "
+            f"{rows[-1]['wstgr']} tok/s"
+        )
+    return rows
+
+
+def _kctl_rows(target, tp, draft, dp, vocab, *, quick: bool) -> list:
+    """Adaptive vs fixed spec length over loopback transport (real feedback
+    loop: Verdict accept_rate/queue_depth -> AIMD controller -> draft k)."""
+    import asyncio
+
+    import jax
+    import numpy as np
+
+    from repro.core.server_engine import EdgeDeviceKit, ServerEngine
+    from repro.transport.client import ClientStats, EdgeClient
+    from repro.transport.links import make_link
+    from repro.transport.server import TransportServer
+
+    n_dev, max_new, k_max = (3, 8, 4) if quick else (4, 16, 4)
+    prompts = jax.random.randint(jax.random.key(5), (n_dev, 10), 0, vocab)
+    kit = EdgeDeviceKit(draft, dp, k_max=k_max, c_th=0.0, greedy=True, attn_chunk=32)
+
+    # shared compiled steps for both fleets; warm fleet evens out first-use
+    # compiles (prefill/draft/peek) before either configuration is timed
+    seed = ServerEngine(target, tp, n_slots=n_dev, max_len=128, k_max=k_max, attn_chunk=32)
+    steps = seed.steps
+    seed.warmup()
+
+    def fresh_engine():
+        return ServerEngine(
+            target, tp, n_slots=n_dev, max_len=128, k_max=k_max, attn_chunk=32,
+            steps=steps,
+        )
+
+    rows = []
+    warmed = False
+    for kctl in ("fixed", "adaptive"):
+
+        async def fleet(engine, kctl=kctl):
+            server = TransportServer(engine)
+            clients = []
+            for i in range(n_dev):
+                link = make_link("loopback")
+                server.attach(link.server)
+                clients.append(
+                    EdgeClient(
+                        kit, i, np.asarray(prompts[i]), link.device,
+                        max_new=max_new, max_len=128, pipeline=True,
+                        verify_timeout=30.0, kctl=kctl, seed=i,
+                    )
+                )
+            t0 = time.time()
+            await asyncio.gather(*(c.run() for c in clients))
+            wall = time.time() - t0
+            for _ in range(500):
+                if not engine.streams:
+                    break
+                await asyncio.sleep(0.01)
+            st = server.stats()
+            await server.stop()
+            return clients, st, wall
+
+        if not warmed:
+            asyncio.run(fleet(fresh_engine()))  # compile pass (client-side jits)
+            warmed = True
+        clients, st, wall = asyncio.run(fleet(fresh_engine()))
+        fleet_stats = ClientStats.merge([c.stats for c in clients])
+        rows.append({
+            "section": "kctl",
+            "kctl": kctl,
+            "wstgr": round(n_dev * max_new / wall, 2),
+            "acceptance": round(st.acceptance_rate, 3),
+            "rounds": st.rounds,
+            "k_mean": round(fleet_stats.k_mean, 2),
+            "k_final": fleet_stats.k_final,
+            "drafted_per_token": round(
+                sum(c.device.drafted for c in clients)
+                / max(n_dev * max_new, 1), 2,
+            ),
+            "bytes_up": st.bytes_rx,
+            "wall_s": round(wall, 2),
+        })
+        print(
+            f"[kctl {kctl}] {rows[-1]['wstgr']} tok/s, acceptance "
+            f"{rows[-1]['acceptance']}, mean k {rows[-1]['k_mean']}, "
+            f"{rows[-1]['drafted_per_token']} drafted/token"
+        )
+    return rows
+
+
+def run_cluster(quick: bool = False, json_path: str = "") -> list:
+    target, tp, draft, dp, vocab = _cluster_models(quick)
+    rows = _capacity_rows(target, tp, draft, dp, vocab, quick=quick)
+    rows += _kctl_rows(target, tp, draft, dp, vocab, quick=quick)
+    emit(rows, "cluster_capacity")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"benchmark": "cluster_capacity", "quick": quick, "rows": rows}, f,
+                      indent=2)
+        print(f"wrote {json_path}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", action="store_true",
+                    help="real replica-sharded capacity sweep + adaptive-k fleet")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", type=str, default="",
+                    help="write the rows as a BENCH JSON artifact")
+    a = ap.parse_args()
+    if a.cluster:
+        run_cluster(quick=a.quick, json_path=a.json)
+    else:
+        rows = run(quick=a.quick)
+        if a.json:
+            with open(a.json, "w") as f:
+                json.dump({"benchmark": "table1_capacity", "quick": a.quick,
+                           "rows": rows}, f, indent=2)
+            print(f"wrote {a.json}")

@@ -144,7 +144,7 @@ def run_transport(quick: bool = False) -> list:
     from repro.core.server_engine import EdgeDeviceKit, ServerEngine
     from repro.models.model_zoo import build_model, perturb_params
     from repro.serving.devices import NETS, RPI5, ServerProfile
-    from repro.transport.client import EdgeClient
+    from repro.transport.client import ClientStats, EdgeClient
     from repro.transport.links import make_link
     from repro.transport.server import TransportServer
 
@@ -206,6 +206,7 @@ def run_transport(quick: bool = False) -> list:
         r0, d0, a0 = len(engine.round_log), engine._drafted, engine._accepted
         f0 = engine._fallback_tokens
         clients, st, wall = asyncio.run(fleet(range(100, 100 + n_dev), max_new))
+        fleet_stats = ClientStats.merge([c.stats for c in clients])
 
         log = engine.round_log[r0:]
         committed = sum(r.n_commit for r in log)
@@ -245,13 +246,12 @@ def run_transport(quick: bool = False) -> list:
             "acceptance": round(accept_ratio, 3),
             "device_rate_tok_s": round(device_rate, 1),
             "verify_step_s": round(step_s, 4),
-            "pipeline_hits": sum(c.stats.pipeline_hits for c in clients),
-            "pipeline_misses": sum(c.stats.pipeline_misses for c in clients),
+            "pipeline_hits": fleet_stats.pipeline_hits,
+            "pipeline_misses": fleet_stats.pipeline_misses,
             "bytes_up": st.bytes_rx,
             "bytes_down": st.bytes_tx,
             "frames": st.frames_rx + st.frames_tx,
-            "frames_dropped": st.frames_dropped
-            + sum(c.stats.frames_dropped for c in clients),
+            "frames_dropped": st.frames_dropped + fleet_stats.frames_dropped,
             "fallback_tokens": st.fallback_tokens - f0,  # this fleet only
         })
         ok = abs(rows[-1]["wstgr_ratio"] - 1.0) <= 0.15

@@ -1,0 +1,31 @@
+"""Replica-sharded serving cluster (SLED at system scale).
+
+  router.py — Router: N ServerEngine replicas behind a pluggable placement
+              policy (least-loaded / affinity / round-robin), stream
+              migration on retire, cluster-merged EngineStats.
+
+The router exposes the same admit/submit/step/retire surface as a single
+``ServerEngine``, so every existing driver (launch/serve.py inproc loop,
+transport/server.TransportServer, the benchmarks) serves a replica fleet by
+swapping the object it holds — admission becomes a placement decision.
+"""
+
+from repro.cluster.router import (
+    PLACEMENT_POLICIES,
+    AffinityPlacement,
+    LeastLoadedPlacement,
+    PlacementPolicy,
+    RoundRobinPlacement,
+    Router,
+    make_placement,
+)
+
+__all__ = [
+    "PLACEMENT_POLICIES",
+    "AffinityPlacement",
+    "LeastLoadedPlacement",
+    "PlacementPolicy",
+    "RoundRobinPlacement",
+    "Router",
+    "make_placement",
+]

@@ -1,0 +1,337 @@
+"""Cluster router: replica-sharded verification behind one serving surface.
+
+SLED's capacity story (paper Table I) is one shared target model serving many
+heterogeneous drafters; at production scale that target tier is N engine
+replicas behind a placement layer, not one engine object.  The
+:class:`Router` owns N :class:`~repro.core.server_engine.ServerEngine`
+replicas — each a full single-replica stack (pool + admission + planner) —
+and turns admission into a placement decision:
+
+  * **placement** — a pluggable :class:`PlacementPolicy` (BatchPlanner-style
+    registry: ``least-loaded`` / ``affinity`` / ``round-robin``) picks the
+    replica for each new stream among those with a free pool slot;
+  * **migration** — when a stream retires and frees a slot, the router may
+    migrate an active stream over from the most-loaded replica
+    (``migrate_on_retire``).  Replicas share the model parameters and the
+    jitted step bundle, and a migrated KV row is copied bit-exactly
+    (``export_stream``/``import_stream``), so migration never changes a
+    stream's tokens — only which replica's batches it rides in;
+  * **aggregation** — cluster stats are ``EngineStats.merge`` over replicas,
+    and verdicts carry each stream's replica-local queue-depth feedback.
+
+The router mirrors the full ServerEngine driver surface (admit / submit /
+step / retire / cancel_request / force_extend / stats / warmup), so the
+transport server and the in-process serving loops drive a replica fleet by
+holding a Router where they held an engine.  Replicas share one VerifySteps
+bundle (same compiled executables), so a fleet costs one engine's XLA
+compilation.  In-process today; one Router in front of per-host
+TransportServers over the TCP endpoint is the recorded follow-on.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Mapping
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.admission import DeviceStream
+from repro.core.engine import EngineStats, Verdict
+from repro.core.server_engine import ServerEngine
+
+
+class PlacementPolicy:
+    """Chooses the replica for a new stream; None when every pool is full."""
+
+    name = "base"
+
+    def choose(self, router: "Router", device_id: int) -> Optional[int]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _open(router: "Router") -> List[int]:
+        return [i for i, e in enumerate(router.replicas) if e.pool.n_free > 0]
+
+
+class LeastLoadedPlacement(PlacementPolicy):
+    """Fewest active streams wins (ties break toward the lowest replica id):
+    keeps per-replica batch fill even under staggered arrivals."""
+
+    name = "least-loaded"
+
+    def choose(self, router: "Router", device_id: int) -> Optional[int]:
+        open_ = self._open(router)
+        if not open_:
+            return None
+        return min(open_, key=lambda i: (len(router.replicas[i].streams), i))
+
+
+class AffinityPlacement(PlacementPolicy):
+    """Deterministic device->replica hash (session/cache affinity); falls
+    over to least-loaded when the home replica is full."""
+
+    name = "affinity"
+
+    def choose(self, router: "Router", device_id: int) -> Optional[int]:
+        home = device_id % len(router.replicas)
+        if router.replicas[home].pool.n_free > 0:
+            return home
+        return LeastLoadedPlacement().choose(router, device_id)
+
+
+class RoundRobinPlacement(PlacementPolicy):
+    """Cycle through replicas, skipping full pools."""
+
+    name = "round-robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def choose(self, router: "Router", device_id: int) -> Optional[int]:
+        n = len(router.replicas)
+        for off in range(n):
+            i = (self._next + off) % n
+            if router.replicas[i].pool.n_free > 0:
+                self._next = i + 1
+                return i
+        return None
+
+
+PLACEMENT_POLICIES = {
+    p.name: p for p in (LeastLoadedPlacement, AffinityPlacement, RoundRobinPlacement)
+}
+
+
+def make_placement(policy: str) -> PlacementPolicy:
+    if policy not in PLACEMENT_POLICIES:
+        raise ValueError(
+            f"unknown placement policy {policy!r} (one of {sorted(PLACEMENT_POLICIES)})"
+        )
+    return PLACEMENT_POLICIES[policy]()
+
+
+class _StreamView(Mapping):
+    """Read-only dict-like view over every replica's streams.
+
+    Membership and lookup go through the router's placement map (O(1) per
+    frame in the transport hot path) instead of merging N dicts per access.
+    """
+
+    def __init__(self, router: "Router"):
+        self._router = router
+
+    def __contains__(self, device_id) -> bool:
+        return device_id in self._router._where
+
+    def __getitem__(self, device_id) -> DeviceStream:
+        return self._router._engine(device_id).streams[device_id]
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self._router._where)
+
+    def __len__(self) -> int:
+        return len(self._router._where)
+
+
+class Router:
+    """N engine replicas + placement: the cluster-level serving object."""
+
+    def __init__(
+        self,
+        replicas: Sequence[ServerEngine],
+        *,
+        placement: str | PlacementPolicy = "least-loaded",
+        migrate_on_retire: bool = True,
+    ):
+        if not replicas:
+            raise ValueError("Router needs at least one replica")
+        k_maxes = {e.k_max for e in replicas}
+        max_lens = {e.pool.max_len for e in replicas}
+        if len(k_maxes) > 1 or len(max_lens) > 1:
+            raise ValueError(
+                f"replicas must be homogeneous for migration: k_max {k_maxes}, "
+                f"max_len {max_lens}"
+            )
+        self.replicas: List[ServerEngine] = list(replicas)
+        self.placement = (
+            placement if isinstance(placement, PlacementPolicy) else make_placement(placement)
+        )
+        self.migrate_on_retire = migrate_on_retire
+        self.migrations = 0
+        self._where: Dict[int, int] = {}  # device_id -> replica index
+
+    @classmethod
+    def build(
+        cls,
+        model: Any,
+        params: Any,
+        *,
+        replicas: int,
+        n_slots: int,
+        placement: str | PlacementPolicy = "least-loaded",
+        migrate_on_retire: bool = True,
+        **engine_kw,
+    ) -> "Router":
+        """N homogeneous replicas (``n_slots`` rows each) sharing one jitted
+        VerifySteps bundle — the fleet compiles once."""
+        if replicas < 1:
+            raise ValueError(f"need at least 1 replica, got {replicas}")
+        first = ServerEngine(model, params, n_slots=n_slots, **engine_kw)
+        rest = [
+            ServerEngine(model, params, n_slots=n_slots, steps=first.steps, **engine_kw)
+            for _ in range(replicas - 1)
+        ]
+        return cls(
+            [first, *rest], placement=placement, migrate_on_retire=migrate_on_retire
+        )
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def k_max(self) -> int:
+        return self.replicas[0].k_max
+
+    @property
+    def paged_attention(self) -> bool:
+        return self.replicas[0].paged_attention
+
+    @property
+    def streams(self) -> Mapping:
+        """Lazy device->stream mapping across replicas (read-only): O(1)
+        membership/lookup via the placement map, no per-access dict merge."""
+        return _StreamView(self)
+
+    @property
+    def queue_depth(self) -> int:
+        return sum(e.queue_depth for e in self.replicas)
+
+    @property
+    def n_free(self) -> int:
+        return sum(e.pool.n_free for e in self.replicas)
+
+    def replica_of(self, device_id: int) -> int:
+        return self._where[device_id]
+
+    def loads(self) -> List[int]:
+        """Active stream count per replica (placement test surface)."""
+        return [len(e.streams) for e in self.replicas]
+
+    def _engine(self, device_id: int) -> ServerEngine:
+        return self.replicas[self._where[device_id]]
+
+    # -- admission as placement ----------------------------------------------
+
+    def admit(self, device_id: int, prompt: jax.Array, now: float = 0.0) -> Optional[DeviceStream]:
+        """Place the stream on a replica chosen by the policy; None when
+        every replica's pool is full (caller queues and retries on retire)."""
+        if device_id in self._where:
+            raise ValueError(f"device {device_id} already admitted")
+        idx = self.placement.choose(self, device_id)
+        if idx is None:
+            return None
+        stream = self.replicas[idx].admit(device_id, prompt, now)
+        if stream is None:  # policy raced a concurrent admit; treat as full
+            return None
+        self._where[device_id] = idx
+        return stream
+
+    def retire(self, device_id: int) -> DeviceStream:
+        idx = self._where.pop(device_id)
+        stream = self.replicas[idx].retire(device_id)
+        if self.migrate_on_retire:
+            self._rebalance_into(idx)
+        return stream
+
+    def migrate(self, device_id: int, dst: int) -> None:
+        """Move a quiescent stream to replica ``dst`` bit-identically: the
+        KV row is copied exactly and both replicas share params + compiled
+        steps, so the stream's future tokens are unchanged — only its
+        batch-mates are."""
+        src = self._where[device_id]
+        if src == dst:
+            return
+        stream, row = self.replicas[src].export_stream(device_id)
+        try:
+            self.replicas[dst].import_stream(stream, row)
+        except Exception:
+            # roll back: the stream must never be lost mid-migration
+            self.replicas[src].import_stream(stream, row)
+            raise
+        self._where[device_id] = dst
+        self.migrations += 1
+
+    def _rebalance_into(self, dst: int) -> None:
+        """After a retirement freed a slot on ``dst``: pull one quiescent
+        stream over from the most-loaded replica when the imbalance is ≥2
+        (moving one stream then strictly improves balance)."""
+        if self.replicas[dst].pool.n_free == 0:
+            return
+        loads = self.loads()
+        src = max(range(len(loads)), key=lambda i: (loads[i], -i))
+        if loads[src] - loads[dst] < 2:
+            return
+        engine = self.replicas[src]
+        movable = [d for d in engine.streams if not engine.has_inflight(d)]
+        if not movable:
+            return
+        self.migrate(movable[0], dst)
+
+    # -- request path (delegated via placement map) --------------------------
+
+    def submit(
+        self,
+        device_id: int,
+        draft_tokens: np.ndarray,
+        now: float,
+        draft_q: Optional[np.ndarray] = None,
+    ) -> None:
+        self._engine(device_id).submit(device_id, draft_tokens, now, draft_q=draft_q)
+
+    def cancel_request(self, device_id: int) -> bool:
+        return self._engine(device_id).cancel_request(device_id)
+
+    def force_extend(self, device_id: int, tokens: np.ndarray) -> int:
+        return self._engine(device_id).force_extend(device_id, tokens)
+
+    def has_inflight(self, device_id: int) -> bool:
+        return device_id in self._where and self._engine(device_id).has_inflight(device_id)
+
+    def next_event_hint(self, now: float) -> Optional[float]:
+        hints = [h for e in self.replicas if (h := e.next_event_hint(now)) is not None]
+        return min(hints) if hints else None
+
+    # -- the serving hot loop ------------------------------------------------
+
+    def step(self, now: float) -> Optional[List[Verdict]]:
+        """Step every replica whose policy fires; one merged verdict list.
+
+        Replicas step back to back in this process (single host); each
+        verdict's queue-depth feedback stays replica-local — that is the
+        congestion signal for the streams riding that replica.
+        """
+        verdicts: List[Verdict] = []
+        for engine in self.replicas:
+            out = engine.step(now)
+            if out:
+                verdicts.extend(out)
+        return verdicts or None
+
+    def warmup(self, buckets=None) -> Dict[int, float]:
+        """Warm replica 0 only: the fleet shares one VerifySteps bundle and
+        identical shapes, so the compiled executables are already hot for
+        every other replica — re-running the per-bucket warmup there would
+        be (R-1)*buckets of dead verify executions at startup."""
+        return self.replicas[0].warmup(buckets)
+
+    # -- stats ---------------------------------------------------------------
+
+    def stats(self, now: Optional[float] = None) -> EngineStats:
+        return EngineStats.merge([e.stats(now) for e in self.replicas])
+
+    def replica_stats(self, now: Optional[float] = None) -> List[EngineStats]:
+        return [e.stats(now) for e in self.replicas]

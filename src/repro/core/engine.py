@@ -1,0 +1,416 @@
+"""Engine core: the pure single-replica verify stepper (no admission logic).
+
+This is the bottom layer of the serving stack (SLED §III-B compute only):
+a :class:`PagedKVCache` row pool plus the jitted prefill / bucketed
+slot-indexed verify / force-extend steps that run against it.  Everything
+policy-shaped — who is admitted, which requests batch together, when the
+planner fires — lives one layer up (core/admission.py + core/server_engine.py),
+and replica placement lives above that (cluster/router.py).  The core only
+answers "verify THESE slots with THIS padded batch" and "append THESE tokens
+to THAT slot", which is exactly the unit a cluster router schedules.
+
+The jitted step bundle (:class:`VerifySteps`) is deliberately separable from
+the pool so N replicas of the same model share one set of compiled
+executables: compiled shapes depend only on (bucket, k_max, pool geometry),
+so a replica fleet costs the same XLA compilation as one engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import verification
+from repro.models.kvcache import PagedKVCache, gather_slots, supports_paged_attention
+from repro.models.layers import NO_MESH, MeshContext
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class Verdict:
+    """Per-request outcome of one engine round (device resume protocol).
+
+    ``accept_rate`` / ``queue_depth`` are the closed-loop feedback fields:
+    THIS round's draft-acceptance ratio and the replica's planner queue
+    depth right after dispatch.  Devices use them to adapt their speculation
+    length online (serving/speclen.py — its EWMA does the smoothing, so the
+    raw per-round signal stays responsive to regime shifts); they ride the
+    wire in Verdict frames (transport/codec.py).
+    """
+
+    device_id: int
+    n_accepted: int
+    tokens: np.ndarray  # committed this round: accepted drafts + extra
+    next_prev: int  # correction/bonus token the device feeds next round
+    accept_rate: float = 0.0  # this round's accepted/drafted
+    queue_depth: int = 0  # replica queue depth after this dispatch
+
+
+@dataclasses.dataclass
+class RoundStats:
+    time: float
+    size: int  # batch fill (requests verified)
+    bucket: int  # padded jit batch size
+    queue_depth: int  # planner queue after dispatch
+    n_commit: int  # tokens committed this round
+    step_seconds: float  # wall time of the verify call
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate serving stats; field names mirror simulator.SimResult.
+
+    The wire fields (bytes/frames both directions, drops) are zero for the
+    in-process driver and filled in by transport.server.TransportServer from
+    its link stats, so benchmarks emit one uniform record either way.
+    """
+
+    wstgr: float
+    per_device_rate: float
+    server_busy_frac: float
+    rounds: int
+    timeouts: int
+    fallback_tokens: int
+    mean_batch_fill: float
+    mean_round_latency: float
+    server_rounds_per_s: float
+    partial_rounds: int = 0
+    streams_served: int = 0
+    acceptance_rate: float = 0.0
+    mean_queue_depth: float = 0.0
+    # wire stats (transport runtime only)
+    bytes_tx: int = 0
+    bytes_rx: int = 0
+    frames_tx: int = 0
+    frames_rx: int = 0
+    frames_dropped: int = 0
+    fallback_rounds: int = 0
+    replicas: int = 1  # >1 only for cluster-merged records
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def merge(cls, stats: Sequence["EngineStats"]) -> "EngineStats":
+        """Aggregate per-replica stats into one cluster-level record.
+
+        Replicas serve concurrently, so count and throughput fields
+        (rounds, wstgr, server_rounds_per_s, wire bytes/frames) sum; mean
+        fields (batch fill, round latency, queue depth) and acceptance_rate
+        are weighted by each replica's round count; busy fractions sum and
+        are capped at 1.0 only in the sense that callers interpret >1 as
+        "more than one replica's worth of compute" (single event loop runs
+        them back to back).  ``per_device_rate`` is recomputed from the
+        merged throughput over the summed stream counts (reconstructed from
+        wstgr / per_device_rate per replica, falling back to streams_served).
+        """
+        stats = list(stats)
+        if not stats:
+            raise ValueError("EngineStats.merge needs at least one record")
+        if len(stats) == 1:
+            return dataclasses.replace(stats[0])
+        rounds = [s.rounds for s in stats]
+        total_rounds = sum(rounds)
+
+        def wmean(vals):
+            # idle replicas (0 rounds) carry no weight in the means
+            if total_rounds == 0:
+                return float(sum(vals) / len(vals))
+            return float(sum(v * r for v, r in zip(vals, rounds)) / total_rounds)
+
+        n_streams = []
+        for s in stats:
+            if s.per_device_rate > 0:
+                n_streams.append(s.wstgr / s.per_device_rate)
+            else:  # idle replica: contributes its served count (possibly 0)
+                n_streams.append(float(s.streams_served))
+        wstgr = sum(s.wstgr for s in stats)
+        return cls(
+            wstgr=wstgr,
+            per_device_rate=wstgr / max(sum(n_streams), 1e-9),
+            server_busy_frac=sum(s.server_busy_frac for s in stats),
+            rounds=sum(rounds),
+            timeouts=sum(s.timeouts for s in stats),
+            fallback_tokens=sum(s.fallback_tokens for s in stats),
+            mean_batch_fill=wmean([s.mean_batch_fill for s in stats]),
+            mean_round_latency=wmean([s.mean_round_latency for s in stats]),
+            server_rounds_per_s=sum(s.server_rounds_per_s for s in stats),
+            partial_rounds=sum(s.partial_rounds for s in stats),
+            streams_served=sum(s.streams_served for s in stats),
+            acceptance_rate=wmean([s.acceptance_rate for s in stats]),
+            mean_queue_depth=wmean([s.mean_queue_depth for s in stats]),
+            bytes_tx=sum(s.bytes_tx for s in stats),
+            bytes_rx=sum(s.bytes_rx for s in stats),
+            frames_tx=sum(s.frames_tx for s in stats),
+            frames_rx=sum(s.frames_rx for s in stats),
+            frames_dropped=sum(s.frames_dropped for s in stats),
+            fallback_rounds=sum(s.fallback_rounds for s in stats),
+            replicas=sum(s.replicas for s in stats),
+        )
+
+
+def _pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    if a.shape[0] == n:
+        return a
+    pad = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+class VerifySteps:
+    """The jitted step bundle for one (model, serving config): prefill,
+    bucketed slot-indexed verify, force-extend.
+
+    Build it once and hand it to every :class:`EngineCore` replica of that
+    model — jax.jit caches on the wrapped closure, so replicas sharing a
+    bundle share compiled executables (same shapes, same functions) instead
+    of each paying the full warmup.
+    """
+
+    def __init__(
+        self,
+        model: Any,
+        *,
+        scratch_slot: int,
+        ctx: MeshContext = NO_MESH,
+        greedy: bool = True,
+        temperature: float = 1.0,
+        attn_chunk: int = 32,
+        paged_attention: bool = True,
+    ):
+        self.model = model
+        self.greedy = greedy
+        self.temperature = temperature
+        self.scratch_slot = scratch_slot
+        self.attn_chunk = attn_chunk
+        # slot-indexed verify attention straight out of the pool; SSM/hybrid
+        # caches fall back to gather/scatter (their recurrent state leaves
+        # are not position-indexed K/V — see models/kvcache.py)
+        self.paged_attention = bool(paged_attention) and supports_paged_attention(model.cfg)
+        self.verify = jax.jit(
+            verification.make_paged_verify_step(
+                model,
+                scratch_slot=scratch_slot,
+                ctx=ctx,
+                greedy=greedy,
+                temperature=temperature,
+                attn_chunk=attn_chunk,
+                paged_attention=self.paged_attention,
+            )
+        )
+        self.prefill = jax.jit(
+            verification.make_prefill_step(model, ctx=ctx, attn_chunk=attn_chunk)
+        )
+        self.extend = jax.jit(
+            verification.make_force_extend_step(
+                model,
+                ctx=ctx,
+                attn_chunk=attn_chunk,
+                paged_attention=self.paged_attention,
+            )
+        )
+
+
+class EngineCore:
+    """Pure single-replica verify stepper: row pool + bucketed verification.
+
+    Owns the :class:`PagedKVCache` pool and runs padded verify batches
+    against arbitrary slot subsets.  It knows nothing about device streams,
+    admission, planners, or policies — callers hand it slot ids and padded
+    request arrays and get a VerifyResult back.  That separation is what
+    lets a cluster router treat replicas as schedulable capacity.
+    """
+
+    def __init__(
+        self,
+        model: Any,
+        params: Any,
+        *,
+        n_slots: int,
+        max_len: int,
+        k_max: int,
+        greedy: bool = True,
+        temperature: float = 1.0,
+        attn_chunk: int = 32,
+        ctx: MeshContext = NO_MESH,
+        buckets: Optional[Sequence[int]] = None,
+        batch_cap: Optional[int] = None,
+        paged_attention: bool = True,
+        steps: Optional[VerifySteps] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.k_max = k_max
+        self.greedy = greedy
+        self.pool = PagedKVCache(model, n_slots, max_len, attn_chunk=attn_chunk)
+        if steps is not None:
+            # a mismatched shared bundle would fail (or recompile every
+            # bucket behind warmup's back) deep inside step(); fail at the
+            # constructor with the actual disagreement instead
+            want_paged = bool(paged_attention) and supports_paged_attention(model.cfg)
+            mismatches = [
+                (name, got, want)
+                for name, got, want in (
+                    ("scratch_slot", steps.scratch_slot, self.pool.scratch_slot),
+                    ("model", steps.model, model),
+                    ("greedy", steps.greedy, greedy),
+                    ("temperature", steps.temperature, temperature),
+                    ("attn_chunk", steps.attn_chunk, attn_chunk),
+                    ("paged_attention", steps.paged_attention, want_paged),
+                )
+                if got is not want and got != want
+            ]
+            if mismatches:
+                raise ValueError(
+                    "shared VerifySteps bundle does not match this engine "
+                    "(replicas must be homogeneous to share compiled steps): "
+                    + ", ".join(f"{n}: bundle={g!r} engine={w!r}" for n, g, w in mismatches)
+                )
+        self.steps = steps or VerifySteps(
+            model,
+            scratch_slot=self.pool.scratch_slot,
+            ctx=ctx,
+            greedy=greedy,
+            temperature=temperature,
+            attn_chunk=attn_chunk,
+            paged_attention=paged_attention,
+        )
+        self.paged_attention = self.steps.paged_attention
+        cap = batch_cap or n_slots
+        self.batch_cap = cap
+        if buckets is None:
+            buckets, b = [], 1
+            while b < cap:
+                buckets.append(b)
+                b *= 2
+            buckets.append(cap)
+        self.buckets = sorted(set(buckets))
+        self.compile_log: Dict[int, float] = {}  # bucket -> warmup seconds
+        self._seed = 0
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def alloc_slot(self) -> int:
+        """Free pool row for a new stream; raises SlotExhausted when full."""
+        return self.pool.alloc()
+
+    def free_slot(self, slot: int) -> None:
+        self.pool.free(slot)
+
+    @property
+    def n_free(self) -> int:
+        return self.pool.n_free
+
+    def prefill_slot(self, slot: int, prompt: jax.Array) -> int:
+        """Prefill ``prompt`` into pool row ``slot``; returns the last prompt
+        token (the stream's first ``prev_token``)."""
+        row = self.pool.make_row_cache()
+        prompt = jnp.asarray(prompt, jnp.int32)
+        _, row, prev = self.steps.prefill(self.params, row, prompt[None, :])
+        self.pool.write_slot(slot, row)
+        return int(prev[0])
+
+    def export_row(self, slot: int) -> Dict[str, jax.Array]:
+        """Dense batch-1 copy of pool row ``slot`` (stream migration: the
+        row moves to another replica's pool bit-identically)."""
+        return gather_slots(self.pool.cache, jnp.asarray([slot], jnp.int32))
+
+    def import_row(self, slot: int, row_cache: Dict[str, jax.Array]) -> None:
+        """Install an exported row into pool row ``slot``."""
+        self.pool.write_slot(slot, row_cache)
+
+    # -- compute -------------------------------------------------------------
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None) -> Dict[int, float]:
+        """Compile the verify step for bucket sizes up front (batches of
+        scratch-slot rows), so measured runs never pay a mid-serving compile.
+        Safe anytime: scratch contents are never read as committed state.
+
+        ``buckets`` selects a subset of ``self.buckets`` (deployments budget
+        startup by warming only the fills they expect; the rest compile
+        lazily on first dispatch).  Returns ``{bucket: compile_seconds}``
+        for this call — also accumulated in ``self.compile_log`` and logged
+        at INFO so startup budgets are observable (ROADMAP "bucket
+        compilation budget")."""
+        if buckets is None:
+            selected = list(self.buckets)
+        else:
+            selected = sorted(set(int(b) for b in buckets))
+            unknown = [b for b in selected if b not in self.buckets]
+            if unknown:
+                raise ValueError(
+                    f"unknown warmup buckets {unknown}; engine buckets are {self.buckets}"
+                )
+        times: Dict[int, float] = {}
+        for b in selected:
+            t0 = time.perf_counter()
+            vb = verification.make_verify_batch(
+                jnp.zeros((b,), jnp.int32),
+                jnp.zeros((b, self.k_max), jnp.int32),
+                jnp.zeros((b,), jnp.int32),
+                draft_q=None if self.greedy else jnp.zeros((b, self.k_max), jnp.float32),
+                seed=np.uint32(0),
+            )
+            slots = jnp.full((b,), self.pool.scratch_slot, jnp.int32)
+            _, self.pool.cache = self.steps.verify(self.params, self.pool.cache, slots, vb)
+            jax.block_until_ready(self.pool.cache["length"])
+            times[b] = time.perf_counter() - t0
+            log.info("warmup: bucket %d verify step ready in %.2fs", b, times[b])
+        self.compile_log.update(times)
+        return times
+
+    def verify(
+        self,
+        slots: np.ndarray,
+        prev: np.ndarray,
+        toks: np.ndarray,
+        qs: Optional[np.ndarray],
+        lens: np.ndarray,
+    ) -> Tuple[Any, int, float]:
+        """One bucketed verify pass over pool rows ``slots``.
+
+        Inputs are the un-padded per-request arrays; the core pads them to
+        the enclosing bucket (scratch-slot rows for the fill) and commits
+        the accepted prefixes into the pool.  Returns
+        ``(VerifyResult, bucket, step_seconds)``.
+        """
+        t_wall = time.perf_counter()
+        bucket = self.bucket_for(slots.shape[0])
+        slots_p = _pad_to(np.asarray(slots, np.int32), bucket, fill=self.pool.scratch_slot)
+        vb = verification.make_verify_batch(
+            jnp.asarray(_pad_to(prev, bucket)),
+            jnp.asarray(_pad_to(toks, bucket)),
+            jnp.asarray(_pad_to(lens, bucket)),
+            draft_q=jnp.asarray(_pad_to(qs, bucket)) if qs is not None else None,
+            seed=np.uint32(self._seed),
+        )
+        res, self.pool.cache = self.steps.verify(
+            self.params, self.pool.cache, jnp.asarray(slots_p), vb
+        )
+        self._seed += 1
+        return res, bucket, time.perf_counter() - t_wall
+
+    def force_extend(self, slot: int, feed: np.ndarray) -> None:
+        """Append ``feed`` (already shifted to satisfy the KV invariant) to
+        pool row ``slot`` without verification (§III-A fallback resync)."""
+        padded = np.zeros((self.k_max + 1,), np.int32)
+        padded[: feed.size] = feed
+        self.pool.cache = self.steps.extend(
+            self.params,
+            self.pool.cache,
+            jnp.asarray([slot], jnp.int32),
+            jnp.asarray(padded[None, :]),
+            jnp.asarray([feed.size], jnp.int32),
+        )

@@ -1,22 +1,30 @@
-"""Continuous-batching verification engine over a paged KV-cache pool.
+"""Single-replica verification engine: EngineCore + AdmissionControl composed.
 
 This is the real-model counterpart of serving/simulator.py's server loop
 (SLED §III-B): verification requests from heterogeneous edge devices queue
 in a BatchPlanner, and whenever the policy fires the engine verifies the
 scheduled SUBSET of device streams in one forward pass — partial fills,
-heterogeneous draft lengths, devices joining and leaving mid-stream — by
-gathering their pool rows into a dense bucket-sized batch (models/kvcache.py)
-and scattering committed state back.  The seed's serve loop could only
-verify the full device set in lock-step; this engine is what lets the
-``continuous`` and ``deadline`` policies run against real models.
+heterogeneous draft lengths, devices joining and leaving mid-stream.
+
+Layering (the engine-core refactor):
+
+  core/engine.py      EngineCore — the pure verify stepper: PagedKVCache row
+                      pool, jitted prefill/verify/extend steps (a shareable
+                      VerifySteps bundle), bucket selection, warmup.
+  core/admission.py   AdmissionControl — stream registry, one-inflight-round
+                      queue discipline, BatchPlanner dispatch policies.
+  here                ServerEngine — composes the two behind the original
+                      single-replica API, and adds the serving stats.
+  cluster/router.py   Router — N ServerEngine replicas behind a placement
+                      policy (admission becomes a placement decision).
 
 Per-round and aggregate stats mirror serving/simulator.SimResult field names
 so discrete-event predictions can be cross-checked against real-model runs
 (benchmarks/wstgr.py --engine does exactly that).
 
-Layering: ServerEngine is verification-side only.  EdgeDeviceKit/EdgeDevice
-are the host-side stand-ins for device drafting loops (batch-1 draft model
-per device, shared jitted step), used by launch/serve.py and the tests.
+EdgeDeviceKit/EdgeDevice are the host-side stand-ins for device drafting
+loops (batch-1 draft model per device, shared jitted step), used by
+launch/serve.py, transport/client.py, and the tests.
 """
 
 from __future__ import annotations
@@ -31,89 +39,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import drafting, verification
-from repro.core.scheduler import BatchPlanner, VerifyRequest
-from repro.models.kvcache import PagedKVCache, SlotExhausted, supports_paged_attention
+from repro.core.admission import AdmissionControl, DeviceStream
+from repro.core.engine import (
+    EngineCore,
+    EngineStats,
+    RoundStats,
+    Verdict,
+    VerifySteps,
+)
+from repro.models.kvcache import SlotExhausted
 from repro.models.layers import NO_MESH, MeshContext
+
+__all__ = [
+    "DeviceStream",
+    "EdgeDevice",
+    "EdgeDeviceKit",
+    "EngineStats",
+    "RoundStats",
+    "ServerEngine",
+    "Verdict",
+]
 
 log = logging.getLogger(__name__)
 
 
-@dataclasses.dataclass
-class DeviceStream:
-    """Server-side state of one admitted device stream."""
-
-    device_id: int
-    slot: int
-    prev_token: int
-    committed: List[int] = dataclasses.field(default_factory=list)
-    admitted_at: float = 0.0
-    rounds: int = 0
-
-
-@dataclasses.dataclass
-class Verdict:
-    """Per-request outcome of one engine round (device resume protocol)."""
-
-    device_id: int
-    n_accepted: int
-    tokens: np.ndarray  # committed this round: accepted drafts + extra
-    next_prev: int  # correction/bonus token the device feeds next round
-
-
-@dataclasses.dataclass
-class RoundStats:
-    time: float
-    size: int  # batch fill (requests verified)
-    bucket: int  # padded jit batch size
-    queue_depth: int  # planner queue after dispatch
-    n_commit: int  # tokens committed this round
-    step_seconds: float  # wall time of the verify call
-
-
-@dataclasses.dataclass
-class EngineStats:
-    """Aggregate serving stats; field names mirror simulator.SimResult.
-
-    The wire fields (bytes/frames both directions, drops) are zero for the
-    in-process driver and filled in by transport.server.TransportServer from
-    its link stats, so benchmarks emit one uniform record either way.
-    """
-
-    wstgr: float
-    per_device_rate: float
-    server_busy_frac: float
-    rounds: int
-    timeouts: int
-    fallback_tokens: int
-    mean_batch_fill: float
-    mean_round_latency: float
-    server_rounds_per_s: float
-    partial_rounds: int = 0
-    streams_served: int = 0
-    acceptance_rate: float = 0.0
-    mean_queue_depth: float = 0.0
-    # wire stats (transport runtime only)
-    bytes_tx: int = 0
-    bytes_rx: int = 0
-    frames_tx: int = 0
-    frames_rx: int = 0
-    frames_dropped: int = 0
-    fallback_rounds: int = 0
-
-    def as_dict(self):
-        return dataclasses.asdict(self)
-
-
-def _pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
-    if a.shape[0] == n:
-        return a
-    pad = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
-    return np.concatenate([a, pad], axis=0)
-
-
 class ServerEngine:
-    """Admission + step loop: PagedKVCache pool, BatchPlanner policies,
-    bucketed slot-indexed verification.
+    """Admission + step loop for ONE replica: PagedKVCache pool, BatchPlanner
+    policies, bucketed slot-indexed verification.
 
     Typical driver loop (see launch/serve.py)::
 
@@ -122,6 +74,10 @@ class ServerEngine:
         engine.submit(device_id, draft_tokens, now)   # device -> server hop
         verdicts = engine.step(now)                   # policy may dispatch
         engine.retire(device_id)                      # frees the slot
+
+    Pass a shared :class:`~repro.core.engine.VerifySteps` via ``steps`` to
+    make replicas of the same model share compiled executables
+    (cluster/router.py does this for its whole replica set).
     """
 
     def __init__(
@@ -142,71 +98,94 @@ class ServerEngine:
         ctx: MeshContext = NO_MESH,
         buckets: Optional[Sequence[int]] = None,
         paged_attention: bool = True,
+        steps: Optional[VerifySteps] = None,
     ):
-        self.model = model
-        self.params = params
-        self.k_max = k_max
-        self.greedy = greedy
-        # slot-indexed verify attention straight out of the pool; SSM/hybrid
-        # caches fall back to gather/scatter (their recurrent state leaves
-        # are not position-indexed K/V — see models/kvcache.py)
-        self.paged_attention = bool(paged_attention) and supports_paged_attention(model.cfg)
-        self.pool = PagedKVCache(model, n_slots, max_len, attn_chunk=attn_chunk)
         cap = batch_size or n_slots
-        self._batch_cap = cap
-        self.planner = BatchPlanner(
+        self.core = EngineCore(
+            model,
+            params,
+            n_slots=n_slots,
+            max_len=max_len,
+            k_max=k_max,
+            greedy=greedy,
+            temperature=temperature,
+            attn_chunk=attn_chunk,
+            ctx=ctx,
+            buckets=buckets,
+            batch_cap=cap,
+            paged_attention=paged_attention,
+            steps=steps,
+        )
+        self.admission = AdmissionControl(
             batch_size=cap,
             k_max=k_max,
             policy=policy,
             max_wait=max_wait,
             straggler_timeout=straggler_timeout,
+            greedy=greedy,
         )
-        if buckets is None:
-            buckets, b = [], 1
-            while b < cap:
-                buckets.append(b)
-                b *= 2
-            buckets.append(cap)
-        self.buckets = sorted(set(buckets))
-        self._verify = jax.jit(
-            verification.make_paged_verify_step(
-                model,
-                scratch_slot=self.pool.scratch_slot,
-                ctx=ctx,
-                greedy=greedy,
-                temperature=temperature,
-                attn_chunk=attn_chunk,
-                paged_attention=self.paged_attention,
-            )
-        )
-        self._prefill = jax.jit(
-            verification.make_prefill_step(model, ctx=ctx, attn_chunk=attn_chunk)
-        )
-        self._extend = jax.jit(
-            verification.make_force_extend_step(
-                model,
-                ctx=ctx,
-                attn_chunk=attn_chunk,
-                paged_attention=self.paged_attention,
-            )
-        )
-        self.compile_log: Dict[int, float] = {}  # bucket -> warmup seconds
-        self.streams: Dict[int, DeviceStream] = {}
+        self.k_max = k_max
+        self.greedy = greedy
+        self._batch_cap = cap
         self.round_log: List[RoundStats] = []
-        self._inflight: set = set()  # device_ids with a queued request
-        self._timeouts = 0
-        self._seed = 0
-        self._req_id = 0
         self._t0: Optional[float] = None
         self._t_last = 0.0
         self._committed_total = 0
-        self._streams_served = 0
         self._busy_seconds = 0.0
         self._latencies: List[float] = []
         self._drafted = 0
         self._accepted = 0
         self._fallback_tokens = 0
         self._fallback_rounds = 0
+
+    # -- composition surface (back-compat aliases) ---------------------------
+
+    @property
+    def model(self):
+        return self.core.model
+
+    @property
+    def params(self):
+        return self.core.params
+
+    @property
+    def pool(self):
+        return self.core.pool
+
+    @property
+    def steps(self) -> VerifySteps:
+        return self.core.steps
+
+    @property
+    def paged_attention(self) -> bool:
+        return self.core.paged_attention
+
+    @property
+    def buckets(self):
+        return self.core.buckets
+
+    @property
+    def compile_log(self):
+        return self.core.compile_log
+
+    @property
+    def planner(self):
+        return self.admission.planner
+
+    @property
+    def streams(self) -> Dict[int, DeviceStream]:
+        return self.admission.streams
+
+    @property
+    def _timeouts(self) -> int:
+        return self.admission.timeouts
+
+    @property
+    def _streams_served(self) -> int:
+        return self.admission.streams_served
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None) -> Dict[int, float]:
+        return self.core.warmup(buckets)
 
     # -- admission -----------------------------------------------------------
 
@@ -216,15 +195,11 @@ class ServerEngine:
         if device_id in self.streams:
             raise ValueError(f"device {device_id} already admitted")
         try:
-            slot = self.pool.alloc()
+            slot = self.core.alloc_slot()
         except SlotExhausted:
             return None
-        row = self.pool.make_row_cache()
-        prompt = jnp.asarray(prompt, jnp.int32)
-        _, row, prev = self._prefill(self.params, row, prompt[None, :])
-        self.pool.write_slot(slot, row)
-        stream = DeviceStream(device_id, slot, int(prev[0]), admitted_at=now)
-        self.streams[device_id] = stream
+        prev = self.core.prefill_slot(slot, prompt)
+        stream = self.admission.register(device_id, slot, prev, now)
         if self._t0 is None:
             self._t0 = now
         return stream
@@ -232,14 +207,35 @@ class ServerEngine:
     def retire(self, device_id: int) -> DeviceStream:
         """Stream finished (or left): free its slot for the next admission.
         Any still-queued request from the device is discarded."""
-        stream = self.streams.pop(device_id)
-        if device_id in self._inflight:
-            self.planner.queue = type(self.planner.queue)(
-                r for r in self.planner.queue if r.device_id != device_id
-            )
-            self._inflight.discard(device_id)
-        self.pool.free(stream.slot)
-        self._streams_served += 1
+        stream = self.admission.release(device_id, served=True)
+        self.core.free_slot(stream.slot)
+        return stream
+
+    # -- stream migration (cluster router) -----------------------------------
+
+    def export_stream(self, device_id: int):
+        """Detach a quiescent stream for migration to another replica.
+
+        Returns ``(stream, row_cache)`` — the server-side stream state plus a
+        bit-exact dense copy of its pool row.  Refuses while a request is in
+        flight (the verdict must land first; the row would otherwise change
+        under the copy)."""
+        if self.admission.has_inflight(device_id):
+            raise ValueError(f"device {device_id} has a request in flight; cannot migrate")
+        row = self.core.export_row(self.streams[device_id].slot)
+        stream = self.admission.release(device_id, served=False)
+        self.core.free_slot(stream.slot)
+        return stream, row
+
+    def import_stream(self, stream: DeviceStream, row_cache) -> DeviceStream:
+        """Adopt a stream exported from another replica: allocate a slot,
+        install the row bit-identically, register the stream."""
+        slot = self.core.alloc_slot()  # raises SlotExhausted when full
+        self.core.import_row(slot, row_cache)
+        stream.slot = slot
+        self.admission.adopt(stream)
+        if self._t0 is None:
+            self._t0 = stream.admitted_at
         return stream
 
     # -- request queue -------------------------------------------------------
@@ -251,51 +247,21 @@ class ServerEngine:
         now: float,
         draft_q: Optional[np.ndarray] = None,
     ) -> None:
-        stream = self.streams[device_id]
-        if device_id in self._inflight:
-            # a second in-flight request would put the same cache row twice
-            # in one scatter (undefined winner) — the device must wait for
-            # its verdict (EdgeDevice.awaiting mirrors this server-side)
-            raise ValueError(f"device {device_id} already has a request in flight")
-        if not self.greedy and draft_q is None:
-            raise ValueError("sampling mode needs per-request draft_q")
-        if self.greedy:
-            # greedy verification ignores q — and feeding it anyway would
-            # change the jitted verify batch's pytree structure and recompile
-            # every bucket behind warmup()'s back
-            draft_q = None
-        self.planner.add(
-            VerifyRequest(
-                device_id=device_id,
-                arrival=now,
-                prev_token=stream.prev_token,
-                draft_tokens=np.asarray(draft_tokens),
-                draft_q=draft_q,
-                request_id=self._req_id,
-            )
-        )
-        self._inflight.add(device_id)
-        self._req_id += 1
+        self.admission.submit(device_id, draft_tokens, now, draft_q=draft_q)
 
     def cancel_request(self, device_id: int) -> bool:
         """Withdraw the device's queued request (transport fallback protocol:
         the device timed out and released its drafts locally).  Returns False
         when nothing is queued — i.e. the request was already verified and a
         verdict is on its way, which the caller must treat as authoritative."""
-        if device_id not in self._inflight:
-            return False
-        self.planner.queue = type(self.planner.queue)(
-            r for r in self.planner.queue if r.device_id != device_id
-        )
-        self._inflight.discard(device_id)
-        return True
+        return self.admission.cancel(device_id)
 
     def force_extend(self, device_id: int, tokens: np.ndarray) -> int:
         """Append ``tokens`` to the stream unverified (§III-A fallback resync:
         the device already released them to the user).  Returns the stream's
         new prev token; the device drafts from there next round."""
         stream = self.streams[device_id]
-        if device_id in self._inflight:
+        if self.admission.has_inflight(device_id):
             raise ValueError(f"device {device_id} still has a request in flight")
         toks = np.asarray(tokens, np.int32).reshape(-1)
         if toks.size == 0:
@@ -305,15 +271,7 @@ class ServerEngine:
         # KV invariant: the last committed token is never in the cache, so we
         # feed [prev, t_1 .. t_{n-1}] and the new prev becomes t_n
         feed = np.concatenate([[stream.prev_token], toks[:-1]]).astype(np.int32)
-        padded = np.zeros((self.k_max + 1,), np.int32)
-        padded[: feed.size] = feed
-        self.pool.cache = self._extend(
-            self.params,
-            self.pool.cache,
-            jnp.asarray([stream.slot], jnp.int32),
-            jnp.asarray(padded[None, :]),
-            jnp.asarray([feed.size], jnp.int32),
-        )
+        self.core.force_extend(stream.slot, feed)
         stream.committed.extend(int(t) for t in toks)
         stream.prev_token = int(toks[-1])
         self._committed_total += toks.size
@@ -323,115 +281,50 @@ class ServerEngine:
 
     def has_inflight(self, device_id: int) -> bool:
         """True while the device has a queued (unverdicted) request."""
-        return device_id in self._inflight
+        return self.admission.has_inflight(device_id)
 
     @property
     def queue_depth(self) -> int:
-        return len(self.planner.queue)
+        return self.admission.queue_depth
 
-    def _bucket(self, n: int) -> int:
-        for b in self.buckets:
-            if b >= n:
-                return b
-        return self.buckets[-1]
-
-    def warmup(self, buckets: Optional[Sequence[int]] = None) -> Dict[int, float]:
-        """Compile the verify step for bucket sizes up front (batches of
-        scratch-slot rows), so measured runs never pay a mid-serving compile.
-        Safe anytime: scratch contents are never read as committed state.
-
-        ``buckets`` selects a subset of ``self.buckets`` (deployments budget
-        startup by warming only the fills they expect; the rest compile
-        lazily on first dispatch).  Returns ``{bucket: compile_seconds}``
-        for this call — also accumulated in ``self.compile_log`` and logged
-        at INFO so startup budgets are observable (ROADMAP "bucket
-        compilation budget")."""
-        if buckets is None:
-            selected = list(self.buckets)
-        else:
-            selected = sorted(set(int(b) for b in buckets))
-            unknown = [b for b in selected if b not in self.buckets]
-            if unknown:
-                raise ValueError(
-                    f"unknown warmup buckets {unknown}; engine buckets are {self.buckets}"
-                )
-        times: Dict[int, float] = {}
-        for b in selected:
-            t0 = time.perf_counter()
-            vb = verification.make_verify_batch(
-                jnp.zeros((b,), jnp.int32),
-                jnp.zeros((b, self.k_max), jnp.int32),
-                jnp.zeros((b,), jnp.int32),
-                draft_q=None if self.greedy else jnp.zeros((b, self.k_max), jnp.float32),
-                seed=np.uint32(0),
-            )
-            slots = jnp.full((b,), self.pool.scratch_slot, jnp.int32)
-            _, self.pool.cache = self._verify(self.params, self.pool.cache, slots, vb)
-            jax.block_until_ready(self.pool.cache["length"])
-            times[b] = time.perf_counter() - t0
-            log.info("warmup: bucket %d verify step ready in %.2fs", b, times[b])
-        self.compile_log.update(times)
-        return times
+    def next_event_hint(self, now: float) -> Optional[float]:
+        """Earliest future planner deadline/straggler event (step-loop wake)."""
+        return self.admission.next_event_hint(now)
 
     # -- the serving hot loop ------------------------------------------------
 
     def step(self, now: float) -> Optional[List[Verdict]]:
         """Ask the planner for a batch; if the policy fires, verify that row
         subset and commit.  Returns per-request verdicts, or None."""
-        # closed loop: never wait for more requests than there are active
-        # streams (mirrors the simulator's eff_batch cap) — otherwise the
-        # static policy deadlocks as soon as the first stream retires
-        self.planner.batch_size = max(1, min(self._batch_cap, len(self.streams) or 1))
-        batch = self.planner.next_batch(now, server_idle=True)
-        # straggler-evicted requests from still-active streams are requeued
-        # with a fresh arrival; a device that gave up instead cancels via
-        # cancel_request + force_extend (the transport fallback protocol) —
-        # in-process drivers never abandon, so requeueing is always safe here
-        if self.planner.dropped:
-            for req in self.planner.dropped:
-                if req.device_id in self.streams:
-                    self._timeouts += 1
-                    req.arrival = now
-                    self.planner.add(req)
-                else:
-                    self._inflight.discard(req.device_id)
-            self.planner.dropped = []
+        batch = self.admission.next_batch(now)
         if batch is None:
             return None
-        t_wall = time.perf_counter()
         prev, toks, qs, lens = batch.padded_arrays()
-        bucket = self._bucket(batch.size)
         slots = np.asarray(
             [self.streams[r.device_id].slot for r in batch.requests], np.int32
         )
-        slots = _pad_to(slots, bucket, fill=self.pool.scratch_slot)
-        vb = verification.make_verify_batch(
-            jnp.asarray(_pad_to(prev, bucket)),
-            jnp.asarray(_pad_to(toks, bucket)),
-            jnp.asarray(_pad_to(lens, bucket)),
-            draft_q=(
-                jnp.asarray(_pad_to(qs, bucket))
-                if any(r.draft_q is not None for r in batch.requests)
-                else None
-            ),
-            seed=np.uint32(self._seed),
+        res, bucket, step_seconds = self.core.verify(
+            slots,
+            prev,
+            toks,
+            qs if any(r.draft_q is not None for r in batch.requests) else None,
+            lens,
         )
-        res, self.pool.cache = self._verify(
-            self.params, self.pool.cache, jnp.asarray(slots), vb
-        )
-        self._seed += 1
 
         out_tokens = np.asarray(res.out_tokens)
         n_accepted = np.asarray(res.n_accepted)
         n_commit = np.asarray(res.n_commit)
         extra = np.asarray(res.extra_token)
+        depth_after = self.queue_depth
         verdicts = []
         committed_round = 0
         for i, req in enumerate(batch.requests):
             stream = self.streams[req.device_id]
-            self._inflight.discard(req.device_id)
+            self.admission.resolve(req.device_id)
             self._drafted += int(lens[i])
             self._accepted += int(n_accepted[i])
+            stream.drafted += int(lens[i])
+            stream.accepted += int(n_accepted[i])
             n = int(n_commit[i])
             toks_i = out_tokens[i, :n]
             stream.committed.extend(int(t) for t in toks_i)
@@ -442,12 +335,18 @@ class ServerEngine:
             verdicts.append(
                 Verdict(
                     device_id=req.device_id,
+                    # per-ROUND acceptance, not the lifetime ratio: a lifetime
+                    # average takes O(rounds) to register a regime shift, so
+                    # the device-side controller would keep burning k_max
+                    # verify tokens long after drafts stopped landing (the
+                    # client's EWMA does the smoothing)
                     n_accepted=int(n_accepted[i]),
                     tokens=toks_i,
                     next_prev=int(extra[i]),
+                    accept_rate=int(n_accepted[i]) / max(int(lens[i]), 1),
+                    queue_depth=depth_after,
                 )
             )
-        step_seconds = time.perf_counter() - t_wall
         self._busy_seconds += step_seconds
         self._committed_total += committed_round
         self._t_last = max(self._t_last, now)
@@ -456,7 +355,7 @@ class ServerEngine:
                 time=now,
                 size=batch.size,
                 bucket=bucket,
-                queue_depth=len(self.planner.queue),
+                queue_depth=depth_after,
                 n_commit=committed_round,
                 step_seconds=step_seconds,
             )
@@ -554,6 +453,20 @@ class EdgeDeviceKit:
         return EdgeDevice(self, device_id, prompt, max_len=max_len, seed=seed)
 
 
+def _clamp_draft(dres: drafting.DraftResult, k: Optional[int]) -> drafting.DraftResult:
+    """Cap a drafting round at ``k`` proposal tokens (adaptive spec length).
+
+    The draft scan always runs the jitted fixed-``k_max`` shape; clamping
+    ``lengths`` host-side truncates the *proposal* — greedy drafting is
+    autoregressive, so the first ``k`` tokens are exactly what a k-length
+    round would have produced, and rollback/resume key off ``lengths`` and
+    ``n_accepted`` only, never off the extra scanned positions.
+    """
+    if k is None or k < 1:
+        return dres
+    return dataclasses.replace(dres, lengths=jnp.minimum(dres.lengths, jnp.int32(k)))
+
+
 class EdgeDevice:
     """One edge device's drafting loop (SLED §III-A), batch size 1.
 
@@ -567,6 +480,10 @@ class EdgeDevice:
     pipelining never changes outputs.  On any miss the ahead work is simply
     discarded (JAX caches are immutable pytrees; rollback is keeping the old
     reference).
+
+    ``draft(k=...)`` caps the proposal length below the kit's ``k_max`` —
+    the adaptive spec-length controller (serving/speclen.py) moves that cap
+    round to round from the server's verdict feedback.
     """
 
     def __init__(self, kit: EdgeDeviceKit, device_id: int, prompt, *, max_len: int, seed: int):
@@ -587,14 +504,14 @@ class EdgeDevice:
         self.draft_seconds = 0.0  # wall time inside draft() — calibrates
         # the simulator's device_rate against real measured drafting
 
-    def draft(self) -> np.ndarray:
-        """Draft up to k_max tokens; returns the variable-length proposal.
-        ``pending_q`` holds the matching q(token) row for sampling-mode
-        submits (engine.submit(..., draft_q=dev.pending_q))."""
+    def draft(self, k: Optional[int] = None) -> np.ndarray:
+        """Draft up to min(k, k_max) tokens; returns the variable-length
+        proposal.  ``pending_q`` holds the matching q(token) row for
+        sampling-mode submits (engine.submit(..., draft_q=dev.pending_q))."""
         assert self._pending is None, "previous round still awaiting a verdict"
         t = time.perf_counter()
-        self.key, k = jax.random.split(self.key)
-        dres = self.kit._draft(self.kit.params, self.cache, self.prev, k)
+        self.key, kk = jax.random.split(self.key)
+        dres = _clamp_draft(self.kit._draft(self.kit.params, self.cache, self.prev, kk), k)
         self._set_pending(dres)
         n = int(dres.lengths[0])
         toks = np.asarray(dres.tokens[0, :n])  # materialize: honest timing
@@ -607,7 +524,7 @@ class EdgeDevice:
         n = int(dres.lengths[0])
         self.pending_q = np.asarray(dres.q_sel[0, :n])
 
-    def draft_ahead(self) -> Optional[np.ndarray]:
+    def draft_ahead(self, k: Optional[int] = None) -> Optional[np.ndarray]:
         """Pre-draft the next round while the current one is in flight.
 
         Returns the ahead proposal (or None if unsupported); it becomes live
@@ -626,9 +543,9 @@ class EdgeDevice:
         # state as if all n drafts were accepted; identical transform to the
         # full-acceptance verdict path, so a hit replays the exact fresh state
         cache_acc = drafting.resume_after_verify(self.kit.model, pend, jnp.asarray([n], jnp.int32))
-        self.key, k = jax.random.split(self.key)
+        self.key, kk = jax.random.split(self.key)
         prev_guess = jnp.asarray([bonus_guess], jnp.int32)
-        dres = self.kit._draft(self.kit.params, cache_acc, prev_guess, k)
+        dres = _clamp_draft(self.kit._draft(self.kit.params, cache_acc, prev_guess, kk), k)
         self._ahead = (bonus_guess, cache_acc, dres)
         m = int(dres.lengths[0])
         return np.asarray(dres.tokens[0, :m])

@@ -1,6 +1,16 @@
-"""SLED serving launcher: N edge clients + 1 verification server.
+"""SLED serving launcher: N edge clients + a replica-sharded cluster server.
 
-Three transports share the same models, engine, and equivalence check:
+The server side is a cluster Router (``--replicas``): N engine replicas
+sharing one compiled step bundle behind a pluggable placement policy
+(``--placement least-loaded|affinity|round-robin``), with stream migration
+on retire.  ``--replicas 1`` is the single-engine special case and must stay
+token-for-token identical to the lock-step reference.  ``--kctl adaptive``
+closes the spec-length loop: Verdict frames carry acceptance + queue-depth
+feedback and each client's AIMD controller tunes its draft length online
+(adaptive runs skip the equivalence check — adapting k legitimately changes
+scheduling AND tokens drafted per round).
+
+Three transports share the same models, cluster, and equivalence check:
 
   loopback  (default) clients and server exchange wire-protocol frames over
             zero-latency in-memory links — the full codec/admission/verdict
@@ -19,29 +29,33 @@ Three transports share the same models, engine, and equivalence check:
     PYTHONPATH=src python -m repro.launch.serve --devices 6                # loopback
     PYTHONPATH=src python -m repro.launch.serve --transport sim --net wlan
     PYTHONPATH=src python -m repro.launch.serve --transport sim --net lossy-wlan --no-check
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 --kctl adaptive \
+        --transport sim --draft-noise 0.05 --no-check
 """
 
 import argparse
 import asyncio
 import dataclasses
+import math
 import time
 
 import jax
 import numpy as np
 
+from repro.cluster import PLACEMENT_POLICIES, Router
 from repro.configs.base import get_config
 from repro.core.engine_loop import sled_generate
-from repro.core.server_engine import EdgeDeviceKit, ServerEngine
+from repro.core.server_engine import EdgeDeviceKit
 from repro.models.model_zoo import build_model, perturb_params
 from repro.quant.quantize import dequantize_pytree, quantize_pytree
 from repro.serving.devices import NETS
-from repro.transport.client import EdgeClient
+from repro.transport.client import ClientStats, EdgeClient
 from repro.transport.links import make_link
 from repro.transport.server import TransportServer
 
 
 def build_stack(args):
-    """Models, engine, device kit, prompts — shared by every transport."""
+    """Models, cluster router, device kit, prompts — shared by every transport."""
     vocab = 256
     tcfg = dataclasses.replace(get_config(args.arch).reduced(), vocab_size=vocab)
     dcfg = dataclasses.replace(
@@ -58,10 +72,15 @@ def build_stack(args):
 
     N = args.devices
     prompts = jax.random.randint(jax.random.key(2), (N, 12), 0, vocab)
-    engine = ServerEngine(
+    # per-replica slots: the fleet's pool capacity splits across replicas
+    # (total capacity >= devices unless --slots caps it explicitly)
+    slots = args.slots or math.ceil(N / args.replicas)
+    router = Router.build(
         target,
         tp,
-        n_slots=args.slots or N,
+        replicas=args.replicas,
+        n_slots=slots,
+        placement=args.placement,
         max_len=128,
         k_max=args.k_max,
         policy=args.policy,
@@ -70,10 +89,15 @@ def build_stack(args):
         attn_chunk=32,
         paged_attention=args.paged_attention,
     )
-    if args.paged_attention and not engine.paged_attention:
+    if args.replicas > 1:
+        print(
+            f"cluster: {args.replicas} replicas x {slots} slots, "
+            f"placement {args.placement}, shared step bundle"
+        )
+    if args.paged_attention and not router.paged_attention:
         print(f"paged attention unsupported for family {tcfg.family}: gather fallback")
     kit = EdgeDeviceKit(draft, dp, k_max=args.k_max, c_th=args.c_th, greedy=True, attn_chunk=32)
-    return draft, dp, target, tp, engine, kit, prompts
+    return draft, dp, target, tp, router, kit, prompts
 
 
 def check_outputs(outputs, draft, dp, target, tp, prompts, args) -> bool:
@@ -115,6 +139,7 @@ async def serve_transport(args) -> dict:
                 max_new=args.max_new, max_len=128,
                 qmode=args.qmode, pipeline=args.pipeline,
                 verify_timeout=args.verify_timeout, admit_timeout=args.verify_timeout,
+                kctl=args.kctl,
                 seed=1000 + i,
             )
         )
@@ -133,10 +158,8 @@ async def serve_transport(args) -> dict:
     stats = server.stats()
     await server.stop()
 
-    hits = sum(c.stats.pipeline_hits for c in clients)
-    misses = sum(c.stats.pipeline_misses for c in clients)
-    fb_rounds = sum(c.stats.fallback_rounds for c in clients)
-    drops = stats.frames_dropped + sum(c.stats.frames_dropped for c in clients)
+    fleet = ClientStats.merge([c.stats for c in clients])
+    drops = stats.frames_dropped + fleet.frames_dropped
     print(
         f"served {stats.streams_served} streams, "
         f"{sum(len(o) for o in outputs)} tokens in {stats.rounds} rounds / {wall:.1f}s "
@@ -147,15 +170,29 @@ async def serve_transport(args) -> dict:
     print(
         f"wire: {stats.bytes_rx} B up / {stats.bytes_tx} B down in "
         f"{stats.frames_rx + stats.frames_tx} frames, {drops} dropped — "
-        f"pipeline {hits} hits / {misses} misses, "
-        f"{fb_rounds} fallback rounds ({stats.fallback_tokens} unverified tokens)"
+        f"pipeline {fleet.pipeline_hits} hits / {fleet.pipeline_misses} misses, "
+        f"{fleet.fallback_rounds} fallback rounds "
+        f"({stats.fallback_tokens} unverified tokens)"
     )
+    if args.replicas > 1:
+        print(
+            f"cluster: per-replica rounds "
+            f"{[s.rounds for s in engine.replica_stats()]}, "
+            f"{engine.migrations} migrations"
+        )
+    if args.kctl == "adaptive":
+        print(
+            f"adaptive k: mean {fleet.k_mean:.2f}, final "
+            f"{[c.stats.k_final for c in clients]} (k_max {args.k_max})"
+        )
 
     result = stats.as_dict()
     result["clients"] = [c.stats.as_dict() for c in clients]
     if args.check:
         if stats.fallback_tokens:
             print("skipping equivalence check: fallback released unverified tokens")
+        elif args.kctl != "fixed":
+            print("skipping equivalence check: adaptive spec length changes round shapes")
         else:
             out_map = {i: o for i, o in enumerate(outputs)}
             assert check_outputs(out_map, draft, dp, target, tp, prompts, args), (
@@ -170,6 +207,11 @@ async def serve_transport(args) -> dict:
 
 
 def serve_inproc(args) -> dict:
+    if args.kctl != "fixed":
+        raise SystemExit(
+            "--kctl adaptive needs the transport runtime (the feedback rides "
+            "Verdict frames); use --transport loopback or sim"
+        )
     draft, dp, target, tp, engine, kit, prompts = build_stack(args)
     N, max_len = args.devices, 128
 
@@ -247,7 +289,16 @@ def main() -> None:
     ap.add_argument("--net", choices=sorted(NETS), default="wlan",
                     help="NetProfile for --transport sim links")
     ap.add_argument("--devices", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=0, help="cache pool rows (0: = devices)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="server engine replicas behind the cluster router")
+    ap.add_argument("--placement", choices=sorted(PLACEMENT_POLICIES),
+                    default="least-loaded",
+                    help="replica placement policy for new streams")
+    ap.add_argument("--kctl", choices=("fixed", "adaptive"), default="fixed",
+                    help="spec-length control: fixed k_max, or closed-loop "
+                         "AIMD on Verdict acceptance/queue-depth feedback")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="cache pool rows PER REPLICA (0: ceil(devices/replicas))")
     ap.add_argument("--k-max", type=int, default=4)
     ap.add_argument("--c-th", type=float, default=0.3)
     ap.add_argument("--max-new", "--steps", dest="max_new", type=int, default=24,

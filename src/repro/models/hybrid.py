@@ -159,7 +159,16 @@ def prefill(cfg, params, tokens, cache, ctx: MeshContext = NO_MESH, *,
 
 
 def decode_forward(cfg, params, cache, tokens, ctx: MeshContext = NO_MESH, *,
-                   attn_chunk: int = 1024, **_):
+                   attn_chunk: int = 1024, slots=None, **_):
+    if slots is not None:
+        raise NotImplementedError(
+            "slot-indexed paged attention is not supported for the 'hybrid' "
+            "family: its recurrent state leaves (ssm, conv) are not position-"
+            "indexed K/V, so pool rows cannot be addressed in place.  Route "
+            "this model through the gather/scatter fallback instead "
+            "(paged_attention=False, or gate on "
+            "models.kvcache.supports_paged_attention(cfg))."
+        )
     x, ssm_ck, conv_ck, new_kv = _run_cached(cfg, params, cache, tokens, ctx, attn_chunk, True)
     ckpt_cache = {**cache, "k": new_kv[0], "v": new_kv[1],
                   "ssm_ckpt": ssm_ck, "conv_ckpt": conv_ck}

@@ -321,12 +321,21 @@ def prefill(cfg, params, tokens, cache, ctx: MeshContext = NO_MESH, **_):
     return lm_head(cfg, params, x[:, -1:, :])[:, 0], new_cache
 
 
-def decode_forward(cfg, params, cache, tokens, ctx: MeshContext = NO_MESH, **_):
+def decode_forward(cfg, params, cache, tokens, ctx: MeshContext = NO_MESH, *,
+                   slots=None, **_):
     """Verify-style decode: K tokens, per-position state checkpoints.
 
     Returns (h (B,K,d), ckpt_cache, aux).  ``ckpt_cache['ssm']`` has an extra
     K axis: (L, B, K, H, P, N); commit with select_checkpoint(ckpt_cache, n).
     """
+    if slots is not None:
+        raise NotImplementedError(
+            "slot-indexed paged attention is not supported for the 'ssm' family: "
+            "recurrent state leaves (ssm, conv) are not position-indexed K/V, so "
+            "pool rows cannot be addressed in place.  Route this model through "
+            "the gather/scatter fallback instead (paged_attention=False, or gate "
+            "on models.kvcache.supports_paged_attention(cfg))."
+        )
     x = L.embed_lookup(params["embed"], tokens, ctx)
 
     def body(h, xs):

@@ -1,0 +1,93 @@
+"""Closed-loop adaptive speculation length (bounded AIMD).
+
+SLED's ConfigSpec picks a static draft length per device class offline; the
+heterogeneous-edge result (PAPERS.md, arXiv:2510.11331) is that the right
+``k`` drifts at runtime with acceptance and server congestion.  The v2
+Verdict frames feed back exactly those two signals — the round's
+draft-acceptance ratio (per-round, so regime shifts register immediately;
+this controller's EWMA does the smoothing) and the serving replica's queue
+depth — and this controller closes the loop device-side:
+
+  * additive increase  — acceptance high AND the replica queue shallow:
+    speculation is paying, draft one more token per round (up to ``k_max``);
+  * multiplicative decrease — acceptance low OR the queue deep: wrong drafts
+    (or an oversubscribed replica) burn server verify compute, so halve the
+    round length (down to ``k_min``).
+
+AIMD keeps the control stable under the same argument as congestion control:
+increases probe linearly, wrong guesses back off geometrically, and the
+bounds make the worst case exactly the fixed-``k`` policies it replaces
+(``k_min == k_max`` degenerates to fixed).  Acceptance is EWMA-smoothed so a
+single unlucky round doesn't collapse ``k``.
+
+Host-side and deterministic: the jitted draft scan always runs the fixed
+``k_max`` shape and the proposal is truncated to ``k`` host-side
+(EdgeDevice.draft(k=...)), so adapting never recompiles anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class SpecLenController:
+    """Bounded AIMD controller for the per-device speculation length ``k``.
+
+    ``update(accept_rate, queue_depth)`` is called once per verdict and
+    returns the length to draft next round.  All thresholds are plain
+    constructor knobs so benchmarks can sweep them (ConfigSpec-style, but
+    online).
+    """
+
+    k_max: int
+    k_min: int = 1
+    k_init: Optional[int] = None  # None: start at k_max (optimistic probe)
+    increase: int = 1  # additive step up
+    decrease: float = 0.5  # multiplicative back-off factor
+    accept_hi: float = 0.7  # smoothed acceptance to justify a longer round
+    accept_lo: float = 0.4  # below this, drafts are burning verify compute
+    queue_hi: int = 2  # replica queue depth that reads as congestion
+    ewma: float = 0.5  # smoothing on the acceptance feedback
+
+    def __post_init__(self) -> None:
+        if not (1 <= self.k_min <= self.k_max):
+            raise ValueError(f"need 1 <= k_min <= k_max, got [{self.k_min}, {self.k_max}]")
+        self.k = min(self.k_init or self.k_max, self.k_max)
+        self.k = max(self.k, self.k_min)
+        self._acc: Optional[float] = None
+        self.updates = 0
+        self.increases = 0
+        self.decreases = 0
+
+    @property
+    def smoothed_accept(self) -> float:
+        return self._acc if self._acc is not None else 1.0
+
+    def update(self, accept_rate: float, queue_depth: int) -> int:
+        """One feedback observation -> the next round's draft length."""
+        a = float(accept_rate)
+        self._acc = a if self._acc is None else self.ewma * a + (1 - self.ewma) * self._acc
+        self.updates += 1
+        congested = queue_depth > self.queue_hi
+        if congested or self._acc < self.accept_lo:
+            new_k = max(self.k_min, int(self.k * self.decrease))
+            if new_k < self.k:
+                self.decreases += 1
+            self.k = new_k
+        elif self._acc >= self.accept_hi:
+            new_k = min(self.k_max, self.k + self.increase)
+            if new_k > self.k:
+                self.increases += 1
+            self.k = new_k
+        return self.k
+
+
+def make_controller(kctl: str, *, k_max: int, **kw) -> Optional[SpecLenController]:
+    """``adaptive`` -> a controller, ``fixed`` -> None (draft k_max always)."""
+    if kctl == "fixed":
+        return None
+    if kctl == "adaptive":
+        return SpecLenController(k_max=k_max, **kw)
+    raise ValueError(f"unknown kctl {kctl!r} (fixed | adaptive)")

@@ -7,12 +7,16 @@ simulator-only abstractions:
 
   codec.py   — length-prefixed binary frames (DraftPacket / Verdict /
                admission + fallback control) with optional fp16/int8
-               quantization of the draft-probability payload
-  links.py   — channel abstraction: zero-latency loopback and a
-               SimulatedLink imposing per-NetProfile latency/bandwidth/
-               jitter/drop on every frame
-  server.py  — asyncio TransportServer wrapping core.server_engine
-  client.py  — asyncio EdgeClient: pipelined draft-ahead device loop
+               quantization of the draft-probability payload; v2 Verdicts
+               carry acceptance + queue-depth feedback for adaptive k
+  links.py   — channel abstraction: zero-latency loopback, a SimulatedLink
+               imposing per-NetProfile latency/bandwidth/jitter/drop on
+               every frame, and StreamEndpoint over real TCP/UDS sockets
+               (tcp_listen / tcp_connect)
+  server.py  — asyncio TransportServer fronting a ServerEngine or a
+               cluster Router of N replicas (same serving surface)
+  client.py  — asyncio EdgeClient: pipelined draft-ahead device loop with
+               optional closed-loop AIMD spec-length control
 """
 
 from repro.transport.codec import (
@@ -28,7 +32,15 @@ from repro.transport.codec import (
     decode_frame,
     encode_frame,
 )
-from repro.transport.links import LinkStats, LoopbackLink, SimulatedLink, make_link
+from repro.transport.links import (
+    LinkStats,
+    LoopbackLink,
+    SimulatedLink,
+    StreamEndpoint,
+    make_link,
+    tcp_connect,
+    tcp_listen,
+)
 
 __all__ = [
     "Admit",
@@ -45,5 +57,8 @@ __all__ = [
     "LinkStats",
     "LoopbackLink",
     "SimulatedLink",
+    "StreamEndpoint",
     "make_link",
+    "tcp_connect",
+    "tcp_listen",
 ]

@@ -16,6 +16,12 @@
               client never mutates draft-cache state until the server has
               arbitrated, so client and server token streams can never
               diverge.
+  adaptive k  with ``kctl="adaptive"`` the client feeds each Verdict's
+              accept_rate/queue_depth feedback to a bounded AIMD controller
+              (serving/speclen.py) and caps the next round's draft length
+              at the controller's k — closed-loop spec-length control.
+              ``kctl="fixed"`` (default) always drafts the kit's k_max and
+              is bit-identical to the pre-feedback client.
 
 The client's committed stream is exactly the server's committed stream for
 its slot; on zero-latency lossless links it is token-for-token identical to
@@ -30,6 +36,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.server_engine import EdgeDevice, EdgeDeviceKit
+from repro.serving.speclen import make_controller
 from repro.transport import codec
 from repro.transport.links import Endpoint
 
@@ -51,9 +58,30 @@ class ClientStats:
     frames_rx: int = 0
     frames_dropped: int = 0
     wall_seconds: float = 0.0
+    k_final: int = 0  # spec length after the last controller update
+    k_mean: float = 0.0  # mean proposal length actually sent per round
 
     def as_dict(self):
         return dataclasses.asdict(self)
+
+    @classmethod
+    def merge(cls, stats: List["ClientStats"]) -> "ClientStats":
+        """Fleet-level sum (count fields) / mean (k, wall): launchers and
+        benchmarks report one record instead of hand-summing per client."""
+        if not stats:
+            return cls(device_id=-1)
+        out = cls(device_id=-1)
+        for f in dataclasses.fields(cls):
+            if f.name == "device_id":
+                continue
+            vals = [getattr(s, f.name) for s in stats]
+            if f.name == "k_final":
+                out.k_final = round(sum(vals) / len(vals))
+            elif f.name in ("k_mean", "wall_seconds"):
+                setattr(out, f.name, float(sum(vals) / len(vals)))
+            else:
+                setattr(out, f.name, sum(vals))
+        return out
 
 
 class ProtocolError(RuntimeError):
@@ -76,6 +104,8 @@ class EdgeClient:
         admit_timeout: float = 2.0,
         max_retries: int = 64,
         draft_rate: Optional[float] = None,
+        kctl: str = "fixed",
+        kctl_kw: Optional[dict] = None,
         seed: int = 0,
     ):
         self.kit = kit
@@ -94,6 +124,9 @@ class EdgeClient:
         # throttle to DeviceProfile rates — the sleep overlaps other clients'
         # compute, restoring the concurrency a real fleet would have
         self.draft_rate = draft_rate
+        # closed-loop spec length: None (fixed k_max) or an AIMD controller
+        # fed by the Verdict accept_rate/queue_depth feedback fields
+        self.kctl = make_controller(kctl, k_max=kit.k_max, **(kctl_kw or {}))
         self.seed = seed
         self.stats = ClientStats(device_id=device_id)
         self.device: Optional[EdgeDevice] = None
@@ -185,7 +218,9 @@ class EdgeClient:
                     await asyncio.sleep(need)
 
         seq = 0
-        tokens = dev.draft()
+        k = self.kctl.k if self.kctl else None  # None: fixed k_max drafting
+        k_log = []
+        tokens = dev.draft(k=k)
         await throttle(len(tokens))
         while True:
             q = dev.pending_q if self.qmode != "none" else None
@@ -193,10 +228,14 @@ class EdgeClient:
                 codec.DraftPacket(self.device_id, seq, tokens, draft_q=q, qmode=self.qmode)
             )
             self.stats.rounds += 1
+            # log what actually went on the wire: under pipelining a verdict
+            # may shrink k after the next proposal was already pre-drafted,
+            # and c_th confidence stopping shortens rounds below the cap
+            k_log.append(len(tokens))
             t_sent = loop.time()
             if self.pipeline:
                 # the round trip is in flight: keep drafting on speculation
-                dev.draft_ahead()
+                dev.draft_ahead(k=k)
                 await asyncio.sleep(0)  # hand the loop to the server/link
             verdict, fell_back = await self._await_verdict(seq, tokens)
             if fell_back:
@@ -205,6 +244,9 @@ class EdgeClient:
                 next_tokens = None
             else:
                 next_tokens = dev.on_verdict(verdict)
+                if self.kctl is not None:
+                    # closed loop: acceptance + replica congestion -> next k
+                    k = self.kctl.update(verdict.accept_rate, verdict.queue_depth)
             seq += 1
             if len(dev.committed) >= self.max_new:
                 break
@@ -213,7 +255,7 @@ class EdgeClient:
                 # pre-drafted during the round trip; pay only the remainder
                 await throttle(len(tokens), since=t_sent)
             else:
-                tokens = dev.draft()
+                tokens = dev.draft(k=k)
                 await throttle(len(tokens))
         await self._send(codec.Close(self.device_id))
         self.ep.close()
@@ -227,4 +269,6 @@ class EdgeClient:
         self.stats.frames_rx = self.ep.stats.frames_rx
         self.stats.frames_dropped = self.ep.stats.frames_dropped
         self.stats.wall_seconds = asyncio.get_running_loop().time() - t0
+        self.stats.k_final = self.kctl.k if self.kctl else self.kit.k_max
+        self.stats.k_mean = float(sum(k_log) / len(k_log)) if k_log else 0.0
         return dev.committed[: self.max_new]

@@ -33,7 +33,7 @@ import numpy as np
 from repro.quant.quantize import QTensor, dequantize, quantize
 
 MAGIC = b"SL"
-VERSION = 1
+VERSION = 2  # v2: Verdict carries accept_rate + queue_depth feedback
 _HEADER = struct.Struct(">2sBBI")
 HEADER_SIZE = _HEADER.size
 MAX_PAYLOAD = 1 << 20  # sanity cap: no protocol message approaches 1 MiB
@@ -84,14 +84,23 @@ class DraftPacket:
 
 @dataclasses.dataclass(frozen=True)
 class Verdict:
-    """Server -> device: verification outcome for DraftPacket ``seq``."""
+    """Server -> device: verification outcome for DraftPacket ``seq``.
+
+    ``accept_rate`` (this round's draft-acceptance ratio — per-round so the
+    control loop reacts to regime shifts; smoothing is the receiver's job)
+    and ``queue_depth`` (the serving replica's planner queue after dispatch)
+    are the v2 closed-loop feedback fields: devices feed them to an AIMD
+    spec-length controller (serving/speclen.py) to tune ``k`` online.
+    """
 
     device_id: int
     seq: int
     n_accepted: int
     tokens: np.ndarray  # committed this round (accepted + correction/bonus)
     next_prev: int
-    flags: int = 0  # reserved for future protocol bits (always 0 in v1)
+    flags: int = 0  # reserved for future protocol bits (always 0 in v2)
+    accept_rate: float = 0.0  # this round's accepted/drafted, in [0, 1]
+    queue_depth: int = 0  # replica queue depth after this round's dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,7 +251,16 @@ def encode_frame(msg: Message) -> bytes:
     elif isinstance(msg, Verdict):
         mtype = T_VERDICT
         out.append(
-            struct.pack(">IIHiB", msg.device_id, msg.seq, msg.n_accepted, msg.next_prev, msg.flags)
+            struct.pack(
+                ">IIHiBfH",
+                msg.device_id,
+                msg.seq,
+                msg.n_accepted,
+                msg.next_prev,
+                msg.flags,
+                float(msg.accept_rate),
+                min(int(msg.queue_depth), 0xFFFF),
+            )
         )
         _put_tokens(out, msg.tokens)
     elif isinstance(msg, Fallback):
@@ -295,8 +313,16 @@ def decode_frame(buf: bytes) -> tuple:
         msg = DraftPacket(device_id=dev, seq=seq, tokens=toks, draft_q=q, qmode=qmode)
     elif mtype == T_VERDICT:
         dev, seq, n_acc, nxt, flags = r.u32(), r.u32(), r.u16(), r.i32(), r.u8()
+        accept_rate, queue_depth = r.f32(), r.u16()
         msg = Verdict(
-            device_id=dev, seq=seq, n_accepted=n_acc, tokens=r.tokens(), next_prev=nxt, flags=flags
+            device_id=dev,
+            seq=seq,
+            n_accepted=n_acc,
+            tokens=r.tokens(),
+            next_prev=nxt,
+            flags=flags,
+            accept_rate=accept_rate,
+            queue_depth=queue_depth,
         )
     elif mtype == T_FALLBACK:
         msg = Fallback(device_id=r.u32(), seq=r.u32(), tokens=r.tokens())
@@ -319,6 +345,22 @@ class FrameDecoder:
 
     def feed(self, data: bytes) -> None:
         self._buf.extend(data)
+
+    def next_raw(self) -> Optional[bytes]:
+        """Pop the next COMPLETE frame as raw bytes (header+payload), or None
+        when more bytes are needed.  Used by byte-stream endpoints
+        (transport/links.py StreamEndpoint) that forward whole frames without
+        decoding them; corrupt headers raise the precise CodecError."""
+        if len(self._buf) < HEADER_SIZE:
+            return None
+        magic, version, _, plen = _HEADER.unpack_from(self._buf)
+        if magic != MAGIC or version != VERSION or plen > MAX_PAYLOAD:
+            decode_frame(bytes(self._buf))  # raises the precise error
+        if len(self._buf) < HEADER_SIZE + plen:
+            return None
+        raw = bytes(self._buf[: HEADER_SIZE + plen])
+        del self._buf[: HEADER_SIZE + plen]
+        return raw
 
     def __iter__(self) -> Iterator[Message]:
         while True:

@@ -1,17 +1,24 @@
-"""Pluggable edge<->server channels: loopback and simulated network links.
+"""Pluggable edge<->server channels: loopback, simulated, and real sockets.
 
 A link is a pair of :class:`Endpoint` halves (device side, server side); each
-half sends and receives whole encoded frames (bytes).  Two implementations:
+half sends and receives whole encoded frames (bytes).  Implementations:
 
-  LoopbackLink  — in-memory queues, zero latency, nothing dropped: the
-                  baseline for token-for-token equivalence checks.
-  SimulatedLink — every frame pays serialization (bytes * 8 / bandwidth, a
-                  shared per-direction line: back-to-back frames queue behind
-                  each other) plus propagation (one-way latency + gaussian
-                  jitter), and may be dropped.  Delivery is FIFO per
-                  direction — jitter never reorders frames, it only widens
-                  gaps — which mirrors a TCP-like transport and keeps the
-                  protocol free of sequence-gap handling.
+  LoopbackLink   — in-memory queues, zero latency, nothing dropped: the
+                   baseline for token-for-token equivalence checks.
+  SimulatedLink  — every frame pays serialization (bytes * 8 / bandwidth, a
+                   shared per-direction line: back-to-back frames queue behind
+                   each other) plus propagation (one-way latency + gaussian
+                   jitter), and may be dropped.  Delivery is FIFO per
+                   direction — jitter never reorders frames, it only widens
+                   gaps — which mirrors a TCP-like transport and keeps the
+                   protocol free of sequence-gap handling.
+  StreamEndpoint — one half of a REAL byte-stream socket (TCP or UDS):
+                   frames ride an asyncio StreamReader/Writer and are
+                   reassembled from arbitrary read chunks by the codec's
+                   FrameDecoder (the wire format is already length-prefixed).
+                   ``tcp_listen``/``tcp_connect`` open localhost-or-beyond
+                   endpoint pairs, so client and server can run in separate
+                   processes — the ROADMAP "real sockets" slice.
 
 Per-endpoint LinkStats count frames/bytes both ways plus drops, so wire cost
 is measurable end-to-end (benchmarks/wstgr.py --transport emits them).
@@ -21,9 +28,10 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import random
-from typing import Optional, Tuple
+from typing import Awaitable, Callable, Optional, Tuple
 
 from repro.serving.devices import NetProfile
+from repro.transport.codec import FrameDecoder
 
 _CLOSE = object()  # queue sentinel: peer closed its sending half
 
@@ -184,12 +192,83 @@ class SimulatedLink:
         return self.device, self.server
 
 
+class StreamEndpoint(Endpoint):
+    """Endpoint over a real asyncio byte stream (TCP / unix socket).
+
+    ``send`` writes the already-encoded frame to the socket; ``recv`` feeds
+    read chunks into a :class:`~repro.transport.codec.FrameDecoder` and pops
+    complete frames — the codec's length-prefixed header does the stream
+    reassembly, so arbitrary TCP segmentation (half a header here, three
+    frames there) never splits or merges a message.
+    """
+
+    def __init__(self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter):
+        super().__init__()
+        self._reader = reader
+        self._writer = writer
+        self._decoder = FrameDecoder()
+
+    async def send(self, frame: bytes) -> None:
+        if self._closed:
+            raise ConnectionError("endpoint is closed")
+        self.stats.frames_tx += 1
+        self.stats.bytes_tx += len(frame)
+        self._writer.write(frame)
+        await self._writer.drain()
+
+    async def recv(self) -> Optional[bytes]:
+        while True:
+            frame = self._decoder.next_raw()
+            if frame is not None:
+                self.stats.frames_rx += 1
+                self.stats.bytes_rx += len(frame)
+                return frame
+            data = await self._reader.read(65536)
+            if not data:  # peer closed; trailing partial frames are dropped
+                return None
+            self._decoder.feed(data)
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._writer.close()
+
+
+async def tcp_listen(
+    on_endpoint: Callable[[StreamEndpoint], Awaitable[None] | None],
+    host: str = "127.0.0.1",
+    port: int = 0,
+) -> Tuple[asyncio.AbstractServer, int]:
+    """Listen for frame-stream connections; ``on_endpoint`` is called with a
+    StreamEndpoint per accepted socket (e.g. TransportServer.attach).
+    Returns ``(server, bound_port)`` — port 0 picks a free one."""
+
+    async def handle(reader: asyncio.StreamReader, writer: asyncio.StreamWriter) -> None:
+        result = on_endpoint(StreamEndpoint(reader, writer))
+        if asyncio.iscoroutine(result):
+            await result
+
+    server = await asyncio.start_server(handle, host, port)
+    bound = server.sockets[0].getsockname()[1]
+    return server, bound
+
+
+async def tcp_connect(host: str, port: int) -> StreamEndpoint:
+    """Device-side half of a TCP link (server side comes from tcp_listen)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    return StreamEndpoint(reader, writer)
+
+
 def make_link(kind: str, net: Optional[NetProfile] = None, *, seed: int = 0):
-    """Factory: ``loopback`` or ``sim`` (requires a NetProfile)."""
+    """Factory: ``loopback`` or ``sim`` (requires a NetProfile).  TCP links
+    are connection-oriented — open them with tcp_listen/tcp_connect."""
     if kind == "loopback":
         return LoopbackLink()
     if kind == "sim":
         if net is None:
             raise ValueError("sim links need a NetProfile (serving/devices.py NETS)")
         return SimulatedLink(net, seed=seed)
-    raise ValueError(f"unknown link kind {kind!r} (loopback | sim)")
+    raise ValueError(
+        f"unknown link kind {kind!r} (loopback | sim; tcp endpoints come from "
+        f"tcp_listen/tcp_connect)"
+    )

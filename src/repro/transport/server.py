@@ -1,7 +1,11 @@
-"""Asyncio verification server: ServerEngine behind the wire protocol.
+"""Asyncio verification server: an engine (or replica cluster) behind the wire.
 
-One ``TransportServer`` wraps one :class:`~repro.core.server_engine.ServerEngine`
-and serves any number of device channels (transport/links.py endpoints):
+One ``TransportServer`` fronts either a single
+:class:`~repro.core.server_engine.ServerEngine` or a
+:class:`~repro.cluster.router.Router` of N replicas — both expose the same
+admit/submit/step/retire surface, so the frame adapter below is identical
+and "how many replicas serve this port" is purely a construction choice.
+It serves any number of device channels (transport/links.py endpoints):
 
   * a per-connection task decodes frames and feeds the engine — ``Hello``
     admits (or queues the admission until a pool slot frees), ``DraftPacket``
@@ -29,19 +33,20 @@ from __future__ import annotations
 
 import asyncio
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.router import Router
 from repro.core.server_engine import EngineStats, ServerEngine
 from repro.transport import codec
 from repro.transport.links import Endpoint
 
 
 class TransportServer:
-    def __init__(self, engine: ServerEngine, *, idle_tick: float = 0.05):
-        self.engine = engine
+    def __init__(self, engine: Union[ServerEngine, Router], *, idle_tick: float = 0.05):
+        self.engine = engine  # single replica or a cluster router: same surface
         self.idle_tick = idle_tick
         self._conns: Dict[int, Endpoint] = {}
         self._endpoints: List[Endpoint] = []  # every endpoint ever attached
@@ -199,6 +204,8 @@ class TransportServer:
                             n_accepted=v.n_accepted,
                             tokens=np.asarray(v.tokens, np.int32),
                             next_prev=v.next_prev,
+                            accept_rate=v.accept_rate,
+                            queue_depth=v.queue_depth,
                         )
                     )
                     self._record(v.device_id, frame, seq)
@@ -207,7 +214,7 @@ class TransportServer:
                     await self._send(dev, frame)
                 await asyncio.sleep(0)  # let replies land before re-stepping
                 continue
-            hint = self.engine.planner.next_event_hint(now)
+            hint = self.engine.next_event_hint(now)
             timeout = self.idle_tick
             if self.engine.queue_depth:
                 # work is queued but the policy hasn't fired: wake at the
