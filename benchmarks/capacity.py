@@ -4,15 +4,17 @@ Capacity = number of edge devices the system supports at the same response
 rate.  The paper reports x2.60 (RPi 4B), x2.86 (RPi 5), x2.77 (Jetson) —
 our validation target is ratios in that x2-3 band.
 
-``--cluster`` switches to the REAL replica-sharded serving stack
-(cluster/router.py over tiny models): sweep the replica count, drive an
-offered load that oversubscribes one replica's slot pool, and measure
-admitted-stream capacity (peak concurrently-admitted streams) at a fixed
-per-round deadline — capacity should scale ~linearly in replicas at a
-matched deadline-miss rate, which is the multi-server half of the paper's
-capacity claim.  The same mode then runs an adaptive-k vs fixed-k fleet over
-loopback transport (closed-loop spec length, serving/speclen.py) and reports
-wstgr side by side.  ``--json PATH`` records everything as a BENCH artifact.
+``--cluster`` switches to the REAL replica-sharded serving stack: the sweep
+is a list of :class:`~repro.api.ServeSpec` variants (replicas x kctl) built
+through the unified ``repro.api`` front door — one base spec, each sweep
+point a ``dataclasses.replace`` of it, every stack constructed by
+``System.build`` with shared models/steps so the sweep measures capacity,
+not compiles.  Capacity = peak concurrently-admitted streams under a
+deadline-gated admission loop oversubscribing one replica's pool (should
+scale ~linearly in replicas at matched deadline-miss rate); the kctl half
+races adaptive vs fixed spec length over loopback transport.  ``--json
+PATH`` records the rows — stats via the uniform ``EngineStats.to_json`` /
+``ServeResult.to_json`` records — as a BENCH artifact.
 """
 from __future__ import annotations
 
@@ -53,81 +55,79 @@ def run(quick: bool = False) -> list:
 
 # ---------------------------------------------------------------------------
 # real cluster: replica capacity scaling + adaptive spec length
+# (spec sweeps through the repro.api front door)
 # ---------------------------------------------------------------------------
 
 
-def _cluster_models(quick: bool):
-    import jax
+def _base_spec(quick: bool):
+    from repro.api import ModelSpec, ServeSpec
 
-    from repro.configs.base import get_config
-    from repro.models.model_zoo import build_model, perturb_params
-
-    vocab = 128
-    tcfg = dataclasses.replace(
-        get_config("qwen2-1.5b").reduced(), name="tgt", vocab_size=vocab,
-        num_layers=2 if quick else 3,
-    )
-    dcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=vocab)
-    target, draft = build_model(tcfg), build_model(dcfg)
-    tp = target.init_params(jax.random.key(0))
     # random-init pairs agree greedily (trivial 1.0 acceptance); perturb the
     # draft so rejections are real and the adaptive controller has a signal
-    dp = perturb_params(draft.init_params(jax.random.key(1)), 0.05)
-    return target, tp, draft, dp, vocab
+    return ServeSpec(
+        backend="cluster",
+        model=ModelSpec(
+            vocab_size=128,
+            target_layers=2 if quick else 3,
+            draft_layers=None,  # full reduced draft
+            draft_noise=0.05,
+            seed=0,
+        ),
+        prompt_len=10,
+        k_max=4,
+        session_seed_base=0,
+    )
 
 
-def _capacity_rows(target, tp, draft, dp, vocab, *, quick: bool) -> list:
+def _capacity_rows(base, *, quick: bool) -> list:
     """Replica sweep under oversubscribed offered load, in-process driver.
 
-    Admission is DEADLINE-GATED: a new stream is admitted only while the
-    trailing window of verdict latencies meets the per-round deadline, so
-    peak admitted streams is a measured serving capacity — pool-bound when
-    the replicas keep up (``gated_by: pool``), compute-bound when they
-    don't (``gated_by: deadline``) — not pool-size arithmetic.  All routers
-    share one VerifySteps bundle, so every replica count runs the same
-    compiled executables (the sweep measures capacity, not compiles).
+    The sweep is a list of ServeSpecs (one per replica count) built on
+    shared models and one shared VerifySteps bundle, so every replica count
+    runs the same compiled executables (the sweep measures capacity, not
+    compiles).  Admission is DEADLINE-GATED: a new stream is admitted only
+    while the trailing window of verdict latencies meets the per-round
+    deadline, so peak admitted streams is a measured serving capacity —
+    pool-bound when the replicas keep up (``gated_by: pool``),
+    compute-bound when they don't (``gated_by: deadline``).
     """
-    import jax
+    from repro.api import ClusterSpec, SchedulerSpec, System, build_models
 
-    from repro.cluster import Router
-    from repro.core.server_engine import EdgeDeviceKit, ServerEngine
-
-    slots, max_new, k_max = (2, 5, 4) if quick else (3, 10, 4)
+    slots, max_new = (2, 5) if quick else (3, 10)
     replica_counts = (1, 2) if quick else (1, 2, 4)
     n_offer = 2 * max(replica_counts) * slots  # oversubscribe every config
     deadline_s = 2.0  # generous CPU-CI round deadline (matched across sweeps)
     miss_cap = 0.1  # stop admitting while >10% of recent rounds miss
     window = 16  # trailing latencies consulted by the admission gate
-    prompts = jax.random.randint(jax.random.key(2), (n_offer, 10), 0, vocab)
-    kit = EdgeDeviceKit(draft, dp, k_max=k_max, c_th=0.3, greedy=True, attn_chunk=32)
 
-    # one shared step bundle across the whole sweep (homogeneous replicas),
-    # with every jitted path — verify buckets, prefill, draft — compiled up
-    # front so the sweep measures capacity, not compiles
-    seed_engine = ServerEngine(
-        target, tp, n_slots=slots, max_len=128, k_max=k_max, attn_chunk=32
+    base = dataclasses.replace(
+        base,
+        devices=n_offer,
+        max_new=max_new,
+        c_th=0.3,
+        scheduler=SchedulerSpec(slots=slots),
     )
-    steps = seed_engine.steps
-    seed_engine.warmup()
-    seed_engine.admit(-1, prompts[0], 0.0)
-    warm_dev = kit.spawn(-1, prompts[0], max_len=128, seed=0)
-    seed_engine.submit(-1, warm_dev.draft(), 0.0)
-    for v in seed_engine.step(0.0) or []:
-        warm_dev.on_verdict(v)
-    seed_engine.retire(-1)
+    sweep = [
+        dataclasses.replace(base, cluster=ClusterSpec(replicas=n)) for n in replica_counts
+    ]
+    models = build_models(base.model)
+
+    # warm every jitted path — verify buckets, prefill, draft — up front on a
+    # throwaway single-replica system sharing the sweep's step bundle + kit
+    warm = System.build(
+        dataclasses.replace(sweep[0], cluster=ClusterSpec(replicas=1), devices=1),
+        models=models,
+    )
+    warm.warmup()
+    warm.serve(prompts=warm.prompts()[:1])
+    steps, kit = warm.steps, warm.kit
 
     rows = []
     base_capacity = None
-    for n_rep in replica_counts:
-        router = Router(
-            [
-                ServerEngine(
-                    target, tp, n_slots=slots, max_len=128, k_max=k_max,
-                    attn_chunk=32, steps=steps,
-                )
-                for _ in range(n_rep)
-            ]
-        )
+    for spec in sweep:
+        system = System.build(spec, models=models, steps=steps, kit=kit)
+        router = system.engine
+        prompts = system.prompts()
         devices, outputs, waiting = {}, {}, list(range(n_offer))
         submit_at, latencies = {}, []
         peak_admitted = 0
@@ -145,7 +145,7 @@ def _capacity_rows(target, tp, draft, dp, vocab, *, quick: bool) -> list:
                 i = waiting.pop(0)
                 stream = router.admit(i, prompts[i], now)
                 assert stream is not None, "router reported a free slot"
-                devices[i] = kit.spawn(i, prompts[i], max_len=128, seed=i)
+                devices[i] = kit.spawn(i, prompts[i], max_len=spec.max_len, seed=i)
             peak_admitted = max(peak_admitted, len(router.streams))
             for i, dev in devices.items():
                 if not dev.awaiting:
@@ -169,109 +169,82 @@ def _capacity_rows(target, tp, draft, dp, vocab, *, quick: bool) -> list:
             base_capacity = peak_admitted
         rows.append({
             "section": "capacity",
-            "replicas": n_rep,
-            "slots_per_replica": slots,
-            "offered_streams": n_offer,
+            "spec": spec.to_json(),
             "capacity_streams": peak_admitted,
             "capacity_ratio": round(peak_admitted / max(base_capacity, 1), 2),
             "gated_by": "deadline" if deadline_gated else "pool",
             "deadline_s": deadline_s,
             "deadline_miss_rate": round(misses / max(len(latencies), 1), 4),
-            "streams_served": st.streams_served,
             "wstgr": round(n_offer * max_new / wall, 2),
-            "rounds": st.rounds,
-            "mean_batch_fill": round(st.mean_batch_fill, 2),
             "migrations": router.migrations,
             "wall_s": round(wall, 2),
+            "engine": st.to_json(),
         })
         print(
-            f"[capacity] {n_rep} replica(s): peak {peak_admitted} admitted "
-            f"({rows[-1]['capacity_ratio']}x), miss rate "
+            f"[capacity] {spec.cluster.replicas} replica(s): peak {peak_admitted} "
+            f"admitted ({rows[-1]['capacity_ratio']}x), miss rate "
             f"{rows[-1]['deadline_miss_rate']:.1%}, "
             f"{rows[-1]['wstgr']} tok/s"
         )
     return rows
 
 
-def _kctl_rows(target, tp, draft, dp, vocab, *, quick: bool) -> list:
+def _kctl_rows(base, *, quick: bool) -> list:
     """Adaptive vs fixed spec length over loopback transport (real feedback
-    loop: Verdict accept_rate/queue_depth -> AIMD controller -> draft k)."""
-    import asyncio
+    loop: Verdict accept_rate/queue_depth -> AIMD controller -> draft k) —
+    two ServeSpecs differing only in ``kctl``, served through the API."""
+    from repro.api import ClusterSpec, SchedulerSpec, System, TransportSpec, build_models
 
-    import jax
-    import numpy as np
+    n_dev, max_new = (3, 8) if quick else (4, 16)
+    base = dataclasses.replace(
+        base,
+        backend="transport",
+        cluster=ClusterSpec(replicas=1),
+        transport=TransportSpec(link="loopback", verify_timeout=30.0, stagger_s=0.0),
+        scheduler=SchedulerSpec(slots=n_dev, stagger_ticks=0),
+        devices=n_dev,
+        prompt_seed=5,
+        max_new=max_new,
+        c_th=0.0,
+    )
+    sweep = [dataclasses.replace(base, kctl=k) for k in ("fixed", "adaptive")]
+    models = build_models(base.model)
 
-    from repro.core.server_engine import EdgeDeviceKit, ServerEngine
-    from repro.transport.client import ClientStats, EdgeClient
-    from repro.transport.links import make_link
-    from repro.transport.server import TransportServer
-
-    n_dev, max_new, k_max = (3, 8, 4) if quick else (4, 16, 4)
-    prompts = jax.random.randint(jax.random.key(5), (n_dev, 10), 0, vocab)
-    kit = EdgeDeviceKit(draft, dp, k_max=k_max, c_th=0.0, greedy=True, attn_chunk=32)
-
-    # shared compiled steps for both fleets; warm fleet evens out first-use
-    # compiles (prefill/draft/peek) before either configuration is timed
-    seed = ServerEngine(target, tp, n_slots=n_dev, max_len=128, k_max=k_max, attn_chunk=32)
-    steps = seed.steps
-    seed.warmup()
-
-    def fresh_engine():
-        return ServerEngine(
-            target, tp, n_slots=n_dev, max_len=128, k_max=k_max, attn_chunk=32,
-            steps=steps,
-        )
+    # warm fleet evens out first-use compiles (verify buckets, prefill,
+    # draft, peek) before either configuration is timed; both measured
+    # systems share its step bundle and device kit
+    warm = System.build(sweep[0], models=models)
+    warm.warmup()
+    warm.serve()
+    steps, kit = warm.steps, warm.kit
 
     rows = []
-    warmed = False
-    for kctl in ("fixed", "adaptive"):
-
-        async def fleet(engine, kctl=kctl):
-            server = TransportServer(engine)
-            clients = []
-            for i in range(n_dev):
-                link = make_link("loopback")
-                server.attach(link.server)
-                clients.append(
-                    EdgeClient(
-                        kit, i, np.asarray(prompts[i]), link.device,
-                        max_new=max_new, max_len=128, pipeline=True,
-                        verify_timeout=30.0, kctl=kctl, seed=i,
-                    )
-                )
-            t0 = time.time()
-            await asyncio.gather(*(c.run() for c in clients))
-            wall = time.time() - t0
-            for _ in range(500):
-                if not engine.streams:
-                    break
-                await asyncio.sleep(0.01)
-            st = server.stats()
-            await server.stop()
-            return clients, st, wall
-
-        if not warmed:
-            asyncio.run(fleet(fresh_engine()))  # compile pass (client-side jits)
-            warmed = True
-        clients, st, wall = asyncio.run(fleet(fresh_engine()))
-        fleet_stats = ClientStats.merge([c.stats for c in clients])
+    for spec in sweep:
+        system = System.build(spec, models=models, steps=steps, kit=kit)
+        result = system.serve()
+        st, fleet = result.engine, result.clients
         rows.append({
             "section": "kctl",
-            "kctl": kctl,
-            "wstgr": round(n_dev * max_new / wall, 2),
+            "kctl": spec.kctl,
+            "spec": spec.to_json(),
+            "wstgr": round(result.total_tokens / result.wall_seconds, 2),
             "acceptance": round(st.acceptance_rate, 3),
             "rounds": st.rounds,
-            "k_mean": round(fleet_stats.k_mean, 2),
-            "k_final": fleet_stats.k_final,
+            "k_mean": round(fleet.k_mean, 2),
+            "k_final": fleet.k_final,
+            # device-side draft() work per committed token (ClientStats.drafted
+            # — the legacy EdgeDevice.drafted quantity adaptive-k reduces)
             "drafted_per_token": round(
-                sum(c.device.drafted for c in clients)
-                / max(n_dev * max_new, 1), 2,
+                sum(s.client.drafted for s in result.sessions)
+                / max(result.total_tokens, 1), 2,
             ),
             "bytes_up": st.bytes_rx,
-            "wall_s": round(wall, 2),
+            "wall_s": round(result.wall_seconds, 2),
+            "engine": st.to_json(),
+            "clients": fleet.to_json(),
         })
         print(
-            f"[kctl {kctl}] {rows[-1]['wstgr']} tok/s, acceptance "
+            f"[kctl {spec.kctl}] {rows[-1]['wstgr']} tok/s, acceptance "
             f"{rows[-1]['acceptance']}, mean k {rows[-1]['k_mean']}, "
             f"{rows[-1]['drafted_per_token']} drafted/token"
         )
@@ -279,9 +252,9 @@ def _kctl_rows(target, tp, draft, dp, vocab, *, quick: bool) -> list:
 
 
 def run_cluster(quick: bool = False, json_path: str = "") -> list:
-    target, tp, draft, dp, vocab = _cluster_models(quick)
-    rows = _capacity_rows(target, tp, draft, dp, vocab, quick=quick)
-    rows += _kctl_rows(target, tp, draft, dp, vocab, quick=quick)
+    base = _base_spec(quick)
+    rows = _capacity_rows(base, quick=quick)
+    rows += _kctl_rows(base, quick=quick)
     emit(rows, "cluster_capacity")
     if json_path:
         with open(json_path, "w") as f:

@@ -16,8 +16,12 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
 
 
 def emit(rows: List[dict], name: str) -> None:
-    """Benchmark output contract: ``name,us_per_call,derived`` CSV rows."""
+    """Benchmark output contract: ``name,us_per_call,derived`` CSV rows.
+
+    Nested records (spec / stats sub-dicts from the uniform ``to_json``
+    surface) stay in the JSON artifact only — a flattened spec would drown
+    the CSV line."""
     for r in rows:
         us = r.pop("us_per_call", "")
-        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        derived = ";".join(f"{k}={v}" for k, v in r.items() if not isinstance(v, dict))
         print(f"{name},{us},{derived}")

@@ -6,8 +6,9 @@ efficiency.  Expected shape: WSTGR rises with batch (weight-stream
 amortisation), SLED sits >2x above centralized at equal batch — the paper's
 x2.2 system-throughput claim.
 
-``--engine`` switches to the REAL continuous-batching engine
-(core/server_engine.py) with tiny models: the same SimResult-style fields
+``--engine`` switches to the REAL continuous-batching engine (a ServeSpec
+per policy served through repro.api) with tiny models: the same
+SimResult-style fields
 (wstgr, mean_batch_fill, rounds) are measured from an actual serving run and
 emitted next to the discrete-event simulator's prediction for a matched
 arrival pattern, so simulator claims can be cross-checked end-to-end.
@@ -25,7 +26,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 from benchmarks.common import emit
 from repro.serving.devices import A100_X4, RPI5
@@ -58,49 +58,33 @@ def run(quick: bool = False) -> list:
 
 
 def run_engine(quick: bool = False) -> list:
-    """Real-model continuous batching: serve a small staggered fleet through
-    ServerEngine per policy and report measured SimResult-style stats next to
-    the simulator's batch-fill prediction for the same fleet."""
-    import jax
-
-    from repro.configs.base import get_config
-    from repro.core.server_engine import EdgeDeviceKit, ServerEngine
-    from repro.models.model_zoo import build_model
-
-    vocab = 128
-    tcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=vocab)
-    dcfg = dataclasses.replace(tcfg, name="draft", num_layers=1)
-    target, draft = build_model(tcfg), build_model(dcfg)
-    tp = target.init_params(jax.random.key(0))
-    dp = draft.init_params(jax.random.key(1))
+    """Real-model continuous batching: one ServeSpec per policy, served
+    through the repro.api front door, with measured SimResult-style stats
+    next to the simulator's batch-fill prediction for the same fleet."""
+    from repro.api import ModelSpec, SchedulerSpec, ServeSpec, System, build_models
 
     n_dev, max_new, k_max = (3, 8, 4) if quick else (6, 16, 4)
-    prompts = jax.random.randint(jax.random.key(2), (n_dev, 12), 0, vocab)
+    base = ServeSpec(
+        backend="engine",
+        model=ModelSpec(vocab_size=128, draft_layers=1, seed=0),
+        devices=n_dev,
+        max_new=max_new,
+        k_max=k_max,
+        c_th=0.3,
+        session_seed_base=0,
+        scheduler=SchedulerSpec(policy="continuous", max_wait=0.0, slots=n_dev,
+                                stagger_ticks=2),
+    )
+    sweep = [
+        dataclasses.replace(base, scheduler=dataclasses.replace(base.scheduler, policy=p))
+        for p in (("continuous",) if quick else ("continuous", "deadline"))
+    ]
+    models = build_models(base.model)
     rows = []
-    for policy in (("continuous",) if quick else ("continuous", "deadline")):
-        engine = ServerEngine(target, tp, n_slots=n_dev, max_len=128, k_max=k_max,
-                              policy=policy, max_wait=0.0, attn_chunk=32)
-        kit = EdgeDeviceKit(draft, dp, k_max=k_max, c_th=0.3, greedy=True, attn_chunk=32)
-        devices, outputs = {}, {}
-        t0 = time.time()
-        tick = 0
-        while len(outputs) < n_dev:
-            tick += 1
-            for i in range(n_dev):
-                if i not in devices and i not in outputs and i * 2 <= tick:
-                    engine.admit(i, prompts[i], time.time() - t0)
-                    devices[i] = kit.spawn(i, prompts[i], max_len=128, seed=i)
-            for i, dev in devices.items():
-                if not dev.awaiting:
-                    engine.submit(i, dev.draft(), time.time() - t0)
-            verdicts = engine.step(time.time() - t0)
-            for v in verdicts or []:
-                devices[v.device_id].on_verdict(v)
-                if len(devices[v.device_id].committed) >= max_new:
-                    outputs[v.device_id] = devices[v.device_id].committed[:max_new]
-                    engine.retire(v.device_id)
-                    del devices[v.device_id]
-        st = engine.stats(time.time() - t0)
+    for spec in sweep:
+        result = System.build(spec, models=models).serve()
+        st = result.engine
+        policy = spec.scheduler.policy
         sim = simulate(
             SimConfig(mode="sled", n_devices=n_dev, spec_len=k_max,
                       server_batch=n_dev, batch_policy=policy,
@@ -114,6 +98,7 @@ def run_engine(quick: bool = False) -> list:
             "partial_rounds": st.partial_rounds,
             "rounds": st.rounds,
             "sim_mean_batch_fill": round(sim.mean_batch_fill, 2),
+            "engine": st.to_json(),
         })
     emit(rows, "engine_wstgr")
     return rows
@@ -134,29 +119,20 @@ def _solve_acceptance(tokens_per_round: float, k: int) -> float:
 
 def run_transport(quick: bool = False) -> list:
     """Async transport runtime over simulated WLAN links vs the discrete-event
-    simulator under a matched network/rate configuration."""
-    import asyncio
-
+    simulator under a matched network/rate configuration — one ServeSpec per
+    policy, fleets served through the repro.api front door."""
     import jax
     import numpy as np
 
-    from repro.configs.base import get_config
-    from repro.core.server_engine import EdgeDeviceKit, ServerEngine
-    from repro.models.model_zoo import build_model, perturb_params
-    from repro.serving.devices import NETS, RPI5, ServerProfile
-    from repro.transport.client import ClientStats, EdgeClient
-    from repro.transport.links import make_link
-    from repro.transport.server import TransportServer
-
-    vocab = 128
-    tcfg = dataclasses.replace(
-        get_config("qwen2-1.5b").reduced(), name="tgt", vocab_size=vocab, num_layers=3
+    from repro.api import (
+        ModelSpec,
+        SchedulerSpec,
+        ServeSpec,
+        System,
+        TransportSpec,
+        build_models,
     )
-    dcfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(), vocab_size=vocab)
-    target, draft = build_model(tcfg), build_model(dcfg)
-    tp = target.init_params(jax.random.key(0))
-    # random-init pairs agree greedily (acceptance 1.0); perturb to ~0.9
-    dp = perturb_params(draft.init_params(jax.random.key(1)), 0.02)
+    from repro.serving.devices import NETS, RPI5, ServerProfile
 
     n_dev, max_new, k_max = (3, 10, 4) if quick else (6, 24, 4)
     net = NETS["wlan"]  # paper-style service-area RTT/jitter
@@ -164,51 +140,49 @@ def run_transport(quick: bool = False) -> list:
     # faster than real boards, and the throttle also restores fleet
     # concurrency that single-process compute would otherwise serialize
     device_rate = RPI5.rate("llama-1b-draft", 4)
+    base = ServeSpec(
+        backend="transport",
+        # random-init pairs agree greedily (acceptance 1.0); perturb to ~0.9
+        model=ModelSpec(vocab_size=128, target_layers=3, draft_layers=None,
+                        draft_noise=0.02, seed=0),
+        transport=TransportSpec(link="sim", net="wlan", pipeline=True,
+                                verify_timeout=30.0, stagger_s=0.0,
+                                draft_rate=device_rate),
+        scheduler=SchedulerSpec(policy="continuous", max_wait=0.02, slots=n_dev),
+        devices=n_dev,
+        max_new=max_new,
+        k_max=k_max,
+        c_th=0.0,
+        session_seed_base=0,
+    )
+    sweep = [
+        dataclasses.replace(base, scheduler=dataclasses.replace(base.scheduler, policy=p))
+        for p in (("continuous",) if quick else ("continuous", "deadline"))
+    ]
+    models = build_models(base.model)
+    vocab = models.vocab
     rows = []
-    for policy in (("continuous",) if quick else ("continuous", "deadline")):
-        engine = ServerEngine(
-            target, tp, n_slots=n_dev, max_len=128, k_max=k_max,
-            policy=policy, max_wait=0.02, attn_chunk=32,
-        )
-        kit = EdgeDeviceKit(draft, dp, k_max=k_max, c_th=0.0, greedy=True, attn_chunk=32)
+    for spec in sweep:
+        policy = spec.scheduler.policy
 
-        async def fleet(ids, new_tokens, engine=engine, kit=kit):
-            server = TransportServer(engine)
-            clients = []
-            for j, i in enumerate(ids):
-                prompt = np.asarray(
-                    jax.random.randint(jax.random.key(i), (12,), 0, vocab)
-                )
-                link = make_link("sim", net=net, seed=i)
-                server.attach(link.server)
-                clients.append(
-                    EdgeClient(
-                        kit, i, prompt, link.device, max_new=new_tokens, max_len=128,
-                        pipeline=True, verify_timeout=30.0, draft_rate=device_rate,
-                        seed=i,
-                    )
-                )
-            t0 = time.time()
-            await asyncio.gather(*(c.run() for c in clients))
-            wall = time.time() - t0
-            for _ in range(500):
-                if not engine.streams:
-                    break
-                await asyncio.sleep(0.01)
-            st = server.stats()
-            await server.stop()
-            return clients, st, wall
+        def fleet_prompts(ids):
+            return np.stack(
+                [np.asarray(jax.random.randint(jax.random.key(i), (12,), 0, vocab))
+                 for i in ids]
+            )
 
         # warm every verify bucket plus the client-side jits (prefill, draft,
-        # peek) so the measured fleet below sees steady-state latencies
-        engine.warmup()
-        asyncio.run(fleet(range(n_dev), 4))
-        r0, d0, a0 = len(engine.round_log), engine._drafted, engine._accepted
-        f0 = engine._fallback_tokens
-        clients, st, wall = asyncio.run(fleet(range(100, 100 + n_dev), max_new))
-        fleet_stats = ClientStats.merge([c.stats for c in clients])
+        # peek) on a throwaway System; the measured System shares its compiled
+        # steps + kit, so its stats cover exactly the measured fleet
+        warm = System.build(spec, models=models)
+        warm.warmup()
+        warm.serve(fleet_prompts(range(n_dev)), max_new=4)
+        system = System.build(spec, models=models, steps=warm.steps, kit=warm.kit)
+        engine = system.engine
+        result = system.serve(fleet_prompts(range(100, 100 + n_dev)))
+        st, fleet_stats, wall = result.engine, result.clients, result.wall_seconds
 
-        log = engine.round_log[r0:]
+        log = engine.round_log
         committed = sum(r.n_commit for r in log)
         # per-request committed tokens per verify round (sim: 1 + E[m])
         tokens_per_round = committed / max(sum(r.size for r in log), 1)
@@ -216,7 +190,7 @@ def run_transport(quick: bool = False) -> list:
         fill = sum(r.size for r in log) / max(len(log), 1)
         qdepth = sum(r.queue_depth for r in log) / max(len(log), 1)
         wstgr_meas = n_dev * max_new / wall
-        accept_ratio = (engine._accepted - a0) / max(engine._drafted - d0, 1)
+        accept_ratio = st.acceptance_rate
 
         # the simulator predicts the *dynamics* (batching, RTT overlap,
         # draft-ahead) given the rates we measured on the real runtime
@@ -252,7 +226,8 @@ def run_transport(quick: bool = False) -> list:
             "bytes_down": st.bytes_tx,
             "frames": st.frames_rx + st.frames_tx,
             "frames_dropped": st.frames_dropped + fleet_stats.frames_dropped,
-            "fallback_tokens": st.fallback_tokens - f0,  # this fleet only
+            "fallback_tokens": st.fallback_tokens,  # fresh System: this fleet only
+            "engine": st.to_json(),
         })
         ok = abs(rows[-1]["wstgr_ratio"] - 1.0) <= 0.15
         print(

@@ -1,48 +1,35 @@
-"""Simulate a SLED service area: heterogeneous devices + one shared server.
+"""Simulate a SLED service area through the public API: an edge fleet over
+simulated WLAN links, verified by a 2-replica cluster server.
 
     PYTHONPATH=src python examples/edge_serving_sim.py
 
-Reproduces the paper's system-level story end-to-end: a mixed fleet of
-RPi 4B / RPi 5 / Jetson devices drafting locally, one A100 (or TPU v5e)
-server batch-verifying, versus centralized serving and all-edge decoding.
+One ServeSpec declares the whole deployment — the real wire protocol pays
+NetProfile latency/jitter per frame, clients pipeline draft-ahead under the
+round trip, and the router places streams across engine replicas.  (The
+paper's discrete-event cost-model tables live in benchmarks/capacity.py.)
 """
-import dataclasses
+from repro.api import ClusterSpec, ModelSpec, ServeSpec, System, TransportSpec
 
-from repro.serving.cost_model import cost_per_1k_tokens, sled_cost_per_1k
-from repro.serving.devices import A100_X4, DEVICES, V5E_16
-from repro.serving.simulator import SimConfig, capacity, simulate
+spec = ServeSpec(
+    backend="transport",
+    model=ModelSpec(vocab_size=128, target_layers=2, draft_noise=0.05),
+    transport=TransportSpec(link="sim", net="wlan", stagger_s=0.1),
+    cluster=ClusterSpec(replicas=2),
+    devices=4, prompt_len=8, max_new=12,
+)
 
 
 def main() -> None:
-    print(f"{'device':18s} {'mode':12s} {'N':>4s} {'tok/s':>8s} {'per-dev':>8s} "
-          f"{'$/1K':>8s} {'srv busy':>8s}")
-    for server in (A100_X4, V5E_16):
-        print(f"--- server: {server.name} (target 11B, K=4, acceptance 0.9)")
-        for dev_name, dev in DEVICES.items():
-            rate = dev.rate("llama-1b-draft", 4)
-            for mode in ("sled", "centralized", "all_edge"):
-                cfg = SimConfig(mode=mode, n_devices=16, device_rate=rate,
-                                acceptance=0.9, spec_len=4, server_batch=16,
-                                batch_policy="deadline", sim_time=30.0)
-                r = simulate(cfg, server)
-                if mode == "sled":
-                    cost = sled_cost_per_1k(r.per_device_rate, dev, server,
-                                            r.server_busy_frac / 16)
-                elif mode == "centralized":
-                    cost = cost_per_1k_tokens(r.wstgr, server.price_usd, server.power_w)
-                else:
-                    cost = cost_per_1k_tokens(rate, dev.price_usd, dev.power_w)
-                print(f"{dev_name:18s} {mode:12s} {16:4d} {r.wstgr:8.1f} "
-                      f"{r.per_device_rate:8.2f} {cost:8.4f} {r.server_busy_frac:8.2f}")
-        # capacity comparison (paper Table I)
-        dev = DEVICES["rpi5"]
-        base = SimConfig(mode="sled", device_rate=dev.rate("llama-1b-draft", 4),
-                         acceptance=0.9, spec_len=4, server_batch=16,
-                         batch_policy="deadline", sim_time=20.0)
-        cap_s = capacity(base, server, n_max=384)
-        cap_c = capacity(dataclasses.replace(base, mode="centralized"), server, n_max=384)
-        print(f"capacity (rpi5): SLED {cap_s} vs centralized {cap_c} "
-              f"-> x{cap_s / max(cap_c, 1):.2f} (paper: x2.86)")
+    result = System.build(spec).serve()
+    st = result.engine
+    print(f"served {st.streams_served} streams over simulated "
+          f"{spec.transport.net}: {result.total_tokens} tokens in "
+          f"{st.rounds} rounds, acceptance {st.acceptance_rate:.2f}")
+    print(f"wire: {st.bytes_rx} B up / {st.bytes_tx} B down, "
+          f"pipeline {result.clients.pipeline_hits} hits")
+    for s in result.sessions:
+        print(f"  device {s.device_id}: {len(s.tokens)} tokens, "
+              f"{s.rounds} rounds, acceptance {s.acceptance_rate:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,56 +1,31 @@
-"""Quickstart: SLED speculative decoding with real (tiny) JAX models.
+"""Quickstart: the ``repro.api`` front door in a dozen lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a small draft + target pair, runs the full SLED protocol
-(dynamic drafting -> batched verification -> rollback), and checks the
-output is exactly the target model's greedy output (losslessness).
+One declarative ServeSpec builds the whole stack; a Session streams typed
+events; the reference backend (lock-step sled_generate loop) run on the
+same spec proves the served stream is lossless.
 """
-import dataclasses
-import time
+from repro.api import ModelSpec, ServeSpec, System, TokenEvent
 
-import jax
-
-from repro.configs.base import get_config
-from repro.core.engine_loop import autoregressive_generate, sled_generate
-from repro.models.model_zoo import build_model
-
-VOCAB = 512
+spec = ServeSpec(
+    backend="engine",
+    model=ModelSpec(vocab_size=128, target_layers=2, draft_noise=0.03),
+    devices=2, prompt_len=8, max_new=16,
+)
 
 
 def main() -> None:
-    draft_cfg = dataclasses.replace(
-        get_config("qwen2-1.5b").reduced(), vocab_size=VOCAB)
-    target_cfg = dataclasses.replace(
-        get_config("phi3-mini-3.8b").reduced(), name="target",
-        vocab_size=VOCAB, d_model=128, num_layers=4, d_ff=256)
-    draft = build_model(draft_cfg)
-    target = build_model(target_cfg)
-    dp = draft.init_params(jax.random.key(1))
-    tp = target.init_params(jax.random.key(2))
-
-    prompts = jax.random.randint(jax.random.key(3), (2, 16), 0, VOCAB)
-    print(f"draft: {draft_cfg.name} | target: {target_cfg.name}")
-
-    t0 = time.time()
-    ref = autoregressive_generate(target, tp, prompts, max_new=32)
-    t_ar = time.time() - t0
-
-    t0 = time.time()
-    out, stats, _ = sled_generate(
-        draft, dp, target, tp, prompts,
-        max_new=32, k_max=4, c_th=0.4,  # Eq. 1 dynamic drafting
-        greedy=True,
-    )
-    t_sled = time.time() - t0
-
-    print(f"target-only tokens : {ref[0][:16].tolist()} ...")
-    print(f"SLED tokens        : {out[0][:16].tolist()} ...")
-    print(f"lossless           : {bool((out == ref).all())}")
-    print(f"acceptance rate    : {stats.acceptance_rate:.2f}")
-    print(f"tokens/verify round: {stats.tokens_per_round:.2f}")
-    print(f"verify rounds      : {stats.rounds} (vs {ref.shape[1]} target steps)")
-    print(f"wall (CPU, toy)    : sled {t_sled:.1f}s vs target-only {t_ar:.1f}s")
+    system = System.build(spec)
+    session = system.open_session()
+    tokens = [ev.token for ev in session.generate() if isinstance(ev, TokenEvent)]
+    r = session.result
+    print(f"streamed {len(tokens)} tokens: {tokens}")
+    print(f"rounds {r.rounds}, acceptance {r.acceptance_rate:.2f}")
+    ref = System.build(spec.with_backend("reference"), models=system.models).serve()
+    lossless = ref.outputs[session.device_id] == r.tokens
+    print(f"lossless vs lock-step reference: {lossless}")
+    assert lossless
 
 
 if __name__ == "__main__":

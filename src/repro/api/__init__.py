@@ -1,0 +1,50 @@
+"""repro.api — the public front door over every SLED execution backend.
+
+    from repro.api import ServeSpec, System
+
+    spec = ServeSpec(backend="transport", devices=4, max_new=16)
+    result = System.build(spec).serve()      # ServeResult
+    spec.to_json_str()                       # the run as a committable artifact
+
+See :mod:`repro.api.spec` for the declarative config and
+:mod:`repro.api.system` for System/Session semantics.
+"""
+
+from repro.api.events import (
+    DoneEvent,
+    Event,
+    RoundEvent,
+    ServeResult,
+    SessionResult,
+    TokenEvent,
+)
+from repro.api.spec import (
+    BACKENDS,
+    ClusterSpec,
+    ModelSpec,
+    SchedulerSpec,
+    ServeSpec,
+    SpecError,
+    TransportSpec,
+)
+from repro.api.system import ModelBundle, Session, System, build_models
+
+__all__ = [
+    "BACKENDS",
+    "ClusterSpec",
+    "DoneEvent",
+    "Event",
+    "ModelBundle",
+    "ModelSpec",
+    "RoundEvent",
+    "SchedulerSpec",
+    "ServeSpec",
+    "ServeResult",
+    "Session",
+    "SessionResult",
+    "SpecError",
+    "System",
+    "TokenEvent",
+    "TransportSpec",
+    "build_models",
+]

@@ -1,0 +1,124 @@
+"""Typed streaming events and unified result records for the session API.
+
+A :class:`~repro.api.system.Session`'s ``generate()`` yields, per round:
+``TokenEvent`` for each token committed to the stream (in order, capped at
+the session's budget), then one ``RoundEvent`` summarizing the round, and
+finally one ``DoneEvent``.  The same records come out of every backend —
+reference, engine, cluster, transport — so a consumer written against the
+event stream is backend-agnostic.
+
+``SessionResult`` / ``ServeResult`` are the uniform end-of-run records; both
+expose ``to_json()`` (as do :class:`~repro.core.engine.EngineStats` and
+:class:`~repro.transport.client.ClientStats`), which is the ONE dict shape
+the benchmarks emit as BENCH artifacts — no more ad-hoc dict building per
+driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.core.engine import EngineStats
+from repro.transport.client import ClientStats
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One token committed to a stream (``index`` = position in the stream)."""
+
+    device_id: int
+    token: int
+    index: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundEvent:
+    """One resolved drafting round (verification verdict or §III-A fallback)."""
+
+    device_id: int
+    round: int  # 0-based round index within the session
+    n_drafted: int
+    n_accepted: int  # verified acceptances only — 0 on fallback rounds
+    tokens: Tuple[int, ...]  # committed this round: accepted drafts + bonus/
+    # correction, or the locally-released (unverified) run on a fallback round
+    fallback: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class DoneEvent:
+    """The session reached its token budget (or the stream closed)."""
+
+    device_id: int
+    n_tokens: int
+
+
+Event = Union[TokenEvent, RoundEvent, DoneEvent]
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """One stream's unified outcome, identical in shape across backends."""
+
+    device_id: int
+    tokens: List[int]
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    fallback_rounds: int = 0
+    fallback_tokens: int = 0
+    wall_seconds: float = 0.0
+    client: Optional[ClientStats] = None  # transport backend only
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.drafted, 1)
+
+    def to_json(self) -> dict:
+        d = {
+            "device_id": self.device_id,
+            "n_tokens": len(self.tokens),
+            "tokens": [int(t) for t in self.tokens],
+            "rounds": self.rounds,
+            "drafted": self.drafted,
+            "accepted": self.accepted,
+            "acceptance_rate": self.acceptance_rate,
+            "fallback_rounds": self.fallback_rounds,
+            "fallback_tokens": self.fallback_tokens,
+            "wall_seconds": self.wall_seconds,
+        }
+        if self.client is not None:
+            d["client"] = self.client.to_json()
+        return d
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """A full fleet run: per-session results + merged server/client stats."""
+
+    backend: str
+    sessions: List[SessionResult]
+    engine: EngineStats
+    clients: Optional[ClientStats] = None  # ClientStats.merge over the fleet
+    wall_seconds: float = 0.0
+
+    @property
+    def outputs(self) -> Dict[int, List[int]]:
+        """device_id -> committed tokens (the equivalence-check surface)."""
+        return {s.device_id: s.tokens for s in self.sessions}
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(len(s.tokens) for s in self.sessions)
+
+    def to_json(self) -> dict:
+        d = {
+            "backend": self.backend,
+            "wall_seconds": self.wall_seconds,
+            "total_tokens": self.total_tokens,
+            "engine": self.engine.to_json(),
+            "sessions": [s.to_json() for s in self.sessions],
+        }
+        if self.clients is not None:
+            d["clients"] = self.clients.to_json()
+        return d

@@ -1,0 +1,306 @@
+"""ServeSpec: one declarative, serializable config for every SLED backend.
+
+The repo grew four ways to run the same system — the lock-step reference
+loop, the in-process ServerEngine, the asyncio transport runtime, and the
+replica-sharded cluster router — and every driver used to re-wire models,
+pools, planners, and links by hand.  A :class:`ServeSpec` is the single
+source of truth instead: a validated tree of frozen dataclasses that names
+the model pair, the execution backend, and every serving knob, and that
+round-trips through JSON (``to_json`` / ``from_json``) so a *run
+configuration is an artifact* — sweepable, diffable, committable, and (the
+ROADMAP's cross-process follow-on) shippable to another host as a placement
+RPC.
+
+``System.build(spec)`` (api/system.py) turns a spec into a running backend.
+Validation happens at construction: invalid combinations (replicas on the
+reference loop, adaptive spec-length control without the v2 feedback codec,
+unknown policies) fail here with a message, not deep inside a driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Union
+
+BACKENDS = ("reference", "engine", "transport", "cluster")
+LINKS = ("loopback", "sim")
+KCTLS = ("fixed", "adaptive")
+POLICIES = ("continuous", "deadline", "static")
+PLACEMENTS = ("least-loaded", "affinity", "round-robin")
+QMODES = ("none", "f32", "f16", "int8")
+QUANT_BITS = (4, 8, 16)
+CODEC_VERSIONS = (1, 2)  # v1: no Verdict feedback fields; v2: current wire
+
+
+class SpecError(ValueError):
+    """A ServeSpec names an invalid value or an invalid combination."""
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SpecError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """The draft/target model pair (reduced configs, deterministic init).
+
+    ``seed`` keys the target's init params; the draft uses ``seed + 1`` —
+    one integer pins the whole weight state, which is what makes a spec a
+    reproducible artifact.  ``draft_noise`` Gaussian-perturbs the draft
+    (random-init reduced pairs otherwise agree greedily, so acceptance is a
+    trivial 1.0); ``bits`` < 16 serves a weight-only-quantized target.
+    """
+
+    arch: str = "qwen2-1.5b"
+    draft_arch: str = "qwen2-1.5b"
+    vocab_size: int = 256
+    target_layers: Optional[int] = None  # None: the reduced config's own depth
+    draft_layers: Optional[int] = 1
+    bits: int = 16
+    draft_noise: float = 0.0
+    seed: int = 0
+
+    def validate(self) -> None:
+        _check(bool(self.arch), "model.arch must name a config")
+        _check(bool(self.draft_arch), "model.draft_arch must name a config")
+        _check(self.vocab_size >= 8, f"model.vocab_size {self.vocab_size} too small")
+        _check(self.bits in QUANT_BITS, f"model.bits {self.bits} not in {QUANT_BITS}")
+        _check(self.draft_noise >= 0.0, "model.draft_noise must be >= 0")
+        for name in ("target_layers", "draft_layers"):
+            v = getattr(self, name)
+            _check(v is None or v >= 1, f"model.{name} must be None or >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """Wire-runtime knobs (``backend="transport"`` only).
+
+    ``codec_version`` declares the frame protocol the deployment speaks;
+    v1 Verdicts carried no accept_rate/queue_depth feedback, so adaptive
+    spec-length control is rejected on a v1 codec at validation time.
+    """
+
+    link: str = "loopback"  # loopback | sim
+    net: str = "wlan"  # NetProfile name for link="sim"
+    qmode: str = "none"
+    pipeline: bool = True  # draft ahead while a round is in flight
+    verify_timeout: float = 30.0  # device-side round timeout (s)
+    stagger_s: float = 0.0  # client i joins i * stagger_s seconds in
+    draft_rate: Optional[float] = None  # emulated device tokens/s (None: unthrottled)
+    codec_version: int = 2
+
+    def validate(self) -> None:
+        _check(self.link in LINKS, f"transport.link {self.link!r} not in {LINKS}")
+        _check(self.qmode in QMODES, f"transport.qmode {self.qmode!r} not in {QMODES}")
+        _check(
+            self.codec_version in CODEC_VERSIONS,
+            f"transport.codec_version {self.codec_version} not in {CODEC_VERSIONS}",
+        )
+        _check(self.verify_timeout > 0, "transport.verify_timeout must be > 0")
+        _check(self.stagger_s >= 0, "transport.stagger_s must be >= 0")
+        _check(
+            self.draft_rate is None or self.draft_rate > 0,
+            "transport.draft_rate must be None or > 0",
+        )
+        # net is validated for every link (serving resolves the profile even
+        # on loopback): a typo'd spec must fail here, not deep in a driver
+        from repro.serving.devices import NETS  # lazy: keep spec import light
+
+        _check(self.net in NETS, f"transport.net {self.net!r} not in {sorted(NETS)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Replica fleet shape (``backend="cluster"`` or ``"transport"``)."""
+
+    replicas: int = 1
+    placement: str = "least-loaded"
+    migrate_on_retire: bool = True
+
+    def validate(self) -> None:
+        _check(self.replicas >= 1, f"cluster.replicas must be >= 1, got {self.replicas}")
+        _check(
+            self.placement in PLACEMENTS,
+            f"cluster.placement {self.placement!r} not in {PLACEMENTS}",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec:
+    """BatchPlanner policy + pool sizing for the engine-backed backends."""
+
+    policy: str = "continuous"
+    max_wait: float = 0.05
+    slots: int = 0  # pool rows PER REPLICA; 0 = ceil(devices / replicas)
+    straggler_timeout: float = 30.0
+    stagger_ticks: int = 3  # in-process driver: device i joins i*stagger ticks in
+
+    def validate(self) -> None:
+        _check(self.policy in POLICIES, f"scheduler.policy {self.policy!r} not in {POLICIES}")
+        _check(self.max_wait >= 0, "scheduler.max_wait must be >= 0")
+        _check(self.slots >= 0, "scheduler.slots must be >= 0 (0 = auto)")
+        _check(self.straggler_timeout > 0, "scheduler.straggler_timeout must be > 0")
+        _check(self.stagger_ticks >= 0, "scheduler.stagger_ticks must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """The full deployment: model pair + backend + workload + every knob.
+
+    ``backend`` selects the execution stack ``System.build`` constructs:
+
+      reference   lock-step sled_generate loop (algorithmic ground truth)
+      engine      one in-process ServerEngine (continuous batching)
+      cluster     Router over N in-process engine replicas + placement
+      transport   asyncio wire runtime (codec frames over loopback/sim links),
+                  fronting one engine or a replica Router
+
+    All four commit token-identical streams for the same spec under greedy
+    drafting on lossless links — tests/test_api.py enforces it.
+    """
+
+    backend: str = "engine"
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
+    cluster: ClusterSpec = dataclasses.field(default_factory=ClusterSpec)
+    scheduler: SchedulerSpec = dataclasses.field(default_factory=SchedulerSpec)
+    # workload: the fleet this spec serves by default
+    devices: int = 6
+    prompt_len: int = 12
+    prompt_seed: int = 2
+    max_new: int = 24
+    session_seed_base: int = 1000  # device i drafts with seed base + i
+    # decoding / verification
+    k_max: int = 4
+    c_th: float = 0.3  # Eq. 1 dynamic-drafting confidence threshold
+    greedy: bool = True
+    kctl: str = "fixed"  # fixed | adaptive (closed-loop spec length)
+    max_len: int = 128
+    attn_chunk: int = 32
+    paged_attention: bool = True
+
+    def __post_init__(self) -> None:
+        self.validate()
+
+    # -- validation ----------------------------------------------------------
+
+    def validate(self) -> None:
+        _check(self.backend in BACKENDS, f"backend {self.backend!r} not in {BACKENDS}")
+        self.model.validate()
+        self.transport.validate()
+        self.cluster.validate()
+        self.scheduler.validate()
+        _check(self.devices >= 1, "devices must be >= 1")
+        _check(self.prompt_len >= 1, "prompt_len must be >= 1")
+        _check(self.max_new >= 1, "max_new must be >= 1")
+        _check(self.k_max >= 1, "k_max must be >= 1")
+        _check(0.0 <= self.c_th <= 1.0, "c_th must be in [0, 1]")
+        _check(self.kctl in KCTLS, f"kctl {self.kctl!r} not in {KCTLS}")
+        # a stream occupies prompt + committed tokens + one in-flight round of
+        # slack in its pool row; a spec that can overflow a row would silently
+        # clamp dynamic_update_slice appends and corrupt the cache tail
+        _check(
+            self.max_len >= self.prompt_len + self.max_new + self.k_max + 1,
+            f"max_len {self.max_len} cannot hold prompt_len {self.prompt_len} "
+            f"+ max_new {self.max_new} + k_max+1 in-flight slack",
+        )
+        _check(self.attn_chunk >= 1, "attn_chunk must be >= 1")
+        # cross-field combinations
+        _check(
+            self.cluster.replicas == 1 or self.backend in ("cluster", "transport"),
+            f"replicas={self.cluster.replicas} needs backend 'cluster' or "
+            f"'transport', not {self.backend!r} (the reference loop and the "
+            "bare engine are single-replica by definition)",
+        )
+        _check(
+            self.kctl != "adaptive" or self.backend == "transport",
+            "kctl='adaptive' needs backend='transport': the acceptance/"
+            "queue-depth feedback rides Verdict frames",
+        )
+        _check(
+            self.kctl != "adaptive" or self.transport.codec_version >= 2,
+            "kctl='adaptive' needs codec_version >= 2 (v1 Verdict frames "
+            "carry no accept_rate/queue_depth feedback)",
+        )
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def slots_per_replica(self) -> int:
+        """Pool rows per replica: explicit, or the fleet split evenly."""
+        if self.scheduler.slots:
+            return self.scheduler.slots
+        return -(-self.devices // self.cluster.replicas)  # ceil div
+
+    def with_backend(self, backend: str, **changes) -> "ServeSpec":
+        """Same deployment on a different backend (replicas reset to 1 and
+        kctl to fixed where the target backend demands it, BEFORE the
+        replace so the result always validates)."""
+        kw = dict(changes)
+        cluster = kw.pop("cluster", self.cluster)
+        kctl = kw.pop("kctl", self.kctl)
+        if backend in ("reference", "engine") and cluster.replicas != 1:
+            cluster = dataclasses.replace(cluster, replicas=1)
+        if backend != "transport" and kctl == "adaptive":
+            kctl = "fixed"
+        return dataclasses.replace(self, backend=backend, cluster=cluster, kctl=kctl, **kw)
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        """Plain-dict form (nested specs as sub-dicts); json.dumps-safe."""
+        return dataclasses.asdict(self)
+
+    def to_json_str(self, indent: int = 2) -> str:
+        return json.dumps(self.to_json(), indent=indent)
+
+    @classmethod
+    def from_json(cls, data: Union[str, bytes, dict]) -> "ServeSpec":
+        """Inverse of :meth:`to_json`.  Every malformation — bad JSON,
+        unknown keys, wrong-typed values — surfaces as a SpecError (a typo'd
+        sweep artifact must fail loudly with one exception type, not leak a
+        TypeError traceback through a driver)."""
+        if isinstance(data, (str, bytes)):
+            try:
+                data = json.loads(data)
+            except json.JSONDecodeError as e:
+                raise SpecError(f"spec is not valid JSON: {e}") from e
+        if not isinstance(data, dict):
+            raise SpecError(f"spec JSON must be an object, got {type(data).__name__}")
+        data = dict(data)
+        kw = {}
+        for name, sub_cls in (
+            ("model", ModelSpec),
+            ("transport", TransportSpec),
+            ("cluster", ClusterSpec),
+            ("scheduler", SchedulerSpec),
+        ):
+            if name in data:
+                kw[name] = _sub_from_dict(sub_cls, name, data.pop(name))
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise SpecError(f"unknown ServeSpec keys {unknown}")
+        try:
+            return cls(**kw, **data)
+        except SpecError:
+            raise
+        except (TypeError, ValueError) as e:  # wrong-typed values
+            raise SpecError(f"bad ServeSpec value: {e}") from e
+
+
+def _sub_from_dict(sub_cls, name: str, d: dict):
+    if not isinstance(d, dict):
+        raise SpecError(f"spec key {name!r} must be an object, got {type(d).__name__}")
+    known = {f.name for f in dataclasses.fields(sub_cls)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise SpecError(f"unknown {name} keys {unknown}")
+    try:
+        return sub_cls(**d)
+    except SpecError:
+        raise
+    except (TypeError, ValueError) as e:  # wrong-typed values
+        raise SpecError(f"bad {name} value: {e}") from e

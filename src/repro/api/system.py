@@ -1,0 +1,713 @@
+"""System + Session: the one front door over every SLED execution backend.
+
+``System.build(spec)`` turns a :class:`~repro.api.spec.ServeSpec` into a
+running deployment — it builds the model pair once, constructs the backend
+the spec names (lock-step reference loop, in-process ServerEngine, replica
+Router, or the asyncio transport runtime), owns warmup and the shared jitted
+:class:`~repro.core.engine.VerifySteps` bundle, and hands out sessions:
+
+    spec = ServeSpec(backend="engine", devices=2, max_new=16)
+    system = System.build(spec)
+    session = system.open_session()
+    for ev in session.generate():      # TokenEvent / RoundEvent / DoneEvent
+        ...
+    session.result                     # unified SessionResult
+
+``system.serve()`` runs the spec's whole default fleet concurrently and
+returns a :class:`~repro.api.events.ServeResult` (per-session results plus
+merged EngineStats/ClientStats) — that is what launch/serve.py and the
+benchmarks drive.  All four backends commit token-identical streams for the
+same spec under greedy drafting on lossless links; the cross-backend
+equivalence test (tests/test_api.py) and the CI api-smoke job hold that
+line.
+
+Sessions on the in-process backends interleave cooperatively: each
+``generate()`` pump admits waiting sessions, submits ready drafts, and steps
+the engine once, so concurrently-pumped sessions batch together exactly as
+the raw driver loops did.  Transport sessions run the real asyncio client
+under the hood (a dedicated loop thread when a single session is streamed).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import logging
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Iterator, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.events import (
+    DoneEvent,
+    Event,
+    RoundEvent,
+    ServeResult,
+    SessionResult,
+    TokenEvent,
+)
+from repro.api.spec import ServeSpec
+from repro.cluster import Router
+from repro.configs.base import get_config
+from repro.core import engine_loop
+from repro.core.engine import EngineStats
+from repro.core.server_engine import EdgeDeviceKit, ServerEngine
+from repro.models.kvcache import supports_paged_attention
+from repro.models.model_zoo import build_model, perturb_params
+from repro.quant.quantize import dequantize_pytree, quantize_pytree
+from repro.serving.devices import NETS
+from repro.transport import codec
+from repro.transport.client import ClientStats, EdgeClient
+from repro.transport.links import make_link
+from repro.transport.server import TransportServer
+
+log = logging.getLogger(__name__)
+
+_ENGINE_BACKENDS = ("engine", "cluster", "transport")
+
+
+# ---------------------------------------------------------------------------
+# model construction (shared by every backend)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    """The built draft/target pair for one ModelSpec — reusable across
+    Systems so a spec sweep pays model init once."""
+
+    target_cfg: Any
+    draft_cfg: Any
+    target: Any
+    draft: Any
+    target_params: Any
+    draft_params: Any
+
+    @property
+    def vocab(self) -> int:
+        return self.target_cfg.vocab_size
+
+
+def build_models(mspec) -> ModelBundle:
+    """Deterministically build the spec's reduced model pair: target from
+    ``key(seed)`` (optionally weight-quantized), draft from ``key(seed+1)``
+    (optionally noise-perturbed so greedy acceptance is non-trivial)."""
+    tcfg = dataclasses.replace(get_config(mspec.arch).reduced(), vocab_size=mspec.vocab_size)
+    if mspec.target_layers is not None:
+        tcfg = dataclasses.replace(tcfg, num_layers=mspec.target_layers)
+    dcfg = dataclasses.replace(
+        get_config(mspec.draft_arch).reduced(), name="edge-draft", vocab_size=mspec.vocab_size
+    )
+    if mspec.draft_layers is not None:
+        dcfg = dataclasses.replace(dcfg, num_layers=mspec.draft_layers)
+    target, draft = build_model(tcfg), build_model(dcfg)
+    kw = {"max_pos": 256} if not tcfg.use_rope else {}
+    tp = target.init_params(jax.random.key(mspec.seed), **kw)
+    if mspec.bits < 16:
+        tp = dequantize_pytree(quantize_pytree(tp, mspec.bits))
+    dp = perturb_params(draft.init_params(jax.random.key(mspec.seed + 1)), mspec.draft_noise)
+    return ModelBundle(tcfg, dcfg, target, draft, tp, dp)
+
+
+# ---------------------------------------------------------------------------
+# sessions
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """One device's stream against a System backend.
+
+    ``generate()`` yields typed events (TokenEvent* RoundEvent ... DoneEvent)
+    and leaves the unified :class:`SessionResult` in ``.result``; ``run()``
+    drains the generator and returns the result directly.
+    """
+
+    def __init__(
+        self,
+        system: "System",
+        device_id: int,
+        prompt: np.ndarray,
+        max_new: int,
+        join_tick: int = 0,
+    ):
+        self._system = system
+        self.device_id = device_id
+        self.prompt = np.asarray(prompt, np.int32)
+        self.max_new = max_new
+        self.join_tick = join_tick
+        self.result: Optional[SessionResult] = None
+        self._events: deque = deque()
+        self._sink: Optional[Callable[[Event], None]] = None
+        self._device = None  # EdgeDevice once admitted (in-process backends)
+        self._last_drafted = 0
+        self._rounds = 0
+        self._drafted = 0
+        self._accepted = 0
+        self._fallback_rounds = 0
+        self._fallback_tokens = 0
+        self._committed = 0
+        self._t_open = time.time()
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def generate(self) -> Iterator[Event]:
+        return self._system._generate(self)
+
+    def run(self) -> SessionResult:
+        for _ in self.generate():
+            pass
+        return self.result
+
+    # -- event plumbing (driven by the System backends) ----------------------
+
+    def _push(self, ev: Event) -> None:
+        if self._sink is not None:
+            self._sink(ev)
+        else:
+            self._events.append(ev)
+
+    def _note_round(
+        self,
+        tokens: np.ndarray,
+        n_drafted: int,
+        n_accepted: int,
+        fallback: bool = False,
+    ) -> None:
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        for t in toks:
+            if self._committed < self.max_new:
+                self._push(TokenEvent(self.device_id, t, self._committed))
+            self._committed += 1
+        self._push(
+            RoundEvent(
+                device_id=self.device_id,
+                round=self._rounds,
+                n_drafted=int(n_drafted),
+                n_accepted=int(n_accepted),
+                tokens=tuple(toks),
+                fallback=fallback,
+            )
+        )
+        self._rounds += 1
+        self._drafted += int(n_drafted)
+        if fallback:
+            self._fallback_rounds += 1
+            self._fallback_tokens += len(toks)
+        else:
+            self._accepted += int(n_accepted)
+
+    def _finish(self, tokens, client: Optional[ClientStats] = None) -> None:
+        tokens = [int(t) for t in tokens][: self.max_new]
+        self.result = SessionResult(
+            device_id=self.device_id,
+            tokens=tokens,
+            rounds=self._rounds,
+            drafted=self._drafted,
+            accepted=self._accepted,
+            fallback_rounds=self._fallback_rounds,
+            fallback_tokens=self._fallback_tokens,
+            wall_seconds=(
+                client.wall_seconds if client is not None else time.time() - self._t_open
+            ),
+            client=client,
+        )
+        self._system._waiting.pop(self.device_id, None)
+        self._system._running.pop(self.device_id, None)
+        self._push(DoneEvent(self.device_id, len(tokens)))
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+
+
+class System:
+    """A built SLED deployment: models + the spec's execution backend."""
+
+    def __init__(
+        self,
+        spec: ServeSpec,
+        models: ModelBundle,
+        engine: Union[ServerEngine, Router, None],
+        kit: Optional[EdgeDeviceKit],
+    ):
+        self.spec = spec
+        self.models = models
+        self.engine = engine  # ServerEngine | Router | None (reference)
+        self.kit = kit
+        self._waiting: Dict[int, Session] = {}
+        self._running: Dict[int, Session] = {}
+        self._used_ids: set = set()
+        self._tick = 0
+        self._t0: Optional[float] = None
+        self._ref_steps: Optional[dict] = None
+        # one transport fleet at a time: the engine below is not thread-safe,
+        # and each fleet run owns its own TransportServer + event loop
+        self._transport_lock = threading.Lock()
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        spec: ServeSpec,
+        *,
+        models: Optional[ModelBundle] = None,
+        steps=None,
+        kit: Optional[EdgeDeviceKit] = None,
+        warmup: bool = False,
+    ) -> "System":
+        """Construct the backend the spec names.
+
+        ``models`` / ``steps`` / ``kit`` let spec sweeps share built weights,
+        a compiled VerifySteps bundle, and the device-side jitted kit across
+        Systems (homogeneous configs only — the engine validates sharing).
+        """
+        spec.validate()
+        if spec.backend == "transport" and spec.transport.codec_version != codec.VERSION:
+            # the spec layer can DESCRIBE other protocol versions (artifacts
+            # shipped between heterogeneous hosts), but this runtime only
+            # speaks the current one — refuse rather than silently upgrade
+            raise ValueError(
+                f"this runtime speaks codec v{codec.VERSION} only; the spec "
+                f"declares codec_version={spec.transport.codec_version}"
+            )
+        models = models or build_models(spec.model)
+        fam = getattr(models.target_cfg, "family", None)
+        if (
+            spec.backend in _ENGINE_BACKENDS
+            and spec.paged_attention
+            and not supports_paged_attention(models.target_cfg)
+        ):
+            log.warning(
+                "paged attention is unavailable for model family %r (%s): "
+                "verification falls back to gather/scatter cache paging",
+                fam,
+                spec.model.arch,
+            )
+        engine: Union[ServerEngine, Router, None] = None
+        if spec.backend in _ENGINE_BACKENDS:
+            engine_kw = dict(
+                n_slots=spec.slots_per_replica,
+                max_len=spec.max_len,
+                k_max=spec.k_max,
+                policy=spec.scheduler.policy,
+                max_wait=spec.scheduler.max_wait,
+                straggler_timeout=spec.scheduler.straggler_timeout,
+                greedy=spec.greedy,
+                attn_chunk=spec.attn_chunk,
+                paged_attention=spec.paged_attention,
+                steps=steps,
+            )
+            if spec.backend == "engine" or (
+                spec.backend == "transport" and spec.cluster.replicas == 1
+            ):
+                # single replica: the bare engine (TransportServer fronts a
+                # Router or an engine interchangeably)
+                engine = ServerEngine(models.target, models.target_params, **engine_kw)
+            else:  # cluster, or transport fronting a replica set
+                n_slots = engine_kw.pop("n_slots")
+                engine = Router.build(
+                    models.target,
+                    models.target_params,
+                    replicas=spec.cluster.replicas,
+                    n_slots=n_slots,
+                    placement=spec.cluster.placement,
+                    migrate_on_retire=spec.cluster.migrate_on_retire,
+                    **engine_kw,
+                )
+        kit = kit or EdgeDeviceKit(
+            models.draft,
+            models.draft_params,
+            k_max=spec.k_max,
+            c_th=spec.c_th,
+            greedy=spec.greedy,
+            attn_chunk=spec.attn_chunk,
+        )
+        system = cls(spec, models, engine, kit)
+        if warmup:
+            system.warmup()
+        return system
+
+    @property
+    def steps(self):
+        """The jitted VerifySteps bundle (shareable across homogeneous
+        Systems); None for the reference backend."""
+        if self.engine is None:
+            return None
+        return self.engine.steps if isinstance(self.engine, ServerEngine) else (
+            self.engine.replicas[0].steps
+        )
+
+    def warmup(self, buckets=None) -> Dict[int, float]:
+        """Pre-compile the verify buckets (engine-backed backends only)."""
+        if self.engine is None:
+            return {}
+        return self.engine.warmup(buckets)
+
+    def prompts(self) -> np.ndarray:
+        """The spec's default workload: ``(devices, prompt_len)`` prompts."""
+        return np.asarray(
+            jax.random.randint(
+                jax.random.key(self.spec.prompt_seed),
+                (self.spec.devices, self.spec.prompt_len),
+                0,
+                self.models.vocab,
+            )
+        )
+
+    # -- sessions ------------------------------------------------------------
+
+    def open_session(
+        self,
+        prompt=None,
+        *,
+        device_id: Optional[int] = None,
+        max_new: Optional[int] = None,
+        join_tick: int = 0,
+    ) -> Session:
+        """Register a stream; it joins the backend when first pumped."""
+        if device_id is None:
+            device_id = 0
+            while device_id in self._used_ids:
+                device_id += 1
+        if device_id in self._used_ids:
+            raise ValueError(f"device {device_id} already has a session")
+        if prompt is None:
+            defaults = self.prompts()
+            if device_id >= defaults.shape[0]:
+                raise ValueError(
+                    f"no default prompt for device {device_id} "
+                    f"(spec.devices={self.spec.devices}); pass prompt="
+                )
+            prompt = defaults[device_id]
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        budget = max_new or self.spec.max_new
+        if (
+            self.engine is not None
+            and prompt.shape[0] + budget + self.spec.k_max + 1 > self.spec.max_len
+        ):
+            raise ValueError(
+                f"prompt of {prompt.shape[0]} + max_new {budget} + k_max+1 slack "
+                f"exceeds the pool row length max_len={self.spec.max_len}"
+            )
+        self._used_ids.add(device_id)
+        session = Session(
+            self,
+            device_id,
+            prompt,
+            budget,
+            join_tick=join_tick,
+        )
+        self._waiting[device_id] = session
+        return session
+
+    # -- fleet serve ---------------------------------------------------------
+
+    def serve(
+        self,
+        prompts=None,
+        *,
+        max_new: Optional[int] = None,
+        on_event: Optional[Callable[[Event], None]] = None,
+    ) -> ServeResult:
+        """Run the whole fleet (spec workload, or explicit ``prompts``)
+        concurrently to completion; the one-call driver behind serve.py and
+        the benchmarks.
+
+        A System may serve() repeatedly (the engine and its compiled steps
+        stay warm), but engine stats are LIFETIME-cumulative across runs —
+        benchmarks that need clean per-run stats build a fresh System sharing
+        ``models``/``steps``/``kit`` instead.
+        """
+        if self._waiting or self._running:
+            raise RuntimeError("serve() needs a fresh System (sessions already open)")
+        # per-run driver state: clock, stagger ticks, and device-id space —
+        # repeated serve() calls reuse ids 0..N-1 (prior streams all retired),
+        # so runs are comparable and session seeds stay spec-determined
+        self._tick, self._t0 = 0, None
+        self._used_ids.clear()
+        prompts = self.prompts() if prompts is None else np.asarray(prompts)
+        sink = on_event or (lambda ev: None)
+        sessions = []
+        for i in range(prompts.shape[0]):
+            s = self.open_session(
+                prompts[i],
+                device_id=i if i not in self._used_ids else None,
+                max_new=max_new,
+                join_tick=i * self.spec.scheduler.stagger_ticks,
+            )
+            s._sink = sink
+            sessions.append(s)
+        t0 = time.time()
+        clients: Optional[ClientStats] = None
+        if self.spec.backend == "reference":
+            for _ in self._reference_rounds(sessions):
+                pass
+            stats = self._reference_stats(sessions, time.time() - t0)
+        elif self.spec.backend == "transport":
+            with self._transport_lock:
+                stats, clients = asyncio.run(self._transport_fleet(sessions))
+        else:
+            deadline = time.time() + 600.0
+            while not all(s.done for s in sessions):
+                self._pump_inproc()
+                if time.time() > deadline:
+                    raise RuntimeError("in-process fleet failed to drain in 600s")
+            stats = self.engine.stats(time.time() - (self._t0 or t0))
+        return ServeResult(
+            backend=self.spec.backend,
+            sessions=[s.result for s in sessions],
+            engine=stats,
+            clients=clients,
+            wall_seconds=time.time() - t0,
+        )
+
+    # -- single-session streaming --------------------------------------------
+
+    def _generate(self, session: Session) -> Iterator[Event]:
+        if session.done:
+            yield from ()
+            return
+        if self.spec.backend == "reference":
+            gen = self._reference_rounds([session])
+        elif self.spec.backend == "transport":
+            yield from self._generate_transport(session)
+            return
+        else:
+            gen = self._pump_driver(session)
+        for _ in gen:
+            while session._events:
+                yield session._events.popleft()
+        while session._events:
+            yield session._events.popleft()
+
+    def _pump_driver(self, session: Session) -> Iterator[None]:
+        deadline = time.time() + 600.0
+        while not session.done:
+            self._pump_inproc()
+            if time.time() > deadline:
+                raise RuntimeError(f"session {session.device_id} failed to finish in 600s")
+            yield None
+
+    def _generate_transport(self, session: Session) -> Iterator[Event]:
+        """Stream one transport session: the asyncio client runs on a
+        dedicated loop thread and events cross over a queue.  Concurrent
+        transport streams serialize behind the System's transport lock (the
+        engine is not thread-safe).  Closing the generator early cancels the
+        background run and retires the stream best-effort."""
+        q: queue.Queue = queue.Queue()
+        session._sink = q.put
+        done = object()
+        cancelled = threading.Event()
+        handle: dict = {}
+
+        def work():
+            async def runner():
+                handle["loop"] = asyncio.get_running_loop()
+                handle["task"] = asyncio.current_task()
+                await self._transport_fleet([session])
+
+            with self._transport_lock:
+                if cancelled.is_set():  # consumer left before our turn
+                    q.put(done)
+                    return
+                try:
+                    asyncio.run(runner())
+                except asyncio.CancelledError:
+                    pass
+                except BaseException as e:  # surfaced on the consumer side
+                    q.put(e)
+                finally:
+                    if not session.done:  # cancelled mid-stream: free the slot
+                        self._waiting.pop(session.device_id, None)
+                        if self.engine is not None and session.device_id in self.engine.streams:
+                            self.engine.retire(session.device_id)
+                q.put(done)
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is done:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            cancelled.set()
+            if not session.done and handle.get("task") is not None:
+                try:
+                    handle["loop"].call_soon_threadsafe(handle["task"].cancel)
+                except RuntimeError:
+                    pass  # loop already closed
+            t.join(timeout=60.0)
+
+    # -- in-process backends (engine / cluster) ------------------------------
+
+    def _pump_inproc(self) -> None:
+        """One scheduler tick: admit joined sessions, submit ready drafts,
+        step the engine, route verdicts back to their sessions.  Pumping from
+        several generators interleaves their streams into shared batches."""
+        if self.engine is None:
+            raise RuntimeError("the reference backend has no engine to pump")
+        if self._t0 is None:
+            self._t0 = time.time()
+        self._tick += 1
+        now = time.time() - self._t0
+        for dev_id in sorted(self._waiting):
+            s = self._waiting[dev_id]
+            if s.join_tick > self._tick:
+                continue
+            if self.engine.admit(dev_id, s.prompt, now) is None:
+                break  # pool full: stays waiting, admitted when a slot frees
+            s._device = self.kit.spawn(
+                dev_id,
+                s.prompt,
+                max_len=self.spec.max_len,
+                seed=self.spec.session_seed_base + dev_id,
+            )
+            self._running[dev_id] = s
+            del self._waiting[dev_id]
+        for s in self._running.values():
+            if not s._device.awaiting:
+                toks = s._device.draft()
+                s._last_drafted = len(toks)
+                self.engine.submit(s.device_id, toks, time.time() - self._t0)
+        finished = []
+        for v in self.engine.step(time.time() - self._t0) or []:
+            s = self._running[v.device_id]
+            s._device.on_verdict(v)
+            s._note_round(v.tokens, n_drafted=s._last_drafted, n_accepted=v.n_accepted)
+            if len(s._device.committed) >= s.max_new:
+                finished.append(s)
+        for s in finished:
+            self.engine.retire(s.device_id)
+            del self._running[s.device_id]
+            s._finish(s._device.committed)
+
+    # -- reference backend ---------------------------------------------------
+
+    def _reference_rounds(self, sessions: List[Session]) -> Iterator[None]:
+        """Lock-step draft+verify over the sessions' prompts, emitting
+        per-round events; yields once per round so single-session streaming
+        stays incremental.  A thin consumer of engine_loop.sled_rounds —
+        the ONE copy of the ground-truth loop — so the reference backend can
+        never drift from sled_generate."""
+        spec = self.spec
+        lens = {s.prompt.shape[0] for s in sessions}
+        if len(lens) > 1:
+            raise ValueError(
+                "the reference backend batches sessions lock-step and needs "
+                f"equal prompt lengths, got {sorted(lens)}"
+            )
+        prompts = np.stack([s.prompt for s in sessions])
+        budgets = [s.max_new for s in sessions]
+        committed: List[List[int]] = [[] for _ in sessions]
+        gen = engine_loop.sled_rounds(
+            self.models.draft, self.models.draft_params,
+            self.models.target, self.models.target_params,
+            jnp.asarray(prompts),
+            max_new=max(budgets),
+            k_max=spec.k_max, c_th=spec.c_th, greedy=spec.greedy,
+            seed=0, attn_chunk=spec.attn_chunk, steps=self._reference_jits(),
+        )
+        for rnd in gen:
+            for b, s in enumerate(sessions):
+                if len(committed[b]) >= budgets[b]:
+                    continue  # this stream is done; it just rides the batch
+                row = [int(t) for t in rnd.tokens[b, : int(rnd.n_commit[b])]]
+                committed[b].extend(row)
+                s._note_round(
+                    row, n_drafted=int(rnd.lengths[b]), n_accepted=int(rnd.n_accepted[b])
+                )
+                if len(committed[b]) >= budgets[b]:
+                    s._finish(committed[b])
+            if all(s.done for s in sessions):
+                break  # heterogeneous budgets: don't ride out the longest row
+            yield None
+
+    def _reference_jits(self) -> dict:
+        if self._ref_steps is None:
+            spec = self.spec
+            self._ref_steps = engine_loop.make_sled_steps(
+                self.models.draft, self.models.target,
+                k_max=spec.k_max, c_th=spec.c_th, greedy=spec.greedy,
+                attn_chunk=spec.attn_chunk,
+            )
+        return self._ref_steps
+
+    def _reference_stats(self, sessions: List[Session], wall: float) -> EngineStats:
+        """SimResult-shaped record for the reference loop (no server)."""
+        total = sum(len(s.result.tokens) for s in sessions)
+        rounds = max((s.result.rounds for s in sessions), default=0)
+        drafted = sum(s.result.drafted for s in sessions)
+        accepted = sum(s.result.accepted for s in sessions)
+        wall = max(wall, 1e-9)
+        return EngineStats(
+            wstgr=total / wall,
+            per_device_rate=total / max(len(sessions), 1) / wall,
+            server_busy_frac=1.0,
+            rounds=rounds,
+            timeouts=0,
+            fallback_tokens=0,
+            mean_batch_fill=float(len(sessions)),
+            mean_round_latency=0.0,
+            server_rounds_per_s=rounds / wall,
+            streams_served=len(sessions),
+            acceptance_rate=accepted / max(drafted, 1),
+        )
+
+    # -- transport backend ---------------------------------------------------
+
+    async def _transport_fleet(self, sessions: List[Session]):
+        spec, tspec = self.spec, self.spec.transport
+        server = TransportServer(self.engine)
+        runs = []
+        for idx, s in enumerate(sessions):
+            link = make_link(
+                tspec.link,
+                net=NETS[tspec.net],
+                seed=spec.session_seed_base + s.device_id,
+            )
+            server.attach(link.server)
+            client = EdgeClient(
+                self.kit,
+                s.device_id,
+                s.prompt,
+                link.device,
+                max_new=s.max_new,
+                max_len=spec.max_len,
+                qmode=tspec.qmode,
+                pipeline=tspec.pipeline,
+                verify_timeout=tspec.verify_timeout,
+                admit_timeout=tspec.verify_timeout,
+                draft_rate=tspec.draft_rate,
+                kctl=spec.kctl,
+                seed=spec.session_seed_base + s.device_id,
+                on_round=s._note_round,
+            )
+            runs.append((idx, s, client))
+
+        async def run_one(idx: int, s: Session, client: EdgeClient):
+            await asyncio.sleep(idx * tspec.stagger_s)
+            tokens = await client.run()
+            s._finish(tokens, client=client.stats)
+
+        await asyncio.gather(*(run_one(i, s, c) for i, s, c in runs))
+        for _ in range(500):  # let in-flight Close frames retire their streams
+            if not self.engine.streams:
+                break
+            await asyncio.sleep(0.01)
+        stats = server.stats()
+        await server.stop()
+        fleet = ClientStats.merge([c.stats for _, _, c in runs])
+        return stats, fleet

@@ -1,0 +1,43 @@
+"""``repro`` console entry point.
+
+    repro serve --spec spec.json [--check]     run a ServeSpec artifact
+    repro serve --devices 4 --dump-spec        resolve flags into a spec
+    repro serve --transport sim --net wlan     legacy-flag serving
+
+Subcommands are lazy-imported so ``repro --help`` stays instant (no jax
+import until a command actually runs).
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import List, Optional
+
+_USAGE = """\
+usage: repro <command> [args...]
+
+commands:
+  serve    serve a SLED deployment from a ServeSpec (see: repro serve --help)
+
+Run configurations are declarative ServeSpec JSON artifacts; `repro serve
+--dump-spec` converts any flag combination into one.
+"""
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(_USAGE, end="")
+        return
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "serve":
+        from repro.launch.serve import main as serve_main
+
+        serve_main(rest)
+        return
+    print(_USAGE, end="", file=sys.stderr)
+    raise SystemExit(f"repro: unknown command {cmd!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -174,10 +174,13 @@ class Router:
         **engine_kw,
     ) -> "Router":
         """N homogeneous replicas (``n_slots`` rows each) sharing one jitted
-        VerifySteps bundle — the fleet compiles once."""
+        VerifySteps bundle — the fleet compiles once.  Pass ``steps=`` to
+        share an ALREADY-compiled bundle from another homogeneous fleet
+        (spec sweeps build every replica count on the same executables)."""
         if replicas < 1:
             raise ValueError(f"need at least 1 replica, got {replicas}")
-        first = ServerEngine(model, params, n_slots=n_slots, **engine_kw)
+        steps = engine_kw.pop("steps", None)
+        first = ServerEngine(model, params, n_slots=n_slots, steps=steps, **engine_kw)
         rest = [
             ServerEngine(model, params, n_slots=n_slots, steps=first.steps, **engine_kw)
             for _ in range(replicas - 1)

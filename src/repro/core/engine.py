@@ -94,8 +94,13 @@ class EngineStats:
     fallback_rounds: int = 0
     replicas: int = 1  # >1 only for cluster-merged records
 
-    def as_dict(self):
+    def to_json(self) -> dict:
+        """The uniform stats record (json.dumps-safe) every driver and BENCH
+        artifact emits — same shape in-process, over the wire, or merged."""
         return dataclasses.asdict(self)
+
+    def as_dict(self):
+        return self.to_json()
 
     @classmethod
     def merge(cls, stats: Sequence["EngineStats"]) -> "EngineStats":

@@ -36,6 +36,110 @@ class SledStats:
         return self.committed / max(self.rounds, 1)
 
 
+def make_sled_steps(
+    draft_model, target_model, *,
+    k_max: int = 4, c_th: float = 0.0, greedy: bool = True,
+    temperature: float = 1.0, attn_chunk: int = 256,
+) -> dict:
+    """The lock-step loop's jitted bundle (prefill both models, draft,
+    verify).  Build once and pass to :func:`sled_rounds`/:func:`sled_generate`
+    so repeated loops (e.g. the repro.api reference backend's sessions) share
+    compiled executables."""
+    return {
+        "d_prefill": jax.jit(
+            verification.make_prefill_step(draft_model, attn_chunk=attn_chunk)
+        ),
+        "t_prefill": jax.jit(
+            verification.make_prefill_step(target_model, attn_chunk=attn_chunk)
+        ),
+        "verify": jax.jit(verification.make_verify_step(
+            target_model, greedy=greedy, temperature=temperature, attn_chunk=attn_chunk
+        )),
+        "draft": jax.jit(
+            lambda params, cache, prev, key: drafting.draft_round(
+                draft_model, params, cache, prev, key,
+                k_max=k_max, c_th=c_th, temperature=temperature, greedy=greedy,
+                keep_q_full=not greedy, attn_chunk=attn_chunk,
+            )
+        ),
+    }
+
+
+@dataclasses.dataclass
+class SledRound:
+    """One lock-step round's per-row outcome (materialized numpy)."""
+
+    tokens: np.ndarray  # (B, k_max+1) committed candidates per row
+    n_commit: np.ndarray  # (B,) tokens actually committed this round
+    lengths: np.ndarray  # (B,) draft tokens proposed
+    n_accepted: np.ndarray  # (B,) draft tokens accepted
+    confidence: Optional[np.ndarray] = None  # (B, k_max) when collected
+    accepted_mask: Optional[np.ndarray] = None  # (B, k_max) when collected
+
+
+def sled_rounds(
+    draft_model, draft_params,
+    target_model, target_params,
+    prompts: jax.Array,  # (B, P) int32
+    *,
+    max_new: int,
+    k_max: int = 4,
+    c_th: float = 0.0,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    seed: int = 0,
+    attn_chunk: int = 256,
+    collect_confidence: bool = False,
+    steps: Optional[dict] = None,
+):
+    """THE lock-step SLED loop, as a per-round generator.
+
+    Yields a :class:`SledRound` per draft+verify round until every row has
+    committed ``max_new`` tokens.  :func:`sled_generate` and the repro.api
+    reference backend are both thin consumers of this generator — there is
+    exactly one copy of the ground-truth loop (seeding, q plumbing, rollback)
+    to keep bit-identical.
+    """
+    B, P = prompts.shape
+    max_len = P + max_new + k_max + 8
+    steps = steps or make_sled_steps(
+        draft_model, target_model, k_max=k_max, c_th=c_th, greedy=greedy,
+        temperature=temperature, attn_chunk=attn_chunk,
+    )
+    d_cache = draft_model.make_cache(B, max_len, attn_chunk=attn_chunk)
+    t_cache = target_model.make_cache(B, max_len, attn_chunk=attn_chunk)
+    _, d_cache, prev = steps["d_prefill"](draft_params, d_cache, prompts)
+    _, t_cache, _ = steps["t_prefill"](target_params, t_cache, prompts)
+
+    key = jax.random.key(seed)
+    counts = np.zeros((B,), np.int64)
+    rounds = 0
+    while counts.min() < max_new:
+        key, k_d = jax.random.split(key)
+        dres = steps["draft"](draft_params, d_cache, prev, k_d)
+        batch = verification.make_verify_batch(
+            prev, dres.tokens, dres.lengths, draft_q=None if greedy else dres.q_sel,
+            seed=np.uint32(rounds + seed),
+        )
+        if not greedy and dres.q_full is not None:
+            batch["draft_q_full"] = dres.q_full
+        res, t_cache = steps["verify"](target_params, t_cache, batch)
+
+        d_cache = drafting.resume_after_verify(draft_model, dres, res.n_accepted)
+        prev = res.extra_token
+        n_commit = np.asarray(res.n_commit)
+        counts += n_commit
+        rounds += 1
+        yield SledRound(
+            tokens=np.asarray(res.out_tokens),
+            n_commit=n_commit,
+            lengths=np.asarray(dres.lengths),
+            n_accepted=np.asarray(res.n_accepted),
+            confidence=np.asarray(dres.confidence) if collect_confidence else None,
+            accepted_mask=np.asarray(res.accepted_mask) if collect_confidence else None,
+        )
+
+
 def sled_generate(
     draft_model, draft_params,
     target_model, target_params,
@@ -49,34 +153,14 @@ def sled_generate(
     seed: int = 0,
     attn_chunk: int = 256,
     collect_confidence: bool = False,
+    steps: Optional[dict] = None,
 ) -> Tuple[np.ndarray, SledStats, Optional[List[Tuple[float, bool]]]]:
     """Run SLED end-to-end. Returns (tokens (B, max_new), stats, conf_pairs).
 
     conf_pairs (when collect_confidence): list of (draft confidence,
     accepted?) per drafted token — the raw data behind paper Fig. 3.
     """
-    B, P = prompts.shape
-    max_len = P + max_new + k_max + 8
-
-    d_cache = draft_model.make_cache(B, max_len, attn_chunk=attn_chunk)
-    t_cache = target_model.make_cache(B, max_len, attn_chunk=attn_chunk)
-
-    d_prefill = jax.jit(verification.make_prefill_step(draft_model, attn_chunk=attn_chunk))
-    t_prefill = jax.jit(verification.make_prefill_step(target_model, attn_chunk=attn_chunk))
-    verify = jax.jit(verification.make_verify_step(
-        target_model, greedy=greedy, temperature=temperature, attn_chunk=attn_chunk))
-    do_draft = jax.jit(
-        lambda params, cache, prev, key: drafting.draft_round(
-            draft_model, params, cache, prev, key,
-            k_max=k_max, c_th=c_th, temperature=temperature, greedy=greedy,
-            keep_q_full=not greedy, attn_chunk=attn_chunk,
-        )
-    )
-
-    _, d_cache, prev = d_prefill(draft_params, d_cache, prompts)
-    _, t_cache, _ = t_prefill(target_params, t_cache, prompts)
-
-    key = jax.random.key(seed)
+    B = prompts.shape[0]
     # rows commit at different rates; a fast row may overshoot max_new by
     # (k_max+1) per round until the slowest row finishes
     out = np.full((B, max_new + 16 * (k_max + 1)), PAD_TOKEN, np.int64)
@@ -84,38 +168,26 @@ def sled_generate(
     stats = SledStats()
     conf_pairs: List[Tuple[float, bool]] = [] if collect_confidence else None
 
-    while counts.min() < max_new:
-        key, k_d = jax.random.split(key)
-        dres = do_draft(draft_params, d_cache, prev, k_d)
-        batch = verification.make_verify_batch(
-            prev, dres.tokens, dres.lengths, draft_q=None if greedy else dres.q_sel,
-            seed=np.uint32(stats.rounds + seed),
-        )
-        if not greedy and dres.q_full is not None:
-            batch["draft_q_full"] = dres.q_full
-        res, t_cache = verify(target_params, t_cache, batch)
-
-        d_cache = drafting.resume_after_verify(draft_model, dres, res.n_accepted)
-        prev = res.extra_token
-
-        toks = np.asarray(res.out_tokens)
-        n_commit = np.asarray(res.n_commit)
-        lengths = np.asarray(dres.lengths)
-        accepted = np.asarray(res.n_accepted)
+    for rnd in sled_rounds(
+        draft_model, draft_params, target_model, target_params, prompts,
+        max_new=max_new, k_max=k_max, c_th=c_th, greedy=greedy,
+        temperature=temperature, seed=seed, attn_chunk=attn_chunk,
+        collect_confidence=collect_confidence, steps=steps,
+    ):
         if collect_confidence:
-            confs = np.asarray(dres.confidence)
-            acc_mask = np.asarray(res.accepted_mask)
             for b in range(B):
-                for i in range(int(lengths[b])):
-                    conf_pairs.append((float(confs[b, i]), bool(acc_mask[b, i])))
+                for i in range(int(rnd.lengths[b])):
+                    conf_pairs.append(
+                        (float(rnd.confidence[b, i]), bool(rnd.accepted_mask[b, i]))
+                    )
         for b in range(B):
-            n = min(int(n_commit[b]), out.shape[1] - int(counts[b]))
-            out[b, counts[b] : counts[b] + n] = toks[b, :n]
+            n = min(int(rnd.n_commit[b]), out.shape[1] - int(counts[b]))
+            out[b, counts[b] : counts[b] + n] = rnd.tokens[b, :n]
             counts[b] += n
         stats.rounds += 1
-        stats.drafted += int(lengths.sum())
-        stats.accepted += int(accepted.sum())
-        stats.committed += int(n_commit.sum())
+        stats.drafted += int(rnd.lengths.sum())
+        stats.accepted += int(rnd.n_accepted.sum())
+        stats.committed += int(rnd.n_commit.sum())
 
     return out[:, :max_new], stats, conf_pairs
 

@@ -177,6 +177,16 @@ class ServerEngine:
         return self.admission.streams
 
     @property
+    def drafted_tokens(self) -> int:
+        """Lifetime draft tokens verified (benchmark calibration surface)."""
+        return self._drafted
+
+    @property
+    def accepted_tokens(self) -> int:
+        """Lifetime draft tokens accepted (benchmark calibration surface)."""
+        return self._accepted
+
+    @property
     def _timeouts(self) -> int:
         return self.admission.timeouts
 

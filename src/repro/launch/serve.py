@@ -1,298 +1,181 @@
-"""SLED serving launcher: N edge clients + a replica-sharded cluster server.
+"""SLED serving launcher: a thin argparse -> ServeSpec adapter.
 
-The server side is a cluster Router (``--replicas``): N engine replicas
-sharing one compiled step bundle behind a pluggable placement policy
-(``--placement least-loaded|affinity|round-robin``), with stream migration
-on retire.  ``--replicas 1`` is the single-engine special case and must stay
-token-for-token identical to the lock-step reference.  ``--kctl adaptive``
-closes the spec-length loop: Verdict frames carry acceptance + queue-depth
-feedback and each client's AIMD controller tunes its draft length online
-(adaptive runs skip the equivalence check — adapting k legitimately changes
-scheduling AND tokens drafted per round).
+All serving now runs through the unified ``repro.api`` front door — this
+launcher only translates flags into a :class:`~repro.api.ServeSpec`, builds
+a :class:`~repro.api.System`, and prints the run.  The legacy flags are kept
+(deprecated; each maps 1:1 onto a spec field — see the README migration
+table), and two new flags make runs reproducible from a single artifact:
 
-Three transports share the same models, cluster, and equivalence check:
+    --dump-spec      print the resolved ServeSpec as JSON and exit
+    --spec PATH      run a ServeSpec JSON from disk (flags that shape the
+                     deployment are ignored; --check/--dump-spec still apply)
 
-  loopback  (default) clients and server exchange wire-protocol frames over
-            zero-latency in-memory links — the full codec/admission/verdict
-            path with no network effects, so committed tokens must equal the
-            lock-step reference (engine_loop.sled_generate) token-for-token
-            under EVERY batch policy.
-  sim       frames pay latency/bandwidth/jitter/drop from a NetProfile
-            (serving/devices.py NETS) per link: RTT hiding via pipelined
-            draft-ahead, straggler timeouts, and §III-A local fallback are
-            real runtime behaviour.  Lossy profiles trade equivalence for
-            availability (fallback tokens are unverified) — exactly the
-            paper's trade.
-  inproc    PR-1's in-process driver loop (no wire protocol), kept as the
-            minimal engine demo.
+Backends (``--backend``, or inferred from the legacy ``--transport`` flag):
 
-    PYTHONPATH=src python -m repro.launch.serve --devices 6                # loopback
+  reference  lock-step sled_generate loop (algorithmic ground truth)
+  engine     in-process ServerEngine driver (PR-1's minimal demo)
+  cluster    Router over N in-process engine replicas (``--replicas``)
+  transport  wire-protocol runtime over loopback or simulated links
+
+On lossless links with fixed k every backend must be token-for-token
+identical to the reference loop; ``--check`` (default on) verifies it by
+running the reference backend on the same built models.
+
+    PYTHONPATH=src python -m repro.launch.serve --devices 6              # loopback
     PYTHONPATH=src python -m repro.launch.serve --transport sim --net wlan
-    PYTHONPATH=src python -m repro.launch.serve --transport sim --net lossy-wlan --no-check
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 --kctl adaptive \
         --transport sim --draft-noise 0.05 --no-check
+    repro serve --spec examples/specs/cluster.json --check               # from artifact
 """
 
 import argparse
-import asyncio
-import dataclasses
-import math
-import time
+from typing import Optional
 
-import jax
-import numpy as np
-
-from repro.cluster import PLACEMENT_POLICIES, Router
-from repro.configs.base import get_config
-from repro.core.engine_loop import sled_generate
-from repro.core.server_engine import EdgeDeviceKit
-from repro.models.model_zoo import build_model, perturb_params
-from repro.quant.quantize import dequantize_pytree, quantize_pytree
+from repro.api import ServeSpec, SpecError, System
+from repro.api.spec import (
+    BACKENDS,
+    ClusterSpec,
+    ModelSpec,
+    PLACEMENTS,
+    POLICIES,
+    QMODES,
+    SchedulerSpec,
+    TransportSpec,
+)
 from repro.serving.devices import NETS
-from repro.transport.client import ClientStats, EdgeClient
-from repro.transport.links import make_link
-from repro.transport.server import TransportServer
 
 
-def build_stack(args):
-    """Models, cluster router, device kit, prompts — shared by every transport."""
-    vocab = 256
-    tcfg = dataclasses.replace(get_config(args.arch).reduced(), vocab_size=vocab)
-    dcfg = dataclasses.replace(
-        get_config("qwen2-1.5b").reduced(), name="edge-draft", vocab_size=vocab, num_layers=1
-    )
-    target = build_model(tcfg)
-    draft = build_model(dcfg)
-    kw = {"max_pos": 256} if not tcfg.use_rope else {}
-    tp = target.init_params(jax.random.key(0), **kw)
-    if args.bits < 16:
-        tp = dequantize_pytree(quantize_pytree(tp, args.bits))
-        print(f"serving int{args.bits} weight-only quantized target")
-    dp = perturb_params(draft.init_params(jax.random.key(1)), args.draft_noise)
-
-    N = args.devices
-    prompts = jax.random.randint(jax.random.key(2), (N, 12), 0, vocab)
-    # per-replica slots: the fleet's pool capacity splits across replicas
-    # (total capacity >= devices unless --slots caps it explicitly)
-    slots = args.slots or math.ceil(N / args.replicas)
-    router = Router.build(
-        target,
-        tp,
-        replicas=args.replicas,
-        n_slots=slots,
-        placement=args.placement,
-        max_len=128,
+def spec_from_args(args) -> ServeSpec:
+    """Map the (legacy) flag soup onto the declarative spec, 1:1."""
+    if args.backend:
+        backend = args.backend
+    elif args.transport == "inproc":
+        backend = "cluster" if args.replicas > 1 else "engine"
+    else:
+        backend = "transport"
+    return ServeSpec(
+        backend=backend,
+        model=ModelSpec(
+            arch=args.arch,
+            vocab_size=256,
+            bits=args.bits,
+            draft_noise=args.draft_noise,
+        ),
+        transport=TransportSpec(
+            link="sim" if args.transport == "sim" else "loopback",
+            net=args.net,
+            qmode=args.qmode,
+            pipeline=args.pipeline,
+            verify_timeout=args.verify_timeout,
+            stagger_s=args.stagger_s,
+        ),
+        cluster=ClusterSpec(replicas=args.replicas, placement=args.placement),
+        scheduler=SchedulerSpec(
+            policy=args.policy,
+            max_wait=args.max_wait,
+            slots=args.slots,
+            straggler_timeout=args.verify_timeout,
+            stagger_ticks=args.stagger,
+        ),
+        devices=args.devices,
+        max_new=args.max_new,
         k_max=args.k_max,
-        policy=args.policy,
-        max_wait=args.max_wait,
-        straggler_timeout=args.verify_timeout,
-        attn_chunk=32,
+        c_th=args.c_th,
+        kctl=args.kctl,
         paged_attention=args.paged_attention,
     )
-    if args.replicas > 1:
+
+
+def serve(spec: ServeSpec, *, check: bool = True) -> dict:
+    """Build the spec's System, run the fleet, print the run, return the
+    uniform ServeResult record."""
+    system = System.build(spec)
+    if spec.cluster.replicas > 1:
         print(
-            f"cluster: {args.replicas} replicas x {slots} slots, "
-            f"placement {args.placement}, shared step bundle"
+            f"cluster: {spec.cluster.replicas} replicas x {spec.slots_per_replica} "
+            f"slots, placement {spec.cluster.placement}, shared step bundle"
         )
-    if args.paged_attention and not router.paged_attention:
-        print(f"paged attention unsupported for family {tcfg.family}: gather fallback")
-    kit = EdgeDeviceKit(draft, dp, k_max=args.k_max, c_th=args.c_th, greedy=True, attn_chunk=32)
-    return draft, dp, target, tp, router, kit, prompts
-
-
-def check_outputs(outputs, draft, dp, target, tp, prompts, args) -> bool:
-    ref, _, _ = sled_generate(
-        draft, dp, target, tp, prompts,
-        max_new=args.max_new, k_max=args.k_max, c_th=args.c_th, greedy=True,
-    )
-    eng = np.array([outputs[i] for i in range(args.devices)])
-    match = np.array_equal(eng, np.asarray(ref))
-    print(f"greedy lock-step reference match: {'OK' if match else 'MISMATCH'}")
-    return match
-
-
-# ---------------------------------------------------------------------------
-# transport modes: wire protocol over loopback / simulated links
-# ---------------------------------------------------------------------------
-
-
-async def serve_transport(args) -> dict:
-    draft, dp, target, tp, engine, kit, prompts = build_stack(args)
-    N = args.devices
-    net = NETS[args.net]
-    if args.transport == "sim":
+    if spec.transport.link == "sim" and spec.backend == "transport":
+        net = NETS[spec.transport.net]
         print(
             f"simulated links: rtt {net.rtt_mean*1e3:.1f}ms ± {net.rtt_jitter*1e3:.1f}ms, "
             f"{net.bandwidth_bps/1e6:.0f} Mbps, drop {net.drop_prob:.1%}"
         )
+    if spec.model.bits < 16:
+        print(f"serving int{spec.model.bits} weight-only quantized target")
 
-    server = TransportServer(engine)
-    clients = []
-    for i in range(N):
-        link = make_link(
-            "sim" if args.transport == "sim" else "loopback", net=net, seed=1000 + i
-        )
-        server.attach(link.server)
-        clients.append(
-            EdgeClient(
-                kit, i, np.asarray(prompts[i]), link.device,
-                max_new=args.max_new, max_len=128,
-                qmode=args.qmode, pipeline=args.pipeline,
-                verify_timeout=args.verify_timeout, admit_timeout=args.verify_timeout,
-                kctl=args.kctl,
-                seed=1000 + i,
-            )
-        )
-
-    async def run_client(i: int, c: EdgeClient):
-        await asyncio.sleep(i * args.stagger_s)  # staggered joins
-        return await c.run()
-
-    t0 = time.time()
-    outputs = await asyncio.gather(*(run_client(i, c) for i, c in enumerate(clients)))
-    wall = time.time() - t0
-    for _ in range(500):  # let in-flight Close frames retire their streams
-        if not engine.streams:
-            break
-        await asyncio.sleep(0.01)
-    stats = server.stats()
-    await server.stop()
-
-    fleet = ClientStats.merge([c.stats for c in clients])
-    drops = stats.frames_dropped + fleet.frames_dropped
+    result = system.serve()
+    st = result.engine
     print(
-        f"served {stats.streams_served} streams, "
-        f"{sum(len(o) for o in outputs)} tokens in {stats.rounds} rounds / {wall:.1f}s "
-        f"({stats.wstgr:.1f} tok/s) — mean fill {stats.mean_batch_fill:.2f}/{N}, "
-        f"{stats.partial_rounds} partial, queue depth {stats.mean_queue_depth:.2f}, "
-        f"acceptance {stats.acceptance_rate:.2f}"
+        f"[{spec.backend}] served {st.streams_served or len(result.sessions)} streams, "
+        f"{result.total_tokens} tokens in {st.rounds} rounds / {result.wall_seconds:.1f}s "
+        f"({st.wstgr:.1f} tok/s) — mean fill {st.mean_batch_fill:.2f}/{spec.devices}, "
+        f"{st.partial_rounds} partial, queue depth {st.mean_queue_depth:.2f}, "
+        f"acceptance {st.acceptance_rate:.2f}"
     )
-    print(
-        f"wire: {stats.bytes_rx} B up / {stats.bytes_tx} B down in "
-        f"{stats.frames_rx + stats.frames_tx} frames, {drops} dropped — "
-        f"pipeline {fleet.pipeline_hits} hits / {fleet.pipeline_misses} misses, "
-        f"{fleet.fallback_rounds} fallback rounds "
-        f"({stats.fallback_tokens} unverified tokens)"
-    )
-    if args.replicas > 1:
+    if result.clients is not None:
+        fleet = result.clients
+        print(
+            f"wire: {st.bytes_rx} B up / {st.bytes_tx} B down in "
+            f"{st.frames_rx + st.frames_tx} frames, "
+            f"{st.frames_dropped + fleet.frames_dropped} dropped — "
+            f"pipeline {fleet.pipeline_hits} hits / {fleet.pipeline_misses} misses, "
+            f"{fleet.fallback_rounds} fallback rounds "
+            f"({st.fallback_tokens} unverified tokens)"
+        )
+        if spec.kctl == "adaptive":
+            print(f"adaptive k: mean {fleet.k_mean:.2f}, final {fleet.k_final} "
+                  f"(k_max {spec.k_max})")
+    if spec.cluster.replicas > 1:
         print(
             f"cluster: per-replica rounds "
-            f"{[s.rounds for s in engine.replica_stats()]}, "
-            f"{engine.migrations} migrations"
-        )
-    if args.kctl == "adaptive":
-        print(
-            f"adaptive k: mean {fleet.k_mean:.2f}, final "
-            f"{[c.stats.k_final for c in clients]} (k_max {args.k_max})"
+            f"{[s.rounds for s in system.engine.replica_stats()]}, "
+            f"{system.engine.migrations} migrations"
         )
 
-    result = stats.as_dict()
-    result["clients"] = [c.stats.as_dict() for c in clients]
-    if args.check:
-        if stats.fallback_tokens:
+    if check:
+        if spec.backend == "reference":
+            pass  # the reference IS the check target
+        elif st.fallback_tokens:
             print("skipping equivalence check: fallback released unverified tokens")
-        elif args.kctl != "fixed":
+        elif spec.kctl != "fixed":
             print("skipping equivalence check: adaptive spec length changes round shapes")
         else:
-            out_map = {i: o for i, o in enumerate(outputs)}
-            assert check_outputs(out_map, draft, dp, target, tp, prompts, args), (
-                "transport serving must be output-identical to sled_generate"
+            ref = System.build(
+                spec.with_backend("reference"), models=system.models
+            ).serve()
+            match = ref.outputs == result.outputs
+            print(f"greedy lock-step reference match: {'OK' if match else 'MISMATCH'}")
+            assert match, (
+                f"{spec.backend} serving must be output-identical to the "
+                "lock-step reference"
             )
-    return result
+    return result.to_json()
 
 
-# ---------------------------------------------------------------------------
-# inproc mode: PR-1's in-process engine driver (no wire protocol)
-# ---------------------------------------------------------------------------
-
-
-def serve_inproc(args) -> dict:
-    if args.kctl != "fixed":
-        raise SystemExit(
-            "--kctl adaptive needs the transport runtime (the feedback rides "
-            "Verdict frames); use --transport loopback or sim"
-        )
-    draft, dp, target, tp, engine, kit, prompts = build_stack(args)
-    N, max_len = args.devices, 128
-
-    # staggered joins: device i shows up i * stagger ticks into the run, so
-    # early rounds verify a strict subset and late rounds drain the tail
-    join_at = {i: i * args.stagger for i in range(N)}
-    devices, outputs, waiting = {}, {}, set(range(N))
-    t0 = time.time()
-    tick, rounds = 0, 0
-    min_fill, max_fill = N, 0
-    while len(outputs) < N:
-        tick += 1
-        now = time.time() - t0
-        for i in sorted(waiting):
-            if join_at[i] > tick:
-                continue
-            if engine.admit(i, prompts[i], now) is None:
-                break  # pool full: stays waiting, admitted when a slot frees
-            devices[i] = kit.spawn(i, prompts[i], max_len=max_len, seed=1000 + i)
-            waiting.discard(i)
-        for i, dev in devices.items():
-            if not dev.awaiting:
-                engine.submit(i, dev.draft(), time.time() - t0)
-        verdicts = engine.step(time.time() - t0)
-        if verdicts is None:
-            continue
-        rounds += 1
-        min_fill = min(min_fill, len(verdicts))
-        max_fill = max(max_fill, len(verdicts))
-        for v in verdicts:
-            dev = devices[v.device_id]
-            dev.on_verdict(v)
-            if len(dev.committed) >= args.max_new:
-                outputs[v.device_id] = dev.committed[: args.max_new]
-                engine.retire(v.device_id)
-                del devices[v.device_id]
-        if rounds % 5 == 0 or len(verdicts) < N:
-            print(
-                f"round {rounds:3d}: batch {len(verdicts)}/{N} "
-                f"queue {engine.queue_depth} active {len(devices)} "
-                f"done {len(outputs)}"
-            )
-
-    now = time.time() - t0
-    stats = engine.stats(now)
-    print(
-        f"served {stats.streams_served} streams, "
-        f"{sum(len(o) for o in outputs.values())} tokens in {stats.rounds} rounds "
-        f"({stats.wstgr:.1f} tok/s on CPU) — mean batch fill "
-        f"{stats.mean_batch_fill:.2f}/{N}, {stats.partial_rounds} partial rounds, "
-        f"fill range [{min_fill}, {max_fill}]"
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro serve",
+        description="Serve a SLED deployment from a ServeSpec (or legacy flags).",
+        epilog="Legacy flags are deprecated: prefer --spec FILE; use "
+               "--dump-spec to capture any flag combination as a spec artifact.",
     )
-    if args.policy == "continuous" and N > 1:
-        # deadline/static deliberately wait for fill; only the continuous
-        # policy must dispatch whatever subset is queued
-        assert min_fill < N, "staggered arrivals should produce a partial batch"
-
-    if args.check:
-        assert check_outputs(outputs, draft, dp, target, tp, prompts, args), (
-            "continuous-batching engine must be output-identical to sled_generate"
-        )
-    return stats.as_dict()
-
-
-def serve(args) -> dict:
-    if args.transport == "inproc":
-        return serve_inproc(args)
-    return asyncio.run(serve_transport(args))
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", type=str, default="",
+                    help="run a ServeSpec JSON artifact (deployment flags ignored)")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved ServeSpec JSON and exit")
+    ap.add_argument("--backend", choices=BACKENDS, default="",
+                    help="execution backend (default: inferred from --transport)")
     ap.add_argument("--arch", type=str, default="qwen2-1.5b")
-    ap.add_argument("--transport", choices=("loopback", "sim", "inproc"), default="loopback")
+    ap.add_argument("--transport", choices=("loopback", "sim", "inproc"), default="loopback",
+                    help="[legacy] loopback/sim -> backend=transport; "
+                         "inproc -> backend=engine (or cluster with --replicas>1)")
     ap.add_argument("--net", choices=sorted(NETS), default="wlan",
-                    help="NetProfile for --transport sim links")
+                    help="NetProfile for simulated links")
     ap.add_argument("--devices", type=int, default=6)
     ap.add_argument("--replicas", type=int, default=1,
                     help="server engine replicas behind the cluster router")
-    ap.add_argument("--placement", choices=sorted(PLACEMENT_POLICIES),
-                    default="least-loaded",
+    ap.add_argument("--placement", choices=PLACEMENTS, default="least-loaded",
                     help="replica placement policy for new streams")
     ap.add_argument("--kctl", choices=("fixed", "adaptive"), default="fixed",
                     help="spec-length control: fixed k_max, or closed-loop "
@@ -303,10 +186,9 @@ def main() -> None:
     ap.add_argument("--c-th", type=float, default=0.3)
     ap.add_argument("--max-new", "--steps", dest="max_new", type=int, default=24,
                     help="tokens committed per device")
-    ap.add_argument("--policy", choices=("continuous", "deadline", "static"),
-                    default="continuous")
+    ap.add_argument("--policy", choices=POLICIES, default="continuous")
     ap.add_argument("--max-wait", type=float, default=0.05)
-    ap.add_argument("--qmode", choices=("none", "f32", "f16", "int8"), default="none",
+    ap.add_argument("--qmode", choices=QMODES, default="none",
                     help="draft-probability payload precision on the wire")
     ap.add_argument("--pipeline", action=argparse.BooleanOptionalAction, default=True,
                     help="draft ahead while a verify round is in flight")
@@ -317,7 +199,7 @@ def main() -> None:
                     help="device-side round timeout before §III-A fallback "
                          "(generous default: first rounds pay jit compiles)")
     ap.add_argument("--stagger", type=int, default=3,
-                    help="inproc: device i joins i*stagger scheduler ticks in")
+                    help="in-process: device i joins i*stagger scheduler ticks in")
     ap.add_argument("--stagger-s", type=float, default=0.2,
                     help="transport: device i joins i*stagger_s seconds in")
     ap.add_argument("--bits", type=int, default=16, choices=(4, 8, 16))
@@ -326,7 +208,30 @@ def main() -> None:
                          "agree greedily -> trivial 1.0 acceptance)")
     ap.add_argument("--check", action=argparse.BooleanOptionalAction, default=True,
                     help="verify output equals the lock-step reference")
-    serve(ap.parse_args())
+    return ap
+
+
+def main(argv: Optional[list] = None) -> None:
+    args = build_parser().parse_args(argv)
+    try:
+        if args.spec:
+            try:
+                with open(args.spec) as f:
+                    spec = ServeSpec.from_json(f.read())
+            except OSError as e:
+                raise SystemExit(f"cannot read spec {args.spec}: {e}")
+            print(f"loaded ServeSpec from {args.spec} (backend={spec.backend})")
+        else:
+            spec = spec_from_args(args)
+    except SpecError as e:
+        raise SystemExit(f"invalid ServeSpec: {e}")
+    if args.dump_spec:
+        print(spec.to_json_str())
+        return
+    if not args.spec:
+        print("note: flag-driven config is deprecated — rerun with --dump-spec "
+              "to capture this run as a ServeSpec artifact (repro serve --spec FILE)")
+    serve(spec, check=args.check)
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -50,6 +50,7 @@ class ClientStats:
     pipeline_misses: int = 0
     fallback_rounds: int = 0
     fallback_tokens: int = 0
+    drafted: int = 0  # device-side draft() tokens (excludes ahead-drafts)
     late_verdicts: int = 0
     hello_retries: int = 0
     bytes_tx: int = 0
@@ -61,8 +62,13 @@ class ClientStats:
     k_final: int = 0  # spec length after the last controller update
     k_mean: float = 0.0  # mean proposal length actually sent per round
 
-    def as_dict(self):
+    def to_json(self) -> dict:
+        """Uniform stats record (json.dumps-safe), mirroring
+        EngineStats.to_json — the one shape BENCH artifacts emit."""
         return dataclasses.asdict(self)
+
+    def as_dict(self):
+        return self.to_json()
 
     @classmethod
     def merge(cls, stats: List["ClientStats"]) -> "ClientStats":
@@ -107,6 +113,7 @@ class EdgeClient:
         kctl: str = "fixed",
         kctl_kw: Optional[dict] = None,
         seed: int = 0,
+        on_round: Optional[Callable[[np.ndarray, int, int, bool], None]] = None,
     ):
         self.kit = kit
         self.device_id = device_id
@@ -127,6 +134,10 @@ class EdgeClient:
         # closed-loop spec length: None (fixed k_max) or an AIMD controller
         # fed by the Verdict accept_rate/queue_depth feedback fields
         self.kctl = make_controller(kctl, k_max=kit.k_max, **(kctl_kw or {}))
+        # per-round observer (repro.api streaming events): called with
+        # (committed_tokens, n_drafted, n_accepted, fallback) as each round
+        # resolves — fallback rounds pass the locally-released tokens
+        self.on_round = on_round
         self.seed = seed
         self.stats = ClientStats(device_id=device_id)
         self.device: Optional[EdgeDevice] = None
@@ -239,14 +250,18 @@ class EdgeClient:
                 await asyncio.sleep(0)  # hand the loop to the server/link
             verdict, fell_back = await self._await_verdict(seq, tokens)
             if fell_back:
-                dev.fallback_release()
+                released = dev.fallback_release()
                 self.stats.fallback_rounds += 1
                 next_tokens = None
+                if self.on_round is not None:
+                    self.on_round(released, len(tokens), 0, True)
             else:
                 next_tokens = dev.on_verdict(verdict)
                 if self.kctl is not None:
                     # closed loop: acceptance + replica congestion -> next k
                     k = self.kctl.update(verdict.accept_rate, verdict.queue_depth)
+                if self.on_round is not None:
+                    self.on_round(verdict.tokens, len(tokens), verdict.n_accepted, False)
             seq += 1
             if len(dev.committed) >= self.max_new:
                 break
@@ -263,6 +278,7 @@ class EdgeClient:
         self.stats.pipeline_hits = dev.pipeline_hits
         self.stats.pipeline_misses = dev.pipeline_misses
         self.stats.fallback_tokens = dev.fallback_tokens
+        self.stats.drafted = dev.drafted
         self.stats.bytes_tx = self.ep.stats.bytes_tx
         self.stats.bytes_rx = self.ep.stats.bytes_rx
         self.stats.frames_tx = self.ep.stats.frames_tx
