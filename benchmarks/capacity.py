@@ -12,7 +12,10 @@ point a ``dataclasses.replace`` of it, every stack constructed by
 not compiles.  Capacity = peak concurrently-admitted streams under a
 deadline-gated admission loop oversubscribing one replica's pool (should
 scale ~linearly in replicas at matched deadline-miss rate); the kctl half
-races adaptive vs fixed spec length over loopback transport.  ``--json
+races adaptive vs fixed spec length over loopback transport.  ``--processes``
+adds a CROSS-PROCESS sweep: 1 vs 2 spawned ``repro worker`` replicas behind
+the Router's codec v3 control plane, same gate and deadline, where admitted
+streams should again scale ~linearly — now across OS processes.  ``--json
 PATH`` records the rows — stats via the uniform ``EngineStats.to_json`` /
 ``ServeResult.to_json`` records — as a BENCH artifact.
 """
@@ -79,26 +82,80 @@ def _base_spec(quick: bool):
     )
 
 
+def _drive_deadline_gated(system, spec, *, n_offer, max_new, deadline_s, miss_cap, window):
+    """Run the deadline-gated admission loop against one built System.
+
+    A new stream is admitted only while the trailing ``window`` of verdict
+    latencies meets the per-round deadline, so peak admitted streams is a
+    measured serving capacity — pool-bound when the replicas keep up
+    (``gated_by: pool``), compute-bound when they don't (``gated_by:
+    deadline``).  Shared by the in-process replica sweep and the
+    cross-process worker sweep (same loop, same gate — only the System's
+    replica flavor differs)."""
+    router, kit = system.engine, system.kit
+    prompts = system.prompts()
+    devices, outputs, waiting = {}, {}, list(range(n_offer))
+    submit_at, latencies = {}, []
+    peak_admitted = 0
+    deadline_gated = False
+    t0 = time.time()
+    while len(outputs) < n_offer:
+        now = time.time() - t0
+        recent = latencies[-window:]
+        meeting_deadline = (
+            sum(1 for lat in recent if lat > deadline_s)
+            <= miss_cap * len(recent)
+        )
+        deadline_gated |= not meeting_deadline
+        while waiting and router.n_free > 0 and meeting_deadline:
+            i = waiting.pop(0)
+            stream = router.admit(i, prompts[i], now)
+            assert stream is not None, "router reported a free slot"
+            devices[i] = kit.spawn(i, prompts[i], max_len=spec.max_len, seed=i)
+        peak_admitted = max(peak_admitted, len(router.streams))
+        for i, dev in devices.items():
+            if not dev.awaiting:
+                now = time.time() - t0
+                router.submit(i, dev.draft(), now)
+                submit_at[i] = now
+        verdicts = router.step(time.time() - t0)
+        now = time.time() - t0
+        for v in verdicts or []:
+            latencies.append(now - submit_at[v.device_id])
+            dev = devices[v.device_id]
+            dev.on_verdict(v)
+            if len(dev.committed) >= max_new:
+                outputs[v.device_id] = dev.committed[:max_new]
+                router.retire(v.device_id)
+                del devices[v.device_id]
+    wall = time.time() - t0
+    st = router.stats(wall)
+    misses = sum(1 for lat in latencies if lat > deadline_s)
+    return {
+        "capacity_streams": peak_admitted,
+        "gated_by": "deadline" if deadline_gated else "pool",
+        "deadline_s": deadline_s,
+        "deadline_miss_rate": round(misses / max(len(latencies), 1), 4),
+        "wstgr": round(n_offer * max_new / wall, 2),
+        "migrations": router.migrations,
+        "wall_s": round(wall, 2),
+        "engine": st.to_json(),
+    }
+
+
 def _capacity_rows(base, *, quick: bool) -> list:
     """Replica sweep under oversubscribed offered load, in-process driver.
 
     The sweep is a list of ServeSpecs (one per replica count) built on
     shared models and one shared VerifySteps bundle, so every replica count
     runs the same compiled executables (the sweep measures capacity, not
-    compiles).  Admission is DEADLINE-GATED: a new stream is admitted only
-    while the trailing window of verdict latencies meets the per-round
-    deadline, so peak admitted streams is a measured serving capacity —
-    pool-bound when the replicas keep up (``gated_by: pool``),
-    compute-bound when they don't (``gated_by: deadline``).
+    compiles).
     """
     from repro.api import ClusterSpec, SchedulerSpec, System, build_models
 
     slots, max_new = (2, 5) if quick else (3, 10)
     replica_counts = (1, 2) if quick else (1, 2, 4)
     n_offer = 2 * max(replica_counts) * slots  # oversubscribe every config
-    deadline_s = 2.0  # generous CPU-CI round deadline (matched across sweeps)
-    miss_cap = 0.1  # stop admitting while >10% of recent rounds miss
-    window = 16  # trailing latencies consulted by the admission gate
 
     base = dataclasses.replace(
         base,
@@ -126,65 +183,84 @@ def _capacity_rows(base, *, quick: bool) -> list:
     base_capacity = None
     for spec in sweep:
         system = System.build(spec, models=models, steps=steps, kit=kit)
-        router = system.engine
-        prompts = system.prompts()
-        devices, outputs, waiting = {}, {}, list(range(n_offer))
-        submit_at, latencies = {}, []
-        peak_admitted = 0
-        deadline_gated = False
-        t0 = time.time()
-        while len(outputs) < n_offer:
-            now = time.time() - t0
-            recent = latencies[-window:]
-            meeting_deadline = (
-                sum(1 for lat in recent if lat > deadline_s)
-                <= miss_cap * len(recent)
-            )
-            deadline_gated |= not meeting_deadline
-            while waiting and router.n_free > 0 and meeting_deadline:
-                i = waiting.pop(0)
-                stream = router.admit(i, prompts[i], now)
-                assert stream is not None, "router reported a free slot"
-                devices[i] = kit.spawn(i, prompts[i], max_len=spec.max_len, seed=i)
-            peak_admitted = max(peak_admitted, len(router.streams))
-            for i, dev in devices.items():
-                if not dev.awaiting:
-                    now = time.time() - t0
-                    router.submit(i, dev.draft(), now)
-                    submit_at[i] = now
-            verdicts = router.step(time.time() - t0)
-            now = time.time() - t0
-            for v in verdicts or []:
-                latencies.append(now - submit_at[v.device_id])
-                dev = devices[v.device_id]
-                dev.on_verdict(v)
-                if len(dev.committed) >= max_new:
-                    outputs[v.device_id] = dev.committed[:max_new]
-                    router.retire(v.device_id)
-                    del devices[v.device_id]
-        wall = time.time() - t0
-        st = router.stats(wall)
-        misses = sum(1 for lat in latencies if lat > deadline_s)
+        row = _drive_deadline_gated(
+            system, spec, n_offer=n_offer, max_new=max_new,
+            deadline_s=2.0, miss_cap=0.1, window=16,
+        )
         if base_capacity is None:
-            base_capacity = peak_admitted
-        rows.append({
+            base_capacity = row["capacity_streams"]
+        row = {
             "section": "capacity",
             "spec": spec.to_json(),
-            "capacity_streams": peak_admitted,
-            "capacity_ratio": round(peak_admitted / max(base_capacity, 1), 2),
-            "gated_by": "deadline" if deadline_gated else "pool",
-            "deadline_s": deadline_s,
-            "deadline_miss_rate": round(misses / max(len(latencies), 1), 4),
-            "wstgr": round(n_offer * max_new / wall, 2),
-            "migrations": router.migrations,
-            "wall_s": round(wall, 2),
-            "engine": st.to_json(),
-        })
+            "capacity_ratio": round(row["capacity_streams"] / max(base_capacity, 1), 2),
+            **row,
+        }
+        rows.append(row)
         print(
-            f"[capacity] {spec.cluster.replicas} replica(s): peak {peak_admitted} "
-            f"admitted ({rows[-1]['capacity_ratio']}x), miss rate "
-            f"{rows[-1]['deadline_miss_rate']:.1%}, "
-            f"{rows[-1]['wstgr']} tok/s"
+            f"[capacity] {spec.cluster.n_replicas} replica(s): peak "
+            f"{row['capacity_streams']} admitted ({row['capacity_ratio']}x), "
+            f"miss rate {row['deadline_miss_rate']:.1%}, {row['wstgr']} tok/s"
+        )
+    return rows
+
+
+def _processes_rows(base, *, quick: bool) -> list:
+    """Cross-PROCESS capacity: 1 vs 2 spawned ``repro worker`` replicas.
+
+    Same deadline-gated loop and matched deadline as the in-process sweep,
+    but each replica is a worker OS process behind the codec v3 control
+    plane — 2 single-engine workers should admit ~2x the streams of 1 at
+    matched miss rate (the ISSUE's >=1.8x near-linear floor), because each
+    worker verifies in its own process and the Router fans step RPCs out
+    concurrently.  Every worker rebuilds params from the spec seed, so the
+    sweep's outputs stay token-identical to the in-process cluster."""
+    from repro.api import ClusterSpec, SchedulerSpec, System
+
+    slots, max_new = (2, 5) if quick else (3, 10)
+    worker_counts = (1, 2)
+    n_offer = 2 * max(worker_counts) * slots
+
+    base = dataclasses.replace(
+        base,
+        devices=n_offer,
+        max_new=max_new,
+        c_th=0.3,
+        scheduler=SchedulerSpec(slots=slots),
+    )
+    sweep = [
+        dataclasses.replace(
+            base,
+            cluster=ClusterSpec(replicas=[{"flavor": "remote"}] * n),
+        )
+        for n in worker_counts
+    ]
+
+    rows = []
+    base_capacity = None
+    for spec in sweep:
+        system = System.build(spec)
+        try:
+            system.warmup()  # per-worker RPC: each process compiles its own
+            row = _drive_deadline_gated(
+                system, spec, n_offer=n_offer, max_new=max_new,
+                deadline_s=2.0, miss_cap=0.1, window=16,
+            )
+        finally:
+            system.close()  # drain + reap the spawned workers
+        if base_capacity is None:
+            base_capacity = row["capacity_streams"]
+        row = {
+            "section": "capacity-processes",
+            "spec": spec.to_json(),
+            "workers": spec.cluster.n_replicas,
+            "capacity_ratio": round(row["capacity_streams"] / max(base_capacity, 1), 2),
+            **row,
+        }
+        rows.append(row)
+        print(
+            f"[capacity-processes] {row['workers']} worker(s): peak "
+            f"{row['capacity_streams']} admitted ({row['capacity_ratio']}x), "
+            f"miss rate {row['deadline_miss_rate']:.1%}, {row['wstgr']} tok/s"
         )
     return rows
 
@@ -251,9 +327,11 @@ def _kctl_rows(base, *, quick: bool) -> list:
     return rows
 
 
-def run_cluster(quick: bool = False, json_path: str = "") -> list:
+def run_cluster(quick: bool = False, json_path: str = "", processes: bool = False) -> list:
     base = _base_spec(quick)
     rows = _capacity_rows(base, quick=quick)
+    if processes:
+        rows += _processes_rows(base, quick=quick)
     rows += _kctl_rows(base, quick=quick)
     emit(rows, "cluster_capacity")
     if json_path:
@@ -268,12 +346,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--cluster", action="store_true",
                     help="real replica-sharded capacity sweep + adaptive-k fleet")
+    ap.add_argument("--processes", action="store_true",
+                    help="with --cluster: add a cross-process sweep over "
+                         "spawned repro-worker replicas (1 vs 2 OS processes)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", type=str, default="",
                     help="write the rows as a BENCH JSON artifact")
     a = ap.parse_args()
     if a.cluster:
-        run_cluster(quick=a.quick, json_path=a.json)
+        run_cluster(quick=a.quick, json_path=a.json, processes=a.processes)
     else:
         rows = run(quick=a.quick)
         if a.json:

@@ -22,6 +22,7 @@ from repro.api.spec import (
     BACKENDS,
     ClusterSpec,
     ModelSpec,
+    ReplicaSpec,
     SchedulerSpec,
     ServeSpec,
     SpecError,
@@ -36,6 +37,7 @@ __all__ = [
     "Event",
     "ModelBundle",
     "ModelSpec",
+    "ReplicaSpec",
     "RoundEvent",
     "SchedulerSpec",
     "ServeSpec",

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 BACKENDS = ("reference", "engine", "transport", "cluster")
 LINKS = ("loopback", "sim")
@@ -30,7 +30,10 @@ POLICIES = ("continuous", "deadline", "static")
 PLACEMENTS = ("least-loaded", "affinity", "round-robin")
 QMODES = ("none", "f32", "f16", "int8")
 QUANT_BITS = (4, 8, 16)
-CODEC_VERSIONS = (1, 2)  # v1: no Verdict feedback fields; v2: current wire
+# v1: no Verdict feedback fields; v2: feedback wire; v3: + the
+# Router<->worker control plane (PlaceReplica / driver RPCs / Drain)
+CODEC_VERSIONS = (1, 2, 3)
+FLAVORS = ("inproc", "remote")
 
 
 class SpecError(ValueError):
@@ -89,7 +92,7 @@ class TransportSpec:
     verify_timeout: float = 30.0  # device-side round timeout (s)
     stagger_s: float = 0.0  # client i joins i * stagger_s seconds in
     draft_rate: Optional[float] = None  # emulated device tokens/s (None: unthrottled)
-    codec_version: int = 2
+    codec_version: int = 3
 
     def validate(self) -> None:
         _check(self.link in LINKS, f"transport.link {self.link!r} not in {LINKS}")
@@ -112,19 +115,127 @@ class TransportSpec:
 
 
 @dataclasses.dataclass(frozen=True)
-class ClusterSpec:
-    """Replica fleet shape (``backend="cluster"`` or ``"transport"``)."""
+class ReplicaSpec:
+    """One replica's placement: where it runs and how it is reached.
 
-    replicas: int = 1
+    ``flavor="inproc"`` constructs a ServerEngine in the driving process
+    (the pre-PR-6 behaviour).  ``flavor="remote"`` places the replica in a
+    ``repro worker`` process: with an ``address`` the System DIALS a worker
+    you already started (``repro worker --listen ADDR``); with no address
+    it SPAWNS one on a private unix socket and reaps it on close.
+    ``slots`` overrides the pool rows for this replica alone (0 = the
+    spec-level ``slots_per_replica`` split).
+    """
+
+    flavor: str = "inproc"
+    address: str = ""  # remote only: tcp:HOST:PORT or uds:/path.sock
+    slots: int = 0  # per-replica pool-row override; 0 = spec-level split
+
+    def validate(self) -> None:
+        _check(self.flavor in FLAVORS, f"replica.flavor {self.flavor!r} not in {FLAVORS}")
+        _check(self.slots >= 0, "replica.slots must be >= 0 (0 = spec split)")
+        if self.flavor == "inproc":
+            _check(
+                not self.address,
+                f"replica.address {self.address!r} is meaningless for an inproc "
+                f"replica (set flavor='remote' to dial a worker)",
+            )
+        elif self.address:
+            from repro.transport.links import parse_addr  # lazy: keep spec light
+
+            try:
+                parse_addr(self.address)
+            except ValueError as e:
+                raise SpecError(f"replica.address invalid: {e}") from e
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Replica fleet shape (``backend="cluster"`` or ``"transport"``).
+
+    ``replicas`` is either the legacy bare int — shorthand for N identical
+    in-process replicas — or a per-replica list of :class:`ReplicaSpec`
+    objects (JSON: a list of objects).  Migration table::
+
+        before (shorthand)   after (per-replica)                     meaning
+        ------------------   -------------------------------------   -------
+        "replicas": 2        "replicas": [{}, {}]                    2 inproc
+        "replicas": 2        "replicas": [{"flavor": "inproc"},      same,
+                                          {"flavor": "inproc"}]      explicit
+        (not expressible)    "replicas": [{"flavor": "remote"},      spawn 2
+                                          {"flavor": "remote"}]      workers
+        (not expressible)    "replicas": [{"flavor": "remote",       dial 2
+                               "address": "tcp:host-a:7001"},        running
+                              {"flavor": "remote",                   workers
+                               "address": "tcp:host-b:7001"}]
+
+    The int shorthand stays first-class: it validates, round-trips, and
+    expands to N inproc ReplicaSpecs via :attr:`replica_specs`.
+    """
+
+    replicas: Union[int, Tuple[ReplicaSpec, ...]] = 1
     placement: str = "least-loaded"
     migrate_on_retire: bool = True
 
+    def __post_init__(self) -> None:
+        # normalize list/tuple forms (JSON gives a list of dicts) into a
+        # tuple of ReplicaSpec so the frozen dataclass stays hashable
+        reps = self.replicas
+        if isinstance(reps, (list, tuple)):
+            object.__setattr__(
+                self, "replicas", tuple(_replica_from(r) for r in reps)
+            )
+
+    @property
+    def n_replicas(self) -> int:
+        return self.replicas if isinstance(self.replicas, int) else len(self.replicas)
+
+    @property
+    def replica_specs(self) -> Tuple[ReplicaSpec, ...]:
+        """Per-replica form; the int shorthand expands to N inproc specs."""
+        if isinstance(self.replicas, int):
+            return tuple(ReplicaSpec() for _ in range(self.replicas))
+        return self.replicas
+
+    @property
+    def has_remote(self) -> bool:
+        return any(r.flavor == "remote" for r in self.replica_specs)
+
     def validate(self) -> None:
-        _check(self.replicas >= 1, f"cluster.replicas must be >= 1, got {self.replicas}")
+        if isinstance(self.replicas, int):
+            _check(
+                self.replicas >= 1, f"cluster.replicas must be >= 1, got {self.replicas}"
+            )
+        else:
+            _check(
+                len(self.replicas) >= 1,
+                "cluster.replicas list must name at least one replica",
+            )
+            for r in self.replicas:
+                r.validate()
         _check(
             self.placement in PLACEMENTS,
             f"cluster.placement {self.placement!r} not in {PLACEMENTS}",
         )
+
+
+def _replica_from(r) -> ReplicaSpec:
+    if isinstance(r, ReplicaSpec):
+        return r
+    if not isinstance(r, dict):
+        raise SpecError(
+            f"cluster.replicas entries must be objects, got {type(r).__name__}"
+        )
+    known = {f.name for f in dataclasses.fields(ReplicaSpec)}
+    unknown = sorted(set(r) - known)
+    if unknown:
+        raise SpecError(f"unknown replica keys {unknown}")
+    try:
+        return ReplicaSpec(**r)
+    except SpecError:
+        raise
+    except (TypeError, ValueError) as e:
+        raise SpecError(f"bad replica value: {e}") from e
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,10 +320,20 @@ class ServeSpec:
         _check(self.attn_chunk >= 1, "attn_chunk must be >= 1")
         # cross-field combinations
         _check(
-            self.cluster.replicas == 1 or self.backend in ("cluster", "transport"),
-            f"replicas={self.cluster.replicas} needs backend 'cluster' or "
+            self.cluster.n_replicas == 1 or self.backend in ("cluster", "transport"),
+            f"replicas={self.cluster.n_replicas} needs backend 'cluster' or "
             f"'transport', not {self.backend!r} (the reference loop and the "
             "bare engine are single-replica by definition)",
+        )
+        _check(
+            not self.cluster.has_remote or self.backend in ("cluster", "transport"),
+            f"remote replicas need backend 'cluster' or 'transport', not "
+            f"{self.backend!r} (a worker process is a cluster member)",
+        )
+        _check(
+            not self.cluster.has_remote or self.transport.codec_version >= 3,
+            "remote replicas need codec_version >= 3 (the Router<->worker "
+            "control plane — PlaceReplica, driver RPCs, stream export — is v3)",
         )
         _check(
             self.kctl != "adaptive" or self.backend == "transport",
@@ -229,10 +350,11 @@ class ServeSpec:
 
     @property
     def slots_per_replica(self) -> int:
-        """Pool rows per replica: explicit, or the fleet split evenly."""
+        """Pool rows per replica: explicit, or the fleet split evenly.
+        A per-replica ``ReplicaSpec.slots`` override beats both."""
         if self.scheduler.slots:
             return self.scheduler.slots
-        return -(-self.devices // self.cluster.replicas)  # ceil div
+        return -(-self.devices // self.cluster.n_replicas)  # ceil div
 
     def with_backend(self, backend: str, **changes) -> "ServeSpec":
         """Same deployment on a different backend (replicas reset to 1 and
@@ -241,7 +363,9 @@ class ServeSpec:
         kw = dict(changes)
         cluster = kw.pop("cluster", self.cluster)
         kctl = kw.pop("kctl", self.kctl)
-        if backend in ("reference", "engine") and cluster.replicas != 1:
+        if backend in ("reference", "engine") and (
+            cluster.n_replicas != 1 or cluster.has_remote
+        ):
             cluster = dataclasses.replace(cluster, replicas=1)
         if backend != "transport" and kctl == "adaptive":
             kctl = "fixed"
@@ -250,8 +374,14 @@ class ServeSpec:
     # -- serialization -------------------------------------------------------
 
     def to_json(self) -> dict:
-        """Plain-dict form (nested specs as sub-dicts); json.dumps-safe."""
-        return dataclasses.asdict(self)
+        """Plain-dict form (nested specs as sub-dicts); json.dumps-safe.
+        A per-replica fleet serializes as a list of replica objects (the
+        int shorthand stays an int)."""
+        d = dataclasses.asdict(self)
+        reps = d["cluster"]["replicas"]
+        if isinstance(reps, tuple):
+            d["cluster"]["replicas"] = [dict(r) for r in reps]
+        return d
 
     def to_json_str(self, indent: int = 2) -> str:
         return json.dumps(self.to_json(), indent=indent)

@@ -279,6 +279,13 @@ class System:
                 f"this runtime speaks codec v{codec.VERSION} only; the spec "
                 f"declares codec_version={spec.transport.codec_version}"
             )
+        if models is not None and spec.cluster.has_remote:
+            log.warning(
+                "a shared ModelBundle cannot ship to remote workers: each "
+                "worker rebuilds params from the spec's model seed, so a "
+                "bundle that differs from build_models(spec.model) would "
+                "break cross-process token identity"
+            )
         models = models or build_models(spec.model)
         fam = getattr(models.target_cfg, "family", None)
         if (
@@ -306,8 +313,10 @@ class System:
                 paged_attention=spec.paged_attention,
                 steps=steps,
             )
-            if spec.backend == "engine" or (
-                spec.backend == "transport" and spec.cluster.replicas == 1
+            if spec.cluster.has_remote:
+                engine = cls._build_remote_cluster(spec, models, engine_kw)
+            elif spec.backend == "engine" or (
+                spec.backend == "transport" and spec.cluster.n_replicas == 1
             ):
                 # single replica: the bare engine (TransportServer fronts a
                 # Router or an engine interchangeably)
@@ -317,7 +326,7 @@ class System:
                 engine = Router.build(
                     models.target,
                     models.target_params,
-                    replicas=spec.cluster.replicas,
+                    replicas=spec.cluster.n_replicas,
                     n_slots=n_slots,
                     placement=spec.cluster.placement,
                     migrate_on_retire=spec.cluster.migrate_on_retire,
@@ -336,15 +345,82 @@ class System:
             system.warmup()
         return system
 
+    @classmethod
+    def _build_remote_cluster(cls, spec: ServeSpec, models, engine_kw) -> Router:
+        """Assemble a mixed local/remote Router from the spec's replica list.
+
+        Each remote replica either DIALS a worker you already started (the
+        ReplicaSpec names an address) or SPAWNS one on a private unix socket
+        (no address; the System reaps it on close()).  The worker is then
+        PLACED: it receives this spec reduced to one single-replica engine —
+        same model seed, same pool shape — and rebuilds params
+        deterministically, which is what keeps a cross-process fleet
+        token-identical to the in-process cluster.  Local entries construct
+        ServerEngines in this process, sharing one compiled bundle."""
+        from repro.cluster import RemoteReplica, spawn_worker
+
+        n_slots_default = engine_kw.pop("n_slots")
+        steps = engine_kw.pop("steps", None)
+        worker_base = spec.with_backend("engine")
+        replicas: list = []
+        try:
+            for rs in spec.cluster.replica_specs:
+                slots = rs.slots or n_slots_default
+                if rs.flavor == "inproc":
+                    local = ServerEngine(
+                        models.target, models.target_params,
+                        n_slots=slots, steps=steps, **engine_kw,
+                    )
+                    steps = local.steps  # siblings ride the first compile
+                    replicas.append(local)
+                    continue
+                worker_spec = dataclasses.replace(
+                    worker_base,
+                    scheduler=dataclasses.replace(worker_base.scheduler, slots=slots),
+                )
+                if rs.address:
+                    remote = RemoteReplica.dial(rs.address)
+                else:
+                    proc, addr = spawn_worker()
+                    remote = RemoteReplica.dial(addr)
+                    remote.proc = proc
+                remote.place(worker_spec)
+                replicas.append(remote)
+        except BaseException:
+            for r in replicas:
+                if getattr(r, "flavor", "local") == "remote":
+                    r.drain()
+            raise
+        return Router(
+            replicas,
+            placement=spec.cluster.placement,
+            migrate_on_retire=spec.cluster.migrate_on_retire,
+        )
+
     @property
     def steps(self):
         """The jitted VerifySteps bundle (shareable across homogeneous
-        Systems); None for the reference backend."""
+        Systems); None for the reference backend and for a fleet whose
+        first replica is remote (compiled executables cannot cross
+        processes)."""
         if self.engine is None:
             return None
         return self.engine.steps if isinstance(self.engine, ServerEngine) else (
             self.engine.replicas[0].steps
         )
+
+    def close(self) -> None:
+        """Release cross-process resources: drain every remote worker (and
+        reap the ones this System spawned).  In-process backends are
+        no-ops; safe to call twice."""
+        if isinstance(self.engine, Router):
+            self.engine.drain()
+
+    def __enter__(self) -> "System":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def warmup(self, buckets=None) -> Dict[int, float]:
         """Pre-compile the verify buckets (engine-backed backends only)."""

@@ -3,6 +3,7 @@
     repro serve --spec spec.json [--check]     run a ServeSpec artifact
     repro serve --devices 4 --dump-spec        resolve flags into a spec
     repro serve --transport sim --net wlan     legacy-flag serving
+    repro worker --listen tcp:0.0.0.0:7001     run one replica worker process
 
 Subcommands are lazy-imported so ``repro --help`` stays instant (no jax
 import until a command actually runs).
@@ -18,6 +19,8 @@ usage: repro <command> [args...]
 
 commands:
   serve    serve a SLED deployment from a ServeSpec (see: repro serve --help)
+  worker   run one engine replica behind a TCP/UDS control socket, to be
+           placed and driven by a cluster Router (see: repro worker --help)
 
 Run configurations are declarative ServeSpec JSON artifacts; `repro serve
 --dump-spec` converts any flag combination into one.
@@ -34,6 +37,11 @@ def main(argv: Optional[List[str]] = None) -> None:
         from repro.launch.serve import main as serve_main
 
         serve_main(rest)
+        return
+    if cmd == "worker":
+        from repro.transport.worker import main as worker_main
+
+        worker_main(rest)
         return
     print(_USAGE, end="", file=sys.stderr)
     raise SystemExit(f"repro: unknown command {cmd!r}")

@@ -1,19 +1,34 @@
 """Replica-sharded serving cluster (SLED at system scale).
 
-  router.py — Router: N ServerEngine replicas behind a pluggable placement
-              policy (least-loaded / affinity / round-robin), stream
-              migration on retire, cluster-merged EngineStats.
+  router.py — Router: N replicas behind a pluggable placement policy
+              (least-loaded / affinity / round-robin), stream migration on
+              retire, cluster-merged EngineStats, worker eviction on
+              transport failure.  Replicas are LocalReplica-wrapped
+              in-process ServerEngines or...
+  remote.py — RemoteReplica: the same driver surface proxied to a
+              ``repro worker`` process over codec v3 control frames on a
+              blocking TCP/UDS ControlChannel; spawn_worker launches one.
 
 The router exposes the same admit/submit/step/retire surface as a single
 ``ServerEngine``, so every existing driver (launch/serve.py inproc loop,
 transport/server.TransportServer, the benchmarks) serves a replica fleet by
-swapping the object it holds — admission becomes a placement decision.
+swapping the object it holds — admission becomes a placement decision, and
+with remote replicas the fleet spans OS processes.
 """
 
+from repro.cluster.remote import (
+    ControlChannel,
+    RemoteReplica,
+    ReplicaGone,
+    WorkerError,
+    spawn_worker,
+)
 from repro.cluster.router import (
     PLACEMENT_POLICIES,
     AffinityPlacement,
     LeastLoadedPlacement,
+    LocalReplica,
+    MigrationError,
     PlacementPolicy,
     RoundRobinPlacement,
     Router,
@@ -23,9 +38,16 @@ from repro.cluster.router import (
 __all__ = [
     "PLACEMENT_POLICIES",
     "AffinityPlacement",
+    "ControlChannel",
     "LeastLoadedPlacement",
+    "LocalReplica",
+    "MigrationError",
     "PlacementPolicy",
+    "RemoteReplica",
+    "ReplicaGone",
     "RoundRobinPlacement",
     "Router",
+    "WorkerError",
     "make_placement",
+    "spawn_worker",
 ]

@@ -1,0 +1,413 @@
+"""RemoteReplica: the Router's proxy for a worker process on the far side
+of a socket.
+
+The Router (cluster/router.py) drives every replica through one synchronous
+surface — admit / submit / step / retire / export / import / stats / warmup.
+A :class:`RemoteReplica` implements that surface by proxying each call over
+codec v3 control frames on a blocking :class:`ControlChannel` (plain socket
++ FrameDecoder; the Router stays synchronous, and concurrency across
+workers comes from the Router stepping its remotes on a thread pool).
+
+Client-side SHADOW state keeps the hot paths local: the replica mirrors
+each stream's server-side record (slot, prev token, committed tokens,
+lifetime counters) from admit/verdict/retire traffic, so placement
+decisions (``n_free``, ``streams``, ``has_inflight``) never pay a round
+trip — only actual engine work (admit's prefill, step's verification,
+migration's row copy) crosses the wire.
+
+Supervision is reconnect-or-evict: a transport failure on a SIDE-EFFECT-FREE
+RPC (stats) is retried once over a fresh connection; a failure on a
+side-effectful RPC (admit / submit / step / retire / migration) raises
+:class:`ReplicaGone` immediately — the worker may or may not have applied
+it, so retrying could double-apply a round — and the Router evicts the
+replica.  A worker-side handler error arrives as an ErrorReply and raises
+:class:`WorkerError` (the worker is alive; the request was just invalid).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+import uuid
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.admission import DeviceStream
+from repro.core.engine import EngineStats, Verdict
+from repro.transport import codec
+from repro.transport.links import parse_addr
+
+DEFAULT_TIMEOUT = 120.0  # control RPCs; crash shows up as EOF, not timeout
+WARMUP_TIMEOUT = 900.0  # warmup compiles every verify bucket
+
+
+class ReplicaGone(ConnectionError):
+    """The worker is unreachable (crash, kill, network partition)."""
+
+
+class WorkerError(ValueError):
+    """The worker handled the request and rejected it (engine-level error)."""
+
+
+class ControlChannel:
+    """Blocking request/reply frame channel to one worker (TCP or UDS)."""
+
+    def __init__(self, address: str, *, timeout: float = DEFAULT_TIMEOUT):
+        self.address = address
+        self.timeout = timeout
+        self._sock: Optional[socket.socket] = None
+        self._decoder = codec.FrameDecoder()
+
+    def connect(self) -> None:
+        parsed = parse_addr(self.address)
+        try:
+            if parsed[0] == "uds":
+                sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                sock.settimeout(self.timeout)
+                sock.connect(parsed[1])
+            else:
+                sock = socket.create_connection(
+                    (parsed[1], parsed[2]), timeout=self.timeout
+                )
+        except OSError as e:
+            raise ReplicaGone(f"cannot dial worker at {self.address}: {e}") from e
+        self._sock = sock
+        self._decoder = codec.FrameDecoder()
+
+    @property
+    def connected(self) -> bool:
+        return self._sock is not None
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            finally:
+                self._sock = None
+
+    def reconnect(self) -> None:
+        self.close()
+        self.connect()
+
+    def request(self, msg: codec.Message, *, timeout: Optional[float] = None):
+        """Send one frame, block for its reply.  ErrorReply -> WorkerError;
+        any transport failure -> ReplicaGone (this channel is closed)."""
+        if self._sock is None:
+            self.connect()
+        sock = self._sock
+        try:
+            if timeout is not None:
+                sock.settimeout(timeout)
+            sock.sendall(codec.encode_frame(msg))
+            while True:
+                raw = self._decoder.next_raw()
+                if raw is not None:
+                    break
+                data = sock.recv(65536)
+                if not data:
+                    raise ReplicaGone(
+                        f"worker at {self.address} closed the control connection"
+                    )
+                self._decoder.feed(data)
+        except ReplicaGone:
+            self.close()
+            raise
+        except (OSError, codec.CodecError) as e:
+            self.close()
+            raise ReplicaGone(f"worker at {self.address} failed: {e}") from e
+        finally:
+            if timeout is not None and self._sock is not None:
+                self._sock.settimeout(self.timeout)
+        reply, _ = codec.decode_frame(raw)
+        if isinstance(reply, codec.ErrorReply):
+            raise WorkerError(reply.message)
+        return reply
+
+
+def repro_python_env() -> dict:
+    """Env for a spawned worker: this interpreter's repro must be importable
+    even when the parent runs from a source tree via PYTHONPATH=src."""
+    import repro
+
+    env = dict(os.environ)
+    pkg_dir = (  # namespace packages have __file__=None; __path__ still points in
+        os.path.dirname(repro.__file__) if getattr(repro, "__file__", None)
+        else list(repro.__path__)[0]
+    )
+    src_root = os.path.dirname(os.path.abspath(pkg_dir))
+    parts = [src_root] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    env["PYTHONPATH"] = os.pathsep.join(dict.fromkeys(parts))
+    return env
+
+
+def spawn_worker(
+    address: Optional[str] = None,
+    *,
+    spec_path: str = "",
+    startup_timeout: float = 120.0,
+):
+    """Start a ``repro worker`` subprocess and wait until it accepts a dial.
+
+    Returns ``(proc, address)``.  Without an explicit address the worker
+    listens on a fresh UDS socket under a private temp dir (no port to
+    guess, no parsing of the worker's stdout)."""
+    if address is None:
+        sock_dir = tempfile.mkdtemp(prefix="repro-worker-")
+        address = f"uds:{os.path.join(sock_dir, uuid.uuid4().hex[:8] + '.sock')}"
+    cmd = [sys.executable, "-m", "repro.cli", "worker", "--listen", address]
+    if spec_path:
+        cmd += ["--spec", spec_path]
+    proc = subprocess.Popen(
+        cmd, env=repro_python_env(), stdout=subprocess.DEVNULL
+    )
+    deadline = time.time() + startup_timeout
+    probe = ControlChannel(address, timeout=5.0)
+    while True:
+        if proc.poll() is not None:
+            raise RuntimeError(
+                f"worker exited with code {proc.returncode} during startup "
+                f"(cmd: {' '.join(cmd)})"
+            )
+        try:
+            probe.connect()
+            probe.close()
+            return proc, address
+        except ReplicaGone:
+            if time.time() > deadline:
+                proc.terminate()
+                raise RuntimeError(
+                    f"worker at {address} did not come up within {startup_timeout}s"
+                ) from None
+            time.sleep(0.05)
+
+
+class RemoteReplica:
+    """One worker process behind the replica driver surface.
+
+    Mirrors the parts of :class:`~repro.core.server_engine.ServerEngine`
+    the Router and the serving loops touch; see the module docstring for
+    the shadow-state and supervision rules.
+    """
+
+    flavor = "remote"
+
+    def __init__(
+        self,
+        channel: ControlChannel,
+        *,
+        address: str = "",
+        proc: Optional[subprocess.Popen] = None,
+    ):
+        self.channel = channel
+        self.address = address or channel.address
+        self.proc = proc  # set when this replica spawned its worker
+        self.dead = False
+        self._placed = False
+        self._n_slots = 0
+        self.k_max = 0
+        self.max_len = 0
+        self.greedy = True
+        self.paged_attention = True
+        self._streams: Dict[int, DeviceStream] = {}
+        self._pending: Dict[int, int] = {}  # device -> tokens in flight
+        self._queue_depth = 0
+        self._hint: Optional[float] = None
+
+    @classmethod
+    def dial(cls, address: str, *, timeout: float = DEFAULT_TIMEOUT) -> "RemoteReplica":
+        channel = ControlChannel(address, timeout=timeout)
+        channel.connect()
+        return cls(channel, address=address)
+
+    # -- placement -----------------------------------------------------------
+
+    def place(self, spec) -> None:
+        """Ship the ServeSpec subtree; the worker builds its engine from it."""
+        ack = self.channel.request(
+            codec.PlaceReplica(spec.to_json_str()), timeout=WARMUP_TIMEOUT
+        )
+        if not isinstance(ack, codec.PlaceAck):
+            raise WorkerError(f"expected PlaceAck, got {type(ack).__name__}")
+        if not ack.ok:
+            raise WorkerError(f"worker at {self.address} refused placement: {ack.error}")
+        self._placed = True
+        self._n_slots = ack.n_slots
+        self.k_max = ack.k_max
+        self.max_len = ack.max_len
+        self.greedy = ack.greedy
+        self.paged_attention = ack.paged_attention
+
+    @property
+    def fingerprint(self) -> tuple:
+        return (self.k_max, self.max_len, self.greedy, self.paged_attention)
+
+    # -- shadowed introspection (no round trips) -----------------------------
+
+    @property
+    def streams(self) -> Dict[int, DeviceStream]:
+        return self._streams
+
+    @property
+    def n_free(self) -> int:
+        return self._n_slots - len(self._streams)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending)
+
+    @property
+    def steps(self):
+        """Compiled executables cannot cross processes; never shareable."""
+        return None
+
+    def has_inflight(self, device_id: int) -> bool:
+        return device_id in self._pending
+
+    def next_event_hint(self, now: float) -> Optional[float]:
+        return self._hint
+
+    # -- driver surface (proxied) --------------------------------------------
+
+    def admit(self, device_id: int, prompt, now: float = 0.0) -> Optional[DeviceStream]:
+        reply = self.channel.request(
+            codec.AdmitRequest(device_id, np.asarray(prompt, np.int32), now)
+        )
+        if not reply.ok:
+            return None
+        stream = DeviceStream(
+            device_id=device_id,
+            slot=reply.slot,
+            prev_token=int(reply.prev_token),
+            admitted_at=now,
+        )
+        self._streams[device_id] = stream
+        return stream
+
+    def submit(self, device_id: int, draft_tokens, now: float, draft_q=None) -> None:
+        toks = np.asarray(draft_tokens, np.int32).reshape(-1)
+        self.channel.request(
+            codec.SubmitRequest(
+                device_id, toks, now,
+                draft_q=None if draft_q is None else np.asarray(draft_q, np.float32),
+                qmode="none" if draft_q is None else "f32",
+            )
+        )
+        self._pending[device_id] = int(toks.shape[0])
+
+    def step(self, now: float) -> Optional[List[Verdict]]:
+        if not self._pending:
+            return None  # nothing queued on this worker: skip the round trip
+        reply = self.channel.request(codec.StepRequest(now))
+        self._queue_depth = reply.queue_depth
+        self._hint = reply.hint
+        verdicts: List[Verdict] = []
+        for rec in reply.verdicts:
+            stream = self._streams.get(rec.device_id)
+            drafted = self._pending.pop(rec.device_id, 0)
+            if stream is not None:
+                stream.committed.extend(int(t) for t in rec.tokens)
+                stream.prev_token = int(rec.next_prev)
+                stream.rounds += 1
+                stream.drafted += drafted
+                stream.accepted += int(rec.n_accepted)
+            verdicts.append(
+                Verdict(
+                    device_id=rec.device_id,
+                    n_accepted=int(rec.n_accepted),
+                    tokens=np.asarray(rec.tokens, np.int32),
+                    next_prev=int(rec.next_prev),
+                    accept_rate=float(rec.accept_rate),
+                    queue_depth=int(rec.queue_depth),
+                )
+            )
+        return verdicts or None
+
+    def retire(self, device_id: int) -> DeviceStream:
+        reply = self.channel.request(codec.RetireRequest(device_id))
+        self._pending.pop(device_id, None)
+        self._streams.pop(device_id, None)
+        from repro.transport.worker import state_to_stream
+
+        return state_to_stream(reply.stream)
+
+    def cancel_request(self, device_id: int) -> bool:
+        reply = self.channel.request(codec.CancelRequest(device_id))
+        if reply.ok:
+            self._pending.pop(device_id, None)
+        return reply.ok
+
+    def force_extend(self, device_id: int, tokens) -> int:
+        reply = self.channel.request(
+            codec.ForceExtendRequest(device_id, np.asarray(tokens, np.int32))
+        )
+        stream = self._streams.get(device_id)
+        if stream is not None:
+            stream.committed.extend(int(t) for t in np.asarray(tokens).reshape(-1))
+            stream.prev_token = int(reply.next_prev)
+        return int(reply.next_prev)
+
+    # -- migration (streams cross the wire bit-exactly) ----------------------
+
+    def export_stream(self, device_id: int):
+        reply = self.channel.request(codec.ExportStream(device_id))
+        self._pending.pop(device_id, None)
+        self._streams.pop(device_id, None)
+        from repro.transport.worker import state_to_stream
+
+        return state_to_stream(reply.stream), dict(reply.stream.row)
+
+    def import_stream(self, stream: DeviceStream, row_cache) -> DeviceStream:
+        from repro.transport.worker import stream_to_state
+
+        reply = self.channel.request(
+            codec.ImportStream(stream_to_state(stream, row_cache))
+        )
+        stream.slot = reply.slot
+        self._streams[stream.device_id] = stream
+        return stream
+
+    # -- stats / warmup / lifecycle ------------------------------------------
+
+    def stats(self, now: Optional[float] = None) -> EngineStats:
+        req = codec.StatsRequest(
+            now=0.0 if now is None else float(now), has_now=now is not None
+        )
+        try:
+            reply = self.channel.request(req)
+        except ReplicaGone:
+            # side-effect-free: one reconnect-and-retry before giving up
+            self.channel.reconnect()
+            reply = self.channel.request(req)
+        return EngineStats(**json.loads(reply.stats_json))
+
+    def warmup(self, buckets=None) -> Dict[int, float]:
+        reply = self.channel.request(codec.WarmupRequest(), timeout=WARMUP_TIMEOUT)
+        return {int(k): v for k, v in json.loads(reply.compile_json).items()}
+
+    def drain(self) -> None:
+        """Best-effort: ask the worker to exit; reap a spawned process."""
+        try:
+            if self.channel.connected or not self.dead:
+                self.channel.request(codec.Drain(), timeout=10.0)
+        except (ReplicaGone, WorkerError):
+            pass
+        self.close()
+        if self.proc is not None:
+            try:
+                self.proc.wait(timeout=10.0)
+            except subprocess.TimeoutExpired:
+                self.proc.terminate()
+                try:
+                    self.proc.wait(timeout=5.0)
+                except subprocess.TimeoutExpired:
+                    self.proc.kill()
+            self.proc = None
+
+    def close(self) -> None:
+        self.channel.close()

@@ -3,34 +3,49 @@
 SLED's capacity story (paper Table I) is one shared target model serving many
 heterogeneous drafters; at production scale that target tier is N engine
 replicas behind a placement layer, not one engine object.  The
-:class:`Router` owns N :class:`~repro.core.server_engine.ServerEngine`
-replicas — each a full single-replica stack (pool + admission + planner) —
-and turns admission into a placement decision:
+:class:`Router` owns N replicas and turns admission into a placement
+decision:
 
   * **placement** — a pluggable :class:`PlacementPolicy` (BatchPlanner-style
     registry: ``least-loaded`` / ``affinity`` / ``round-robin``) picks the
-    replica for each new stream among those with a free pool slot;
+    replica for each new stream among live replicas with a free pool slot;
   * **migration** — when a stream retires and frees a slot, the router may
     migrate an active stream over from the most-loaded replica
-    (``migrate_on_retire``).  Replicas share the model parameters and the
-    jitted step bundle, and a migrated KV row is copied bit-exactly
+    (``migrate_on_retire``).  A migrated KV row is copied bit-exactly
     (``export_stream``/``import_stream``), so migration never changes a
     stream's tokens — only which replica's batches it rides in;
-  * **aggregation** — cluster stats are ``EngineStats.merge`` over replicas,
-    and verdicts carry each stream's replica-local queue-depth feedback.
+  * **aggregation** — cluster stats are ``EngineStats.merge`` over live
+    replicas, and verdicts carry replica-local queue-depth feedback.
+
+Replicas come in two flavors behind one driver surface:
+
+  :class:`LocalReplica`   — wraps an in-process
+      :class:`~repro.core.server_engine.ServerEngine`; fleets share one
+      jitted VerifySteps bundle, so N replicas cost one XLA compilation.
+  RemoteReplica (cluster/remote.py) — proxies the same surface to a
+      ``repro worker`` process over codec v3 control frames; the Router
+      steps its remotes CONCURRENTLY on a thread pool (each worker verifies
+      in its own process, so cluster throughput scales with processes), and
+      a transport failure mid-RPC evicts the replica (``_evict``) rather
+      than stalling the fleet.
+
+Migration is flavor-guarded: local<->local moves copy the row in memory;
+remote<->remote moves ride ExportStream/ImportStream frames (both workers
+rebuilt params from the same spec seed, so the row stays bit-valid); a
+MIXED local<->remote move raises :class:`MigrationError`, because the two
+sides' parameters have different provenance (in-process object vs
+spec-seed rebuild) and bit-identity across the move cannot be verified.
 
 The router mirrors the full ServerEngine driver surface (admit / submit /
 step / retire / cancel_request / force_extend / stats / warmup), so the
 transport server and the in-process serving loops drive a replica fleet by
-holding a Router where they held an engine.  Replicas share one VerifySteps
-bundle (same compiled executables), so a fleet costs one engine's XLA
-compilation.  In-process today; one Router in front of per-host
-TransportServers over the TCP endpoint is the recorded follow-on.
+holding a Router where they held an engine.
 """
 
 from __future__ import annotations
 
 from collections.abc import Mapping
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Iterator, List, Optional, Sequence
 
 import jax
@@ -39,6 +54,47 @@ import numpy as np
 from repro.core.admission import DeviceStream
 from repro.core.engine import EngineStats, Verdict
 from repro.core.server_engine import ServerEngine
+
+
+class MigrationError(RuntimeError):
+    """A stream move that cannot preserve bit-identity was requested."""
+
+
+class LocalReplica:
+    """In-process replica: a ServerEngine behind the replica driver surface.
+
+    Everything not listed here (admit/submit/step/...) delegates straight to
+    the engine; the explicit members are the bits the Router needs uniform
+    across flavors (liveness, capacity, fingerprint, lifecycle).
+    """
+
+    flavor = "local"
+
+    def __init__(self, engine: ServerEngine):
+        self.engine = engine
+        self.dead = False
+
+    @property
+    def n_free(self) -> int:
+        return self.engine.pool.n_free
+
+    @property
+    def max_len(self) -> int:
+        return self.engine.pool.max_len
+
+    @property
+    def fingerprint(self) -> tuple:
+        e = self.engine
+        return (e.k_max, e.pool.max_len, e.greedy, e.paged_attention)
+
+    def drain(self) -> None:  # lifecycle parity with RemoteReplica
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def __getattr__(self, name: str):
+        return getattr(self.engine, name)
 
 
 class PlacementPolicy:
@@ -51,7 +107,9 @@ class PlacementPolicy:
 
     @staticmethod
     def _open(router: "Router") -> List[int]:
-        return [i for i, e in enumerate(router.replicas) if e.pool.n_free > 0]
+        return [
+            i for i, r in enumerate(router.replicas) if not r.dead and r.n_free > 0
+        ]
 
 
 class LeastLoadedPlacement(PlacementPolicy):
@@ -69,19 +127,20 @@ class LeastLoadedPlacement(PlacementPolicy):
 
 class AffinityPlacement(PlacementPolicy):
     """Deterministic device->replica hash (session/cache affinity); falls
-    over to least-loaded when the home replica is full."""
+    over to least-loaded when the home replica is full or gone."""
 
     name = "affinity"
 
     def choose(self, router: "Router", device_id: int) -> Optional[int]:
         home = device_id % len(router.replicas)
-        if router.replicas[home].pool.n_free > 0:
+        r = router.replicas[home]
+        if not r.dead and r.n_free > 0:
             return home
         return LeastLoadedPlacement().choose(router, device_id)
 
 
 class RoundRobinPlacement(PlacementPolicy):
-    """Cycle through replicas, skipping full pools."""
+    """Cycle through replicas, skipping full pools and dead replicas."""
 
     name = "round-robin"
 
@@ -92,7 +151,8 @@ class RoundRobinPlacement(PlacementPolicy):
         n = len(router.replicas)
         for off in range(n):
             i = (self._next + off) % n
-            if router.replicas[i].pool.n_free > 0:
+            r = router.replicas[i]
+            if not r.dead and r.n_free > 0:
                 self._next = i + 1
                 return i
         return None
@@ -125,7 +185,7 @@ class _StreamView(Mapping):
         return device_id in self._router._where
 
     def __getitem__(self, device_id) -> DeviceStream:
-        return self._router._engine(device_id).streams[device_id]
+        return self._router._replica(device_id).streams[device_id]
 
     def __iter__(self) -> Iterator[int]:
         return iter(self._router._where)
@@ -135,31 +195,37 @@ class _StreamView(Mapping):
 
 
 class Router:
-    """N engine replicas + placement: the cluster-level serving object."""
+    """N replicas (local and/or remote) + placement: the cluster object."""
 
     def __init__(
         self,
-        replicas: Sequence[ServerEngine],
+        replicas: Sequence[Any],
         *,
         placement: str | PlacementPolicy = "least-loaded",
         migrate_on_retire: bool = True,
     ):
         if not replicas:
             raise ValueError("Router needs at least one replica")
-        k_maxes = {e.k_max for e in replicas}
-        max_lens = {e.pool.max_len for e in replicas}
+        wrapped = [
+            LocalReplica(r) if isinstance(r, ServerEngine) else r for r in replicas
+        ]
+        k_maxes = {r.k_max for r in wrapped}
+        max_lens = {r.max_len for r in wrapped}
         if len(k_maxes) > 1 or len(max_lens) > 1:
             raise ValueError(
                 f"replicas must be homogeneous for migration: k_max {k_maxes}, "
                 f"max_len {max_lens}"
             )
-        self.replicas: List[ServerEngine] = list(replicas)
+        self.replicas: List[Any] = wrapped
         self.placement = (
             placement if isinstance(placement, PlacementPolicy) else make_placement(placement)
         )
         self.migrate_on_retire = migrate_on_retire
         self.migrations = 0
+        self.evictions = 0
+        self.lost_devices: List[int] = []  # streams dropped with evicted replicas
         self._where: Dict[int, int] = {}  # device_id -> replica index
+        self._pool: Optional[ThreadPoolExecutor] = None  # remote step fan-out
 
     @classmethod
     def build(
@@ -173,10 +239,12 @@ class Router:
         migrate_on_retire: bool = True,
         **engine_kw,
     ) -> "Router":
-        """N homogeneous replicas (``n_slots`` rows each) sharing one jitted
-        VerifySteps bundle — the fleet compiles once.  Pass ``steps=`` to
-        share an ALREADY-compiled bundle from another homogeneous fleet
-        (spec sweeps build every replica count on the same executables)."""
+        """N homogeneous in-process replicas (``n_slots`` rows each) sharing
+        one jitted VerifySteps bundle — the fleet compiles once.  Pass
+        ``steps=`` to share an ALREADY-compiled bundle from another
+        homogeneous fleet (spec sweeps build every replica count on the same
+        executables).  Remote fleets are assembled by repro.api's
+        System.build instead (spawn/dial + PlaceReplica, then ``Router``)."""
         if replicas < 1:
             raise ValueError(f"need at least 1 replica, got {replicas}")
         steps = engine_kw.pop("steps", None)
@@ -196,6 +264,10 @@ class Router:
         return len(self.replicas)
 
     @property
+    def alive(self) -> List[Any]:
+        return [r for r in self.replicas if not r.dead]
+
+    @property
     def k_max(self) -> int:
         return self.replicas[0].k_max
 
@@ -211,75 +283,143 @@ class Router:
 
     @property
     def queue_depth(self) -> int:
-        return sum(e.queue_depth for e in self.replicas)
+        return sum(r.queue_depth for r in self.alive)
 
     @property
     def n_free(self) -> int:
-        return sum(e.pool.n_free for e in self.replicas)
+        return sum(r.n_free for r in self.alive)
 
     def replica_of(self, device_id: int) -> int:
         return self._where[device_id]
 
     def loads(self) -> List[int]:
         """Active stream count per replica (placement test surface)."""
-        return [len(e.streams) for e in self.replicas]
+        return [len(r.streams) for r in self.replicas]
 
-    def _engine(self, device_id: int) -> ServerEngine:
+    def _replica(self, device_id: int):
         return self.replicas[self._where[device_id]]
+
+    # -- supervision ---------------------------------------------------------
+
+    def _evict(self, idx: int) -> None:
+        """A replica's worker is unreachable: mark it dead, record which
+        streams went down with it, and keep serving on the survivors.  Side-
+        effectful RPCs are never retried (the worker may have half-applied
+        them), so eviction is the only safe response to transport failure."""
+        replica = self.replicas[idx]
+        if replica.dead:
+            return
+        replica.dead = True
+        lost = [d for d, i in self._where.items() if i == idx]
+        for d in lost:
+            del self._where[d]
+        self.lost_devices.extend(lost)
+        self.evictions += 1
+        replica.close()
+        if not self.alive:
+            raise RuntimeError(
+                f"all {len(self.replicas)} replicas evicted; cluster has no capacity"
+            )
+
+    def _guard(self, idx: int):
+        """Context for one replica RPC: ReplicaGone -> evict, re-raised so
+        the caller can decide whether the operation is retryable."""
+        return _EvictOnGone(self, idx)
 
     # -- admission as placement ----------------------------------------------
 
     def admit(self, device_id: int, prompt: jax.Array, now: float = 0.0) -> Optional[DeviceStream]:
         """Place the stream on a replica chosen by the policy; None when
-        every replica's pool is full (caller queues and retries on retire)."""
+        every live replica's pool is full (caller queues and retries on
+        retire).  Admission IS retried after an eviction — the worker dying
+        before acking means the stream was never placed anywhere."""
         if device_id in self._where:
             raise ValueError(f"device {device_id} already admitted")
-        idx = self.placement.choose(self, device_id)
-        if idx is None:
-            return None
-        stream = self.replicas[idx].admit(device_id, prompt, now)
-        if stream is None:  # policy raced a concurrent admit; treat as full
-            return None
-        self._where[device_id] = idx
-        return stream
+        while True:
+            idx = self.placement.choose(self, device_id)
+            if idx is None:
+                return None
+            try:
+                stream = self.replicas[idx].admit(device_id, prompt, now)
+            except ConnectionError:
+                self._evict(idx)
+                continue  # re-place on the survivors
+            if stream is None:  # policy raced a concurrent admit; treat as full
+                return None
+            self._where[device_id] = idx
+            return stream
 
     def retire(self, device_id: int) -> DeviceStream:
         idx = self._where.pop(device_id)
-        stream = self.replicas[idx].retire(device_id)
+        with self._guard(idx):
+            stream = self.replicas[idx].retire(device_id)
         if self.migrate_on_retire:
             self._rebalance_into(idx)
         return stream
 
     def migrate(self, device_id: int, dst: int) -> None:
         """Move a quiescent stream to replica ``dst`` bit-identically: the
-        KV row is copied exactly and both replicas share params + compiled
-        steps, so the stream's future tokens are unchanged — only its
-        batch-mates are."""
+        KV row is copied exactly between same-flavor replicas with matching
+        fingerprints, so the stream's future tokens are unchanged — only its
+        batch-mates are.  Local->local moves share params by object; a
+        remote->remote move is valid because both workers rebuilt params
+        from the same spec seed.  Mixed flavors raise MigrationError."""
         src = self._where[device_id]
         if src == dst:
             return
-        stream, row = self.replicas[src].export_stream(device_id)
+        src_r, dst_r = self.replicas[src], self.replicas[dst]
+        if dst_r.dead:
+            raise MigrationError(f"replica {dst} was evicted; cannot migrate into it")
+        if src_r.flavor != dst_r.flavor:
+            raise MigrationError(
+                f"cannot migrate device {device_id} from {src_r.flavor} replica "
+                f"{src} to {dst_r.flavor} replica {dst}: parameters on the two "
+                f"sides have different provenance (in-process object vs worker "
+                f"spec-seed rebuild), so bit-identity across the move cannot be "
+                f"guaranteed"
+            )
+        if src_r.fingerprint != dst_r.fingerprint:
+            raise MigrationError(
+                f"replica fingerprints differ ({src_r.fingerprint} vs "
+                f"{dst_r.fingerprint}); migration would change the stream's tokens"
+            )
+        with self._guard(src):
+            stream, row = src_r.export_stream(device_id)
         try:
-            self.replicas[dst].import_stream(stream, row)
+            with self._guard(dst):
+                dst_r.import_stream(stream, row)
+        except ConnectionError:
+            # dst died mid-import: put the stream back where it came from
+            src_r.import_stream(stream, row)
+            self._where[device_id] = src
+            raise
         except Exception:
             # roll back: the stream must never be lost mid-migration
-            self.replicas[src].import_stream(stream, row)
+            src_r.import_stream(stream, row)
             raise
         self._where[device_id] = dst
         self.migrations += 1
 
     def _rebalance_into(self, dst: int) -> None:
         """After a retirement freed a slot on ``dst``: pull one quiescent
-        stream over from the most-loaded replica when the imbalance is ≥2
-        (moving one stream then strictly improves balance)."""
-        if self.replicas[dst].pool.n_free == 0:
+        SAME-FLAVOR stream over from the most-loaded replica when the
+        imbalance is ≥2 (moving one stream then strictly improves balance)."""
+        dst_r = self.replicas[dst]
+        if dst_r.dead or dst_r.n_free == 0:
             return
         loads = self.loads()
-        src = max(range(len(loads)), key=lambda i: (loads[i], -i))
+        candidates = [
+            i
+            for i, r in enumerate(self.replicas)
+            if i != dst and not r.dead and r.flavor == dst_r.flavor
+        ]
+        if not candidates:
+            return
+        src = max(candidates, key=lambda i: (loads[i], -i))
         if loads[src] - loads[dst] < 2:
             return
-        engine = self.replicas[src]
-        movable = [d for d in engine.streams if not engine.has_inflight(d)]
+        replica = self.replicas[src]
+        movable = [d for d in replica.streams if not replica.has_inflight(d)]
         if not movable:
             return
         self.migrate(movable[0], dst)
@@ -293,19 +433,22 @@ class Router:
         now: float,
         draft_q: Optional[np.ndarray] = None,
     ) -> None:
-        self._engine(device_id).submit(device_id, draft_tokens, now, draft_q=draft_q)
+        with self._guard(self._where[device_id]):
+            self._replica(device_id).submit(device_id, draft_tokens, now, draft_q=draft_q)
 
     def cancel_request(self, device_id: int) -> bool:
-        return self._engine(device_id).cancel_request(device_id)
+        with self._guard(self._where[device_id]):
+            return self._replica(device_id).cancel_request(device_id)
 
     def force_extend(self, device_id: int, tokens: np.ndarray) -> int:
-        return self._engine(device_id).force_extend(device_id, tokens)
+        with self._guard(self._where[device_id]):
+            return self._replica(device_id).force_extend(device_id, tokens)
 
     def has_inflight(self, device_id: int) -> bool:
-        return device_id in self._where and self._engine(device_id).has_inflight(device_id)
+        return device_id in self._where and self._replica(device_id).has_inflight(device_id)
 
     def next_event_hint(self, now: float) -> Optional[float]:
-        hints = [h for e in self.replicas if (h := e.next_event_hint(now)) is not None]
+        hints = [h for r in self.alive if (h := r.next_event_hint(now)) is not None]
         return min(hints) if hints else None
 
     # -- the serving hot loop ------------------------------------------------
@@ -313,28 +456,106 @@ class Router:
     def step(self, now: float) -> Optional[List[Verdict]]:
         """Step every replica whose policy fires; one merged verdict list.
 
-        Replicas step back to back in this process (single host); each
-        verdict's queue-depth feedback stays replica-local — that is the
-        congestion signal for the streams riding that replica.
+        Local replicas step back to back in this process (they contend for
+        the same accelerator anyway); REMOTE replicas are stepped
+        concurrently on a thread pool — each RPC blocks only on its worker's
+        verification, so N workers verify in parallel and admitted-stream
+        capacity scales with processes.  Verdicts merge in replica order
+        regardless of completion order, and each verdict's queue-depth
+        feedback stays replica-local — that is the congestion signal for the
+        streams riding that replica.  A worker that fails mid-step is
+        evicted and the surviving replicas' verdicts are still returned.
         """
+        remote_idx = [
+            i
+            for i, r in enumerate(self.replicas)
+            if not r.dead and r.flavor == "remote"
+        ]
+        futures = {}
+        if len(remote_idx) > 1:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=len(self.replicas), thread_name_prefix="router-step"
+                )
+            futures = {i: self._pool.submit(self.replicas[i].step, now) for i in remote_idx}
+        results: Dict[int, Optional[List[Verdict]]] = {}
+        for i, replica in enumerate(self.replicas):
+            if replica.dead or i in futures:
+                continue
+            try:
+                results[i] = replica.step(now)
+            except ConnectionError:
+                self._evict(i)
+        for i, fut in futures.items():
+            try:
+                results[i] = fut.result()
+            except ConnectionError:
+                self._evict(i)
         verdicts: List[Verdict] = []
-        for engine in self.replicas:
-            out = engine.step(now)
+        for i in sorted(results):
+            out = results[i]
             if out:
                 verdicts.extend(out)
         return verdicts or None
 
     def warmup(self, buckets=None) -> Dict[int, float]:
-        """Warm replica 0 only: the fleet shares one VerifySteps bundle and
-        identical shapes, so the compiled executables are already hot for
-        every other replica — re-running the per-bucket warmup there would
-        be (R-1)*buckets of dead verify executions at startup."""
-        return self.replicas[0].warmup(buckets)
+        """Warm one local replica (an in-process fleet shares a single
+        VerifySteps bundle, so its executables are hot for every sibling)
+        plus EVERY remote replica — each worker process has its own compile
+        cache, and an un-warmed worker would pay XLA compilation inside its
+        first timed step."""
+        out: Dict[int, float] = {}
+        warmed_local = False
+        for r in self.alive:
+            if r.flavor == "local":
+                if warmed_local:
+                    continue
+                warmed_local = True
+            secs = r.warmup(buckets)
+            for k, v in secs.items():
+                out[k] = max(out.get(k, 0.0), v)
+        return out
+
+    def drain(self) -> None:
+        """Ask every remote worker to exit (reaping spawned processes);
+        local replicas are no-ops.  Idempotent."""
+        for r in self.replicas:
+            if not r.dead:
+                r.drain()
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
 
     # -- stats ---------------------------------------------------------------
 
     def stats(self, now: Optional[float] = None) -> EngineStats:
-        return EngineStats.merge([e.stats(now) for e in self.replicas])
+        return EngineStats.merge(self.replica_stats(now))
 
     def replica_stats(self, now: Optional[float] = None) -> List[EngineStats]:
-        return [e.stats(now) for e in self.replicas]
+        out = []
+        for i, r in enumerate(self.replicas):
+            if r.dead:
+                continue
+            try:
+                out.append(r.stats(now))
+            except ConnectionError:
+                self._evict(i)
+        return out
+
+
+class _EvictOnGone:
+    """``with router._guard(idx):`` — evict replica ``idx`` if the body dies
+    with a transport failure (ReplicaGone is a ConnectionError), then
+    re-raise so the caller sees the loss."""
+
+    def __init__(self, router: Router, idx: int):
+        self.router = router
+        self.idx = idx
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None and issubclass(exc_type, ConnectionError):
+            self.router._evict(self.idx)
+        return False

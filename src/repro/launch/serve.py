@@ -14,7 +14,9 @@ Backends (``--backend``, or inferred from the legacy ``--transport`` flag):
 
   reference  lock-step sled_generate loop (algorithmic ground truth)
   engine     in-process ServerEngine driver (PR-1's minimal demo)
-  cluster    Router over N in-process engine replicas (``--replicas``)
+  cluster    Router over N engine replicas (``--replicas``); per-replica
+             placement (including remote ``repro worker`` processes) is
+             spec-only — see examples/specs/cluster_remote.json
   transport  wire-protocol runtime over loopback or simulated links
 
 On lossless links with fixed k every backend must be token-for-token
@@ -90,10 +92,17 @@ def serve(spec: ServeSpec, *, check: bool = True) -> dict:
     """Build the spec's System, run the fleet, print the run, return the
     uniform ServeResult record."""
     system = System.build(spec)
-    if spec.cluster.replicas > 1:
+    if spec.cluster.n_replicas > 1 or spec.cluster.has_remote:
+        flavors = [r.flavor for r in spec.cluster.replica_specs]
+        sharing = (
+            "worker processes on the v3 control plane"
+            if spec.cluster.has_remote
+            else "shared step bundle"
+        )
         print(
-            f"cluster: {spec.cluster.replicas} replicas x {spec.slots_per_replica} "
-            f"slots, placement {spec.cluster.placement}, shared step bundle"
+            f"cluster: {spec.cluster.n_replicas} replicas "
+            f"({', '.join(flavors)}) x {spec.slots_per_replica} slots, "
+            f"placement {spec.cluster.placement}, {sharing}"
         )
     if spec.transport.link == "sim" and spec.backend == "transport":
         net = NETS[spec.transport.net]
@@ -104,7 +113,11 @@ def serve(spec: ServeSpec, *, check: bool = True) -> dict:
     if spec.model.bits < 16:
         print(f"serving int{spec.model.bits} weight-only quantized target")
 
-    result = system.serve()
+    try:
+        result = system.serve()
+    except BaseException:
+        system.close()  # reap any spawned workers before surfacing the error
+        raise
     st = result.engine
     print(
         f"[{spec.backend}] served {st.streams_served or len(result.sessions)} streams, "
@@ -126,12 +139,14 @@ def serve(spec: ServeSpec, *, check: bool = True) -> dict:
         if spec.kctl == "adaptive":
             print(f"adaptive k: mean {fleet.k_mean:.2f}, final {fleet.k_final} "
                   f"(k_max {spec.k_max})")
-    if spec.cluster.replicas > 1:
+    if spec.cluster.n_replicas > 1:
         print(
             f"cluster: per-replica rounds "
             f"{[s.rounds for s in system.engine.replica_stats()]}, "
-            f"{system.engine.migrations} migrations"
+            f"{system.engine.migrations} migrations, "
+            f"{system.engine.evictions} evictions"
         )
+    system.close()  # drain remote workers; reap the ones this run spawned
 
     if check:
         if spec.backend == "reference":

@@ -8,15 +8,21 @@ simulator-only abstractions:
   codec.py   — length-prefixed binary frames (DraftPacket / Verdict /
                admission + fallback control) with optional fp16/int8
                quantization of the draft-probability payload; v2 Verdicts
-               carry acceptance + queue-depth feedback for adaptive k
+               carry acceptance + queue-depth feedback for adaptive k; v3
+               adds the Router<->worker control plane (PlaceReplica with a
+               serialized ServeSpec, per-RPC driver frames, bit-exact
+               StreamState/KV-row export+import, ReplicaStats, Drain)
   links.py   — channel abstraction: zero-latency loopback, a SimulatedLink
                imposing per-NetProfile latency/bandwidth/jitter/drop on
                every frame, and StreamEndpoint over real TCP/UDS sockets
-               (tcp_listen / tcp_connect)
+               (tcp_listen / tcp_connect / listen_addr / connect_addr)
   server.py  — asyncio TransportServer fronting a ServerEngine or a
                cluster Router of N replicas (same serving surface)
   client.py  — asyncio EdgeClient: pipelined draft-ahead device loop with
                optional closed-loop AIMD spec-length control
+  worker.py  — repro worker entry point: ONE engine replica per OS process
+               behind a TCP/UDS control socket, driven by a cluster
+               Router's RemoteReplica (cluster/remote.py)
 """
 
 from repro.transport.codec import (
@@ -37,7 +43,10 @@ from repro.transport.links import (
     LoopbackLink,
     SimulatedLink,
     StreamEndpoint,
+    connect_addr,
+    listen_addr,
     make_link,
+    parse_addr,
     tcp_connect,
     tcp_listen,
 )
@@ -58,7 +67,10 @@ __all__ = [
     "LoopbackLink",
     "SimulatedLink",
     "StreamEndpoint",
+    "connect_addr",
+    "listen_addr",
     "make_link",
+    "parse_addr",
     "tcp_connect",
     "tcp_listen",
 ]

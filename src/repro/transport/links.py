@@ -259,6 +259,60 @@ async def tcp_connect(host: str, port: int) -> StreamEndpoint:
     return StreamEndpoint(reader, writer)
 
 
+def parse_addr(addr: str):
+    """Parse a listen/dial address into ``("tcp", host, port)`` or
+    ``("uds", path)``.
+
+    Accepted forms: ``tcp:HOST:PORT`` (port 0 = pick a free one),
+    ``uds:/path/to.sock``, and bare ``HOST:PORT`` as a tcp shorthand.
+    """
+    if addr.startswith("uds:"):
+        path = addr[len("uds:"):]
+        if not path:
+            raise ValueError(f"uds address needs a socket path: {addr!r}")
+        return ("uds", path)
+    rest = addr[len("tcp:"):] if addr.startswith("tcp:") else addr
+    host, sep, port_s = rest.rpartition(":")
+    if not sep or not host:
+        raise ValueError(
+            f"bad address {addr!r} (want tcp:HOST:PORT or uds:/path.sock)"
+        )
+    try:
+        port = int(port_s)
+    except ValueError:
+        raise ValueError(f"bad port in address {addr!r}") from None
+    return ("tcp", host, port)
+
+
+async def listen_addr(
+    on_endpoint: Callable[[StreamEndpoint], Awaitable[None] | None],
+    addr: str,
+) -> Tuple[asyncio.AbstractServer, str]:
+    """Listen on a ``tcp:``/``uds:`` address; returns ``(server, resolved)``
+    where ``resolved`` has any port-0 replaced by the bound port."""
+    parsed = parse_addr(addr)
+    if parsed[0] == "uds":
+        async def handle(reader, writer):
+            result = on_endpoint(StreamEndpoint(reader, writer))
+            if asyncio.iscoroutine(result):
+                await result
+
+        server = await asyncio.start_unix_server(handle, path=parsed[1])
+        return server, f"uds:{parsed[1]}"
+    _, host, port = parsed
+    server, bound = await tcp_listen(on_endpoint, host, port)
+    return server, f"tcp:{host}:{bound}"
+
+
+async def connect_addr(addr: str) -> StreamEndpoint:
+    """Dial a ``tcp:``/``uds:`` address; the other half of listen_addr."""
+    parsed = parse_addr(addr)
+    if parsed[0] == "uds":
+        reader, writer = await asyncio.open_unix_connection(parsed[1])
+        return StreamEndpoint(reader, writer)
+    return await tcp_connect(parsed[1], parsed[2])
+
+
 def make_link(kind: str, net: Optional[NetProfile] = None, *, seed: int = 0):
     """Factory: ``loopback`` or ``sim`` (requires a NetProfile).  TCP links
     are connection-oriented — open them with tcp_listen/tcp_connect."""

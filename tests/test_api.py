@@ -123,7 +123,7 @@ def test_from_json_rejects_wrong_types():
 
 def test_build_rejects_non_runtime_codec_version():
     spec = _spec(backend="transport", transport=TransportSpec(codec_version=1))
-    with pytest.raises(ValueError, match="codec v2"):
+    with pytest.raises(ValueError, match="codec v3"):
         System.build(spec)
 
 
