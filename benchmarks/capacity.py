@@ -230,6 +230,10 @@ def _processes_rows(base, *, quick: bool) -> list:
     sweep = [
         dataclasses.replace(
             base,
+            # telemetry rides along: each worker ships its registry snapshot +
+            # flight-recorder rows back inside ReplicaStats, so the artifact
+            # carries the per-worker span breakdown (observation-only)
+            telemetry=True,
             cluster=ClusterSpec(replicas=[{"flavor": "remote"}] * n),
         )
         for n in worker_counts
@@ -245,6 +249,11 @@ def _processes_rows(base, *, quick: bool) -> list:
                 system, spec, n_offer=n_offer, max_new=max_new,
                 deadline_s=2.0, miss_cap=0.1, window=16,
             )
+            # per-worker stats must be captured BEFORE close() reaps the
+            # worker processes; stats() also pulls each worker's telemetry
+            # payload over the control plane
+            per_worker = [st.to_json() for st in system.engine.replica_stats()]
+            tele = system.engine.telemetry_payload()
         finally:
             system.close()  # drain + reap the spawned workers
         if base_capacity is None:
@@ -253,6 +262,8 @@ def _processes_rows(base, *, quick: bool) -> list:
             "section": "capacity-processes",
             "spec": spec.to_json(),
             "workers": spec.cluster.n_replicas,
+            "workers_stats": per_worker,
+            "telemetry": tele,
             "capacity_ratio": round(row["capacity_streams"] / max(base_capacity, 1), 2),
             **row,
         }
@@ -262,6 +273,9 @@ def _processes_rows(base, *, quick: bool) -> list:
             f"{row['capacity_streams']} admitted ({row['capacity_ratio']}x), "
             f"miss rate {row['deadline_miss_rate']:.1%}, {row['wstgr']} tok/s"
         )
+    from repro import telemetry
+
+    telemetry.enable(False)  # don't bleed collection into later timed sweeps
     return rows
 
 

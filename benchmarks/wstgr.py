@@ -100,8 +100,61 @@ def run_engine(quick: bool = False) -> list:
             "sim_mean_batch_fill": round(sim.mean_batch_fill, 2),
             "engine": st.to_json(),
         })
+    rows.append(_telemetry_overhead_row(sweep[0], models))
     emit(rows, "engine_wstgr")
     return rows
+
+
+def _telemetry_overhead_row(spec, models) -> dict:
+    """Identical paired runs — telemetry off vs on — sharing models, the
+    compiled step bundle, and the device kit, so the delta is the cost of the
+    instrumentation alone (host-side spans + trace records).  The measured
+    overhead and the per-span breakdown land in the BENCH artifact; the
+    acceptance bar is within 3% of the off run."""
+    import dataclasses as dc
+
+    from repro import telemetry
+    from repro.api import System
+
+    warm = System.build(spec, models=models)
+    warm.warmup()
+    warm.serve()
+    steps, kit = warm.steps, warm.kit
+
+    # alternate off/on passes and keep each side's best so scheduler jitter
+    # (runs are only a handful of rounds) doesn't swamp the span cost
+    best_off = best_on = 0.0
+    on = None
+    for _ in range(3):
+        telemetry.enable(False)
+        off_r = System.build(spec, models=models, steps=steps, kit=kit).serve()
+        on_r = System.build(
+            dc.replace(spec, telemetry=True), models=models, steps=steps, kit=kit
+        ).serve()
+        best_off = max(best_off, off_r.total_tokens / max(off_r.wall_seconds, 1e-9))
+        best_on = max(best_on, on_r.total_tokens / max(on_r.wall_seconds, 1e-9))
+        on = on_r
+    telemetry.enable(False)
+
+    wstgr_off, wstgr_on = best_off, best_on
+    overhead_pct = round(100.0 * (wstgr_off - wstgr_on) / max(wstgr_off, 1e-9), 2)
+    snap = (on.telemetry or {}).get("snapshot", {})
+    spans = {
+        name: {k: round(float(h[k]), 6) for k in ("count", "mean", "p50", "p95")}
+        for name, h in snap.get("histograms", {}).items()
+    }
+    print(
+        f"[telemetry] off {wstgr_off:.1f} tok/s vs on {wstgr_on:.1f} tok/s "
+        f"({overhead_pct:+.2f}% overhead), {len(spans)} instrumented spans"
+    )
+    return {
+        "section": "telemetry-overhead",
+        "wstgr_off": round(wstgr_off, 2),
+        "wstgr_on": round(wstgr_on, 2),
+        "overhead_pct": overhead_pct,
+        "trace_events": sum(len(s.trace) for s in on.sessions),
+        "spans": spans,
+    }
 
 
 def _solve_acceptance(tokens_per_round: float, k: int) -> float:

@@ -69,6 +69,9 @@ class SessionResult:
     fallback_tokens: int = 0
     wall_seconds: float = 0.0
     client: Optional[ClientStats] = None  # transport backend only
+    # per-round TraceEvents (repro.telemetry), populated when the spec was
+    # built with telemetry=True; empty otherwise
+    trace: List = dataclasses.field(default_factory=list)
 
     @property
     def acceptance_rate(self) -> float:
@@ -89,6 +92,8 @@ class SessionResult:
         }
         if self.client is not None:
             d["client"] = self.client.to_json()
+        if self.trace:
+            d["trace"] = [ev.to_json() for ev in self.trace]
         return d
 
 
@@ -101,6 +106,9 @@ class ServeResult:
     engine: EngineStats
     clients: Optional[ClientStats] = None  # ClientStats.merge over the fleet
     wall_seconds: float = 0.0
+    # metrics snapshot + flight-recorder rows (engine.telemetry_payload());
+    # None unless telemetry was enabled for the run
+    telemetry: Optional[dict] = None
 
     @property
     def outputs(self) -> Dict[int, List[int]]:
@@ -110,6 +118,12 @@ class ServeResult:
     @property
     def total_tokens(self) -> int:
         return sum(len(s.tokens) for s in self.sessions)
+
+    @property
+    def trace(self) -> List:
+        """Fleet-wide per-round trace: every session's TraceEvents, in
+        session order (sort by ``.t`` for a global timeline)."""
+        return [ev for s in self.sessions for ev in s.trace]
 
     def to_json(self) -> dict:
         d = {
@@ -121,4 +135,6 @@ class ServeResult:
         }
         if self.clients is not None:
             d["clients"] = self.clients.to_json()
+        if self.telemetry is not None:
+            d["telemetry"] = self.telemetry
         return d

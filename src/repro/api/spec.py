@@ -291,6 +291,11 @@ class ServeSpec:
     max_len: int = 128
     attn_chunk: int = 32
     paged_attention: bool = True
+    # observability: metrics registry + per-round traces (repro.telemetry).
+    # Off by default — spans wrap host-side boundaries only, and the
+    # server-timing Verdict fields are populated either way, so flipping
+    # this can never change the committed token streams.
+    telemetry: bool = False
 
     def __post_init__(self) -> None:
         self.validate()

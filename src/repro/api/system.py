@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.api.events import (
     DoneEvent,
     Event,
@@ -152,6 +153,7 @@ class Session:
         self._fallback_tokens = 0
         self._committed = 0
         self._t_open = time.time()
+        self._trace: List = []  # per-round TraceEvents (telemetry on)
 
     @property
     def done(self) -> bool:
@@ -217,6 +219,7 @@ class Session:
                 client.wall_seconds if client is not None else time.time() - self._t_open
             ),
             client=client,
+            trace=self._trace,
         )
         self._system._waiting.pop(self.device_id, None)
         self._system._running.pop(self.device_id, None)
@@ -271,6 +274,12 @@ class System:
         Systems (homogeneous configs only — the engine validates sharing).
         """
         spec.validate()
+        if spec.telemetry:
+            # enable-only: a telemetry spec turns collection on process-wide;
+            # it is never flipped back off here, so sweeps that interleave
+            # telemetry and plain specs keep collecting (benchmarks that need
+            # a clean off-state call telemetry.enable(False) explicitly)
+            telemetry.enable(True)
         if spec.backend == "transport" and spec.transport.codec_version != codec.VERSION:
             # the spec layer can DESCRIBE other protocol versions (artifacts
             # shipped between heterogeneous hosts), but this runtime only
@@ -538,12 +547,19 @@ class System:
                 if time.time() > deadline:
                     raise RuntimeError("in-process fleet failed to drain in 600s")
             stats = self.engine.stats(time.time() - (self._t0 or t0))
+        payload: Optional[dict] = None
+        if telemetry.enabled():
+            if self.engine is not None and hasattr(self.engine, "telemetry_payload"):
+                payload = self.engine.telemetry_payload()
+            else:  # reference backend: registry snapshot, no server flight ring
+                payload = {"snapshot": telemetry.registry().snapshot(), "flight": []}
         return ServeResult(
             backend=self.spec.backend,
             sessions=[s.result for s in sessions],
             engine=stats,
             clients=clients,
             wall_seconds=time.time() - t0,
+            telemetry=payload,
         )
 
     # -- single-session streaming --------------------------------------------
@@ -659,9 +675,17 @@ class System:
                 s._last_drafted = len(toks)
                 self.engine.submit(s.device_id, toks, time.time() - self._t0)
         finished = []
+        traced = telemetry.enabled()
         for v in self.engine.step(time.time() - self._t0) or []:
             s = self._running[v.device_id]
             s._device.on_verdict(v)
+            if traced:
+                s._trace.append(telemetry.TraceEvent(
+                    device_id=v.device_id, round=s._rounds,
+                    t=time.time() - self._t0, k=s._last_drafted,
+                    n_accepted=int(v.n_accepted), n_commit=len(v.tokens),
+                    queue_s=float(v.queue_s), verify_s=float(v.verify_s),
+                ))
             s._note_round(v.tokens, n_drafted=s._last_drafted, n_accepted=v.n_accepted)
             if len(s._device.committed) >= s.max_new:
                 finished.append(s)
@@ -776,6 +800,7 @@ class System:
         async def run_one(idx: int, s: Session, client: EdgeClient):
             await asyncio.sleep(idx * tspec.stagger_s)
             tokens = await client.run()
+            s._trace = client.trace  # client-side attribution incl. wire_s
             s._finish(tokens, client=client.stats)
 
         await asyncio.gather(*(run_one(i, s, c) for i, s, c in runs))

@@ -218,6 +218,7 @@ class RemoteReplica:
         self._pending: Dict[int, int] = {}  # device -> tokens in flight
         self._queue_depth = 0
         self._hint: Optional[float] = None
+        self.last_telemetry: Optional[dict] = None  # worker payload from stats()
 
     @classmethod
     def dial(cls, address: str, *, timeout: float = DEFAULT_TIMEOUT) -> "RemoteReplica":
@@ -324,6 +325,8 @@ class RemoteReplica:
                     next_prev=int(rec.next_prev),
                     accept_rate=float(rec.accept_rate),
                     queue_depth=int(rec.queue_depth),
+                    queue_s=float(rec.queue_s),
+                    verify_s=float(rec.verify_s),
                 )
             )
         return verdicts or None
@@ -384,6 +387,8 @@ class RemoteReplica:
             # side-effect-free: one reconnect-and-retry before giving up
             self.channel.reconnect()
             reply = self.channel.request(req)
+        if reply.telemetry_json:
+            self.last_telemetry = json.loads(reply.telemetry_json)
         return EngineStats(**json.loads(reply.stats_json))
 
     def warmup(self, buckets=None) -> Dict[int, float]:

@@ -44,6 +44,7 @@ holding a Router where they held an engine.
 
 from __future__ import annotations
 
+import logging
 from collections.abc import Mapping
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Iterator, List, Optional, Sequence
@@ -51,9 +52,12 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro import telemetry
 from repro.core.admission import DeviceStream
 from repro.core.engine import EngineStats, Verdict
 from repro.core.server_engine import ServerEngine
+
+log = logging.getLogger(__name__)
 
 
 class MigrationError(RuntimeError):
@@ -226,6 +230,15 @@ class Router:
         self.lost_devices: List[int] = []  # streams dropped with evicted replicas
         self._where: Dict[int, int] = {}  # device_id -> replica index
         self._pool: Optional[ThreadPoolExecutor] = None  # remote step fan-out
+        # router-side shadow flight recorders, one ring per replica: fed from
+        # the verdicts the router itself merges, so a post-mortem survives a
+        # worker process that died without answering another RPC
+        self.flight: Dict[int, telemetry.FlightRecorder] = {
+            i: telemetry.FlightRecorder() for i in range(len(wrapped))
+        }
+        self.flight_dumps: Dict[int, List[dict]] = {}  # idx -> dump at eviction
+        self._round_seq: Dict[int, int] = {}  # device_id -> round seq
+        self._last_k: Dict[int, int] = {}  # device_id -> last submitted len
 
     @classmethod
     def build(
@@ -315,6 +328,18 @@ class Router:
             del self._where[d]
         self.lost_devices.extend(lost)
         self.evictions += 1
+        # the worker may be gone without a goodbye: dump the router-side
+        # shadow ring so the loss report carries the replica's last N rounds
+        dump = self.flight[idx].dump()
+        self.flight_dumps[idx] = dump
+        log.warning(
+            "evicting replica %d (%s): lost devices %s; flight recorder "
+            "holds %d round(s)",
+            idx, getattr(replica, "flavor", "local"), lost, len(dump),
+        )
+        for row in dump[-8:]:
+            log.warning("  flight[replica %d]: %s", idx, row)
+        telemetry.count("router_evictions_total")
         replica.close()
         if not self.alive:
             raise RuntimeError(
@@ -340,17 +365,24 @@ class Router:
             if idx is None:
                 return None
             try:
-                stream = self.replicas[idx].admit(device_id, prompt, now)
+                with telemetry.span("router_place_seconds"):
+                    stream = self.replicas[idx].admit(device_id, prompt, now)
             except ConnectionError:
                 self._evict(idx)
                 continue  # re-place on the survivors
             if stream is None:  # policy raced a concurrent admit; treat as full
                 return None
             self._where[device_id] = idx
+            log.info(
+                "placed device %d on replica %d (%s, %d free slot(s) left)",
+                device_id, idx, self.replicas[idx].flavor, self.replicas[idx].n_free,
+            )
             return stream
 
     def retire(self, device_id: int) -> DeviceStream:
         idx = self._where.pop(device_id)
+        self._round_seq.pop(device_id, None)
+        self._last_k.pop(device_id, None)
         with self._guard(idx):
             stream = self.replicas[idx].retire(device_id)
         if self.migrate_on_retire:
@@ -383,22 +415,25 @@ class Router:
                 f"replica fingerprints differ ({src_r.fingerprint} vs "
                 f"{dst_r.fingerprint}); migration would change the stream's tokens"
             )
-        with self._guard(src):
-            stream, row = src_r.export_stream(device_id)
-        try:
-            with self._guard(dst):
-                dst_r.import_stream(stream, row)
-        except ConnectionError:
-            # dst died mid-import: put the stream back where it came from
-            src_r.import_stream(stream, row)
-            self._where[device_id] = src
-            raise
-        except Exception:
-            # roll back: the stream must never be lost mid-migration
-            src_r.import_stream(stream, row)
-            raise
+        with telemetry.span("router_migrate_seconds"):
+            with self._guard(src):
+                stream, row = src_r.export_stream(device_id)
+            try:
+                with self._guard(dst):
+                    dst_r.import_stream(stream, row)
+            except ConnectionError:
+                # dst died mid-import: put the stream back where it came from
+                src_r.import_stream(stream, row)
+                self._where[device_id] = src
+                raise
+            except Exception:
+                # roll back: the stream must never be lost mid-migration
+                src_r.import_stream(stream, row)
+                raise
         self._where[device_id] = dst
         self.migrations += 1
+        telemetry.count("router_migrations_total")
+        log.info("migrated device %d: replica %d -> %d", device_id, src, dst)
 
     def _rebalance_into(self, dst: int) -> None:
         """After a retirement freed a slot on ``dst``: pull one quiescent
@@ -433,6 +468,7 @@ class Router:
         now: float,
         draft_q: Optional[np.ndarray] = None,
     ) -> None:
+        self._last_k[device_id] = int(np.asarray(draft_tokens).shape[0])
         with self._guard(self._where[device_id]):
             self._replica(device_id).submit(device_id, draft_tokens, now, draft_q=draft_q)
 
@@ -472,30 +508,54 @@ class Router:
             if not r.dead and r.flavor == "remote"
         ]
         futures = {}
-        if len(remote_idx) > 1:
-            if self._pool is None:
-                self._pool = ThreadPoolExecutor(
-                    max_workers=len(self.replicas), thread_name_prefix="router-step"
-                )
-            futures = {i: self._pool.submit(self.replicas[i].step, now) for i in remote_idx}
-        results: Dict[int, Optional[List[Verdict]]] = {}
-        for i, replica in enumerate(self.replicas):
-            if replica.dead or i in futures:
-                continue
-            try:
-                results[i] = replica.step(now)
-            except ConnectionError:
-                self._evict(i)
-        for i, fut in futures.items():
-            try:
-                results[i] = fut.result()
-            except ConnectionError:
-                self._evict(i)
+        with telemetry.span("router_step_seconds"):
+            if len(remote_idx) > 1:
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=len(self.replicas), thread_name_prefix="router-step"
+                    )
+                futures = {
+                    i: self._pool.submit(self.replicas[i].step, now) for i in remote_idx
+                }
+            results: Dict[int, Optional[List[Verdict]]] = {}
+            for i, replica in enumerate(self.replicas):
+                if replica.dead or i in futures:
+                    continue
+                try:
+                    results[i] = replica.step(now)
+                except ConnectionError:
+                    self._evict(i)
+            for i, fut in futures.items():
+                try:
+                    results[i] = fut.result()
+                except ConnectionError:
+                    self._evict(i)
         verdicts: List[Verdict] = []
         for i in sorted(results):
             out = results[i]
-            if out:
-                verdicts.extend(out)
+            if not out:
+                continue
+            ring = self.flight[i]
+            for v in out:
+                # shadow ring: recorded unconditionally (a deque append per
+                # verdict) so eviction post-mortems exist even when metrics
+                # collection is off
+                seq = self._round_seq.get(v.device_id, 0)
+                self._round_seq[v.device_id] = seq + 1
+                ring.record(
+                    telemetry.TraceEvent(
+                        device_id=v.device_id,
+                        round=seq,
+                        t=now,
+                        k=self._last_k.get(v.device_id, 0),
+                        n_accepted=v.n_accepted,
+                        n_commit=len(v.tokens),
+                        queue_s=v.queue_s,
+                        verify_s=v.verify_s,
+                        replica=i,
+                    )
+                )
+            verdicts.extend(out)
         return verdicts or None
 
     def warmup(self, buckets=None) -> Dict[int, float]:
@@ -540,6 +600,28 @@ class Router:
                 out.append(r.stats(now))
             except ConnectionError:
                 self._evict(i)
+        return out
+
+    def telemetry_payload(self) -> dict:
+        """Cluster-level telemetry record, same keys as the single-engine
+        ``ServerEngine.telemetry_payload``: this process's metrics snapshot
+        plus the shadow flight rings (flattened, each event tagged with its
+        replica), with per-remote worker payloads and eviction dumps
+        attached when present."""
+        if not telemetry.enabled():
+            return {}
+        flight = [ev.to_json() for ring in self.flight.values() for ev in ring.events()]
+        flight.sort(key=lambda e: e["t"])
+        out = {"snapshot": telemetry.registry().snapshot(), "flight": flight}
+        workers = {
+            str(i): r.last_telemetry
+            for i, r in enumerate(self.replicas)
+            if getattr(r, "last_telemetry", None)
+        }
+        if workers:
+            out["workers"] = workers
+        if self.flight_dumps:
+            out["evicted"] = {str(i): d for i, d in self.flight_dumps.items()}
         return out
 
 

@@ -17,6 +17,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import telemetry
 from repro.core.scheduler import BatchPlanner, PlannedBatch, VerifyRequest
 
 
@@ -177,6 +178,10 @@ class AdmissionControl:
         """
         self.planner.batch_size = max(1, min(self.batch_cap, len(self.streams) or 1))
         batch = self.planner.next_batch(now, server_idle=True)
+        if batch is not None and telemetry.enabled():
+            for req in batch.requests:
+                telemetry.observe("admission_queue_wait_seconds", now - req.arrival)
+            telemetry.registry().gauge("admission_queue_depth").set(self.queue_depth)
         if self.planner.dropped:
             for req in self.planner.dropped:
                 if req.device_id in self.streams:

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import verification
 from repro.models.kvcache import PagedKVCache, gather_slots, supports_paged_attention
 from repro.models.layers import NO_MESH, MeshContext
@@ -51,6 +52,11 @@ class Verdict:
     next_prev: int  # correction/bonus token the device feeds next round
     accept_rate: float = 0.0  # this round's accepted/drafted
     queue_depth: int = 0  # replica queue depth after this dispatch
+    # server-timing breakdown (always populated — cheap host floats): how
+    # long this round waited in the admission queue and how long its verify
+    # step took, so receivers can attribute latency to queue vs verify vs wire
+    queue_s: float = 0.0
+    verify_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -315,11 +321,12 @@ class EngineCore:
     def prefill_slot(self, slot: int, prompt: jax.Array) -> int:
         """Prefill ``prompt`` into pool row ``slot``; returns the last prompt
         token (the stream's first ``prev_token``)."""
-        row = self.pool.make_row_cache()
-        prompt = jnp.asarray(prompt, jnp.int32)
-        _, row, prev = self.steps.prefill(self.params, row, prompt[None, :])
-        self.pool.write_slot(slot, row)
-        return int(prev[0])
+        with telemetry.span("engine_prefill_seconds"):
+            row = self.pool.make_row_cache()
+            prompt = jnp.asarray(prompt, jnp.int32)
+            _, row, prev = self.steps.prefill(self.params, row, prompt[None, :])
+            self.pool.write_slot(slot, row)
+            return int(prev[0])
 
     def export_row(self, slot: int) -> Dict[str, jax.Array]:
         """Dense batch-1 copy of pool row ``slot`` (stream migration: the
@@ -405,11 +412,21 @@ class EngineCore:
             self.params, self.pool.cache, jnp.asarray(slots_p), vb
         )
         self._seed += 1
-        return res, bucket, time.perf_counter() - t_wall
+        step_seconds = time.perf_counter() - t_wall
+        if telemetry.enabled():
+            telemetry.observe("engine_verify_seconds", step_seconds)
+            telemetry.observe(
+                "engine_verify_fill", slots.shape[0], buckets=telemetry.K_BUCKETS
+            )
+        return res, bucket, step_seconds
 
     def force_extend(self, slot: int, feed: np.ndarray) -> None:
         """Append ``feed`` (already shifted to satisfy the KV invariant) to
         pool row ``slot`` without verification (§III-A fallback resync)."""
+        with telemetry.span("engine_commit_seconds"):
+            self._force_extend(slot, feed)
+
+    def _force_extend(self, slot: int, feed: np.ndarray) -> None:
         padded = np.zeros((self.k_max + 1,), np.int32)
         padded[: feed.size] = feed
         self.pool.cache = self.steps.extend(

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import drafting, verification
 from repro.core.admission import AdmissionControl, DeviceStream
 from repro.core.engine import (
@@ -128,6 +129,11 @@ class ServerEngine:
         self.greedy = greedy
         self._batch_cap = cap
         self.round_log: List[RoundStats] = []
+        # telemetry: full per-round trace (grows only while telemetry is on)
+        # plus the bounded flight recorder that crash/eviction/drain dumps
+        self.trace: List[telemetry.TraceEvent] = []
+        self.flight = telemetry.FlightRecorder()
+        self._round_seq: Dict[int, int] = {}  # device_id -> next round seq
         self._t0: Optional[float] = None
         self._t_last = 0.0
         self._committed_total = 0
@@ -219,6 +225,7 @@ class ServerEngine:
         Any still-queued request from the device is discarded."""
         stream = self.admission.release(device_id, served=True)
         self.core.free_slot(stream.slot)
+        self._round_seq.pop(device_id, None)
         return stream
 
     # -- stream migration (cluster router) -----------------------------------
@@ -287,6 +294,16 @@ class ServerEngine:
         self._committed_total += toks.size
         self._fallback_tokens += toks.size
         self._fallback_rounds += 1
+        if telemetry.enabled():
+            telemetry.count("engine_fallback_rounds_total")
+            seq = self._round_seq.get(device_id, 0)
+            self._round_seq[device_id] = seq + 1
+            ev = telemetry.TraceEvent(
+                device_id=device_id, round=seq, t=self._t_last,
+                k=0, n_accepted=0, n_commit=toks.size, fallback=True,
+            )
+            self.trace.append(ev)
+            self.flight.record(ev)
         return stream.prev_token
 
     def has_inflight(self, device_id: int) -> bool:
@@ -328,6 +345,7 @@ class ServerEngine:
         depth_after = self.queue_depth
         verdicts = []
         committed_round = 0
+        traced = telemetry.enabled()
         for i, req in enumerate(batch.requests):
             stream = self.streams[req.device_id]
             self.admission.resolve(req.device_id)
@@ -341,7 +359,8 @@ class ServerEngine:
             stream.prev_token = int(extra[i])
             stream.rounds += 1
             committed_round += n
-            self._latencies.append(now - req.arrival)
+            queue_s = now - req.arrival
+            self._latencies.append(queue_s)
             verdicts.append(
                 Verdict(
                     device_id=req.device_id,
@@ -355,8 +374,25 @@ class ServerEngine:
                     next_prev=int(extra[i]),
                     accept_rate=int(n_accepted[i]) / max(int(lens[i]), 1),
                     queue_depth=depth_after,
+                    # server-timing breakdown: populated unconditionally (two
+                    # host floats per request) so the client-side attribution
+                    # works whether or not this process collects telemetry
+                    queue_s=queue_s,
+                    verify_s=step_seconds,
                 )
             )
+            if traced:
+                seq = self._round_seq.get(req.device_id, 0)
+                self._round_seq[req.device_id] = seq + 1
+                ev = telemetry.TraceEvent(
+                    device_id=req.device_id, round=seq, t=now,
+                    k=int(lens[i]), n_accepted=int(n_accepted[i]), n_commit=n,
+                    queue_s=queue_s, verify_s=step_seconds,
+                )
+                self.trace.append(ev)
+                self.flight.record(ev)
+                telemetry.observe("engine_round_latency_seconds", queue_s + step_seconds)
+                telemetry.observe("engine_k", int(lens[i]), buckets=telemetry.K_BUCKETS)
         self._busy_seconds += step_seconds
         self._committed_total += committed_round
         self._t_last = max(self._t_last, now)
@@ -398,6 +434,18 @@ class ServerEngine:
             ),
             fallback_rounds=self._fallback_rounds,
         )
+
+    def telemetry_payload(self) -> dict:
+        """This replica's telemetry as one JSON-shaped record: the process
+        metrics snapshot plus the flight recorder's last-N rounds.  Empty
+        while telemetry is off — this is what a worker ships back inside
+        codec v3 ``ReplicaStats.telemetry_json``."""
+        if not telemetry.enabled():
+            return {}
+        return {
+            "snapshot": telemetry.registry().snapshot(),
+            "flight": self.flight.dump(),
+        }
 
 
 # ---------------------------------------------------------------------------

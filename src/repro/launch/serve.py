@@ -8,7 +8,8 @@ table), and two new flags make runs reproducible from a single artifact:
 
     --dump-spec      print the resolved ServeSpec as JSON and exit
     --spec PATH      run a ServeSpec JSON from disk (flags that shape the
-                     deployment are ignored; --check/--dump-spec still apply)
+                     deployment are ignored; --check/--dump-spec/--telemetry
+                     still apply)
 
 Backends (``--backend``, or inferred from the legacy ``--transport`` flag):
 
@@ -31,6 +32,7 @@ running the reference backend on the same built models.
 """
 
 import argparse
+import dataclasses
 from typing import Optional
 
 from repro.api import ServeSpec, SpecError, System
@@ -85,6 +87,7 @@ def spec_from_args(args) -> ServeSpec:
         c_th=args.c_th,
         kctl=args.kctl,
         paged_attention=args.paged_attention,
+        telemetry=args.telemetry,
     )
 
 
@@ -126,6 +129,14 @@ def serve(spec: ServeSpec, *, check: bool = True) -> dict:
         f"{st.partial_rounds} partial, queue depth {st.mean_queue_depth:.2f}, "
         f"acceptance {st.acceptance_rate:.2f}"
     )
+    if result.telemetry:
+        snap = result.telemetry.get("snapshot", {})
+        print(
+            f"telemetry: {len(snap.get('counters', {}))} counters, "
+            f"{len(snap.get('gauges', {}))} gauges, "
+            f"{len(snap.get('histograms', {}))} histograms, "
+            f"{len(result.telemetry.get('flight', []))} flight-recorder rows"
+        )
     if result.clients is not None:
         fleet = result.clients
         print(
@@ -223,6 +234,9 @@ def build_parser() -> argparse.ArgumentParser:
                          "agree greedily -> trivial 1.0 acceptance)")
     ap.add_argument("--check", action=argparse.BooleanOptionalAction, default=True,
                     help="verify output equals the lock-step reference")
+    ap.add_argument("--telemetry", action=argparse.BooleanOptionalAction, default=False,
+                    help="collect the metrics registry + per-round traces "
+                         "(repro.telemetry); observation-only, off by default")
     return ap
 
 
@@ -236,6 +250,10 @@ def main(argv: Optional[list] = None) -> None:
             except OSError as e:
                 raise SystemExit(f"cannot read spec {args.spec}: {e}")
             print(f"loaded ServeSpec from {args.spec} (backend={spec.backend})")
+            if args.telemetry:
+                # observation-only, so (like --check) it composes with --spec
+                # instead of being ignored with the deployment-shaping flags
+                spec = dataclasses.replace(spec, telemetry=True)
         else:
             spec = spec_from_args(args)
     except SpecError as e:

@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro import telemetry
+
 
 @dataclasses.dataclass
 class SpecLenController:
@@ -75,12 +77,15 @@ class SpecLenController:
             new_k = max(self.k_min, int(self.k * self.decrease))
             if new_k < self.k:
                 self.decreases += 1
+                telemetry.count("kctl_decrease_total")
             self.k = new_k
         elif self._acc >= self.accept_hi:
             new_k = min(self.k_max, self.k + self.increase)
             if new_k > self.k:
                 self.increases += 1
+                telemetry.count("kctl_increase_total")
             self.k = new_k
+        telemetry.observe("kctl_k", self.k, buckets=telemetry.K_BUCKETS)
         return self.k
 
 

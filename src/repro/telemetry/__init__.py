@@ -1,0 +1,56 @@
+"""repro.telemetry — fleet-wide observability for the SLED serving stack.
+
+Three pieces, all dependency-free:
+
+* a process-local :class:`~repro.telemetry.metrics.MetricsRegistry`
+  (counters / gauges / fixed-bucket histograms) with Prometheus-style text
+  exposition and a JSON snapshot, fed by cheap host-side monotonic spans;
+* per-round :class:`~repro.telemetry.trace.TraceEvent` records propagated
+  across process boundaries (Verdict frames carry the server-timing
+  breakdown; codec v3 ``ReplicaStats`` carries a telemetry payload), plus a
+  bounded :class:`~repro.telemetry.trace.FlightRecorder` ring dumped on
+  replica crash/eviction/drain;
+* surfacing: ``repro top`` (live fleet table over the control plane),
+  ``repro trace`` (per-round JSONL), and the span breakdowns in BENCH
+  artifacts.
+
+Telemetry is OFF by default — :func:`enable` is flipped by ``System.build``
+when the ServeSpec says so, and instrumented call sites cost one flag check
+per round while disabled.  Spans wrap host-side boundaries only; nothing
+here runs inside jitted code.
+"""
+
+from repro.telemetry.logs import setup_logging
+from repro.telemetry.metrics import (
+    K_BUCKETS,
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    count,
+    enable,
+    enabled,
+    observe,
+    registry,
+    span,
+)
+from repro.telemetry.trace import FlightRecorder, TraceEvent
+
+__all__ = [
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "K_BUCKETS",
+    "LATENCY_BUCKETS_S",
+    "MetricsRegistry",
+    "TraceEvent",
+    "count",
+    "enable",
+    "enabled",
+    "observe",
+    "registry",
+    "setup_logging",
+    "span",
+]

@@ -1,0 +1,80 @@
+"""Per-round trace records and the bounded flight recorder.
+
+A :class:`TraceEvent` is the one round-level record every layer speaks: the
+server engine stamps stream id / round seq / queue+verify timings, the
+Router adds the serving replica, and an edge client adds its own draft and
+wire attribution (rtt minus the server-reported queue+verify is time on the
+wire).  Events serialize to plain dicts, so they ride JSON across process
+boundaries (codec v3 ``ReplicaStats`` telemetry payloads) and dump as JSONL
+(``repro trace``).
+
+The :class:`FlightRecorder` is a bounded ring of the most recent rounds; a
+replica keeps one so that crash/eviction/drain reports ("lost_devices")
+carry the last N rounds of context rather than nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Iterable, List
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One resolved round of one stream, with its span breakdown (seconds).
+
+    Fields a given layer cannot know are left at their defaults: the server
+    fills ``queue_s``/``verify_s``, only the Router knows ``replica``, and
+    only a transport client can measure ``draft_s``/``wire_s``.
+    """
+
+    device_id: int
+    round: int  # 0-based round seq within the stream
+    t: float  # engine/client clock at verdict time (run-relative seconds)
+    k: int  # tokens drafted this round
+    n_accepted: int
+    n_commit: int  # tokens committed (accepted + bonus/correction)
+    queue_s: float = 0.0  # admission-queue wait (server-side)
+    verify_s: float = 0.0  # verify step wall time (server-side)
+    wire_s: float = 0.0  # round-trip minus server time (client-side)
+    draft_s: float = 0.0  # device draft time (client-side)
+    replica: int = -1  # serving replica index (-1: unknown / single engine)
+    fallback: bool = False  # §III-A locally-released round
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TraceEvent":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+class FlightRecorder:
+    """Bounded ring buffer of the most recent :class:`TraceEvent`s."""
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"flight recorder needs capacity >= 1, got {capacity}")
+        self.capacity = capacity
+        self._ring: Deque[TraceEvent] = deque(maxlen=capacity)
+
+    def record(self, ev: TraceEvent) -> None:
+        self._ring.append(ev)
+
+    def extend(self, evs: Iterable[TraceEvent]) -> None:
+        self._ring.extend(evs)
+
+    def events(self) -> List[TraceEvent]:
+        return list(self._ring)
+
+    def dump(self) -> List[dict]:
+        """The ring as JSON-shaped rows, oldest first."""
+        return [ev.to_json() for ev in self._ring]
+
+    def clear(self) -> None:
+        self._ring.clear()
+
+    def __len__(self) -> int:
+        return len(self._ring)

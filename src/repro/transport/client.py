@@ -35,6 +35,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro import telemetry
 from repro.core.server_engine import EdgeDevice, EdgeDeviceKit
 from repro.serving.speclen import make_controller
 from repro.transport import codec
@@ -141,6 +142,9 @@ class EdgeClient:
         self.seed = seed
         self.stats = ClientStats(device_id=device_id)
         self.device: Optional[EdgeDevice] = None
+        # per-round trace (telemetry on): each verdict's server-timing fields
+        # let the client attribute round latency to queue vs verify vs wire
+        self.trace: List[telemetry.TraceEvent] = []
 
     # -- wire helpers --------------------------------------------------------
 
@@ -231,7 +235,9 @@ class EdgeClient:
         seq = 0
         k = self.kctl.k if self.kctl else None  # None: fixed k_max drafting
         k_log = []
+        t_d = loop.time()
         tokens = dev.draft(k=k)
+        draft_s = loop.time() - t_d
         await throttle(len(tokens))
         while True:
             q = dev.pending_q if self.qmode != "none" else None
@@ -249,10 +255,19 @@ class EdgeClient:
                 dev.draft_ahead(k=k)
                 await asyncio.sleep(0)  # hand the loop to the server/link
             verdict, fell_back = await self._await_verdict(seq, tokens)
+            rtt = loop.time() - t_sent
+            traced = telemetry.enabled()
             if fell_back:
                 released = dev.fallback_release()
                 self.stats.fallback_rounds += 1
                 next_tokens = None
+                if traced:
+                    telemetry.count("client_fallback_rounds_total")
+                    self.trace.append(telemetry.TraceEvent(
+                        device_id=self.device_id, round=seq, t=loop.time(),
+                        k=len(tokens), n_accepted=0, n_commit=len(released),
+                        draft_s=draft_s, fallback=True,
+                    ))
                 if self.on_round is not None:
                     self.on_round(released, len(tokens), 0, True)
             else:
@@ -260,6 +275,21 @@ class EdgeClient:
                 if self.kctl is not None:
                     # closed loop: acceptance + replica congestion -> next k
                     k = self.kctl.update(verdict.accept_rate, verdict.queue_depth)
+                if traced:
+                    # server-timing attribution: what the round trip spent in
+                    # the replica's queue + verify; the rest was the wire
+                    wire_s = max(rtt - verdict.queue_s - verdict.verify_s, 0.0)
+                    telemetry.observe("client_round_seconds", rtt)
+                    telemetry.observe("client_wire_seconds", wire_s)
+                    telemetry.observe("client_draft_seconds", draft_s)
+                    self.trace.append(telemetry.TraceEvent(
+                        device_id=self.device_id, round=seq, t=loop.time(),
+                        k=len(tokens), n_accepted=int(verdict.n_accepted),
+                        n_commit=len(verdict.tokens),
+                        queue_s=float(verdict.queue_s),
+                        verify_s=float(verdict.verify_s),
+                        wire_s=wire_s, draft_s=draft_s,
+                    ))
                 if self.on_round is not None:
                     self.on_round(verdict.tokens, len(tokens), verdict.n_accepted, False)
             seq += 1
@@ -267,10 +297,13 @@ class EdgeClient:
                 break
             if next_tokens is not None:
                 tokens = next_tokens
+                draft_s = 0.0  # pre-drafted under the round trip: hidden
                 # pre-drafted during the round trip; pay only the remainder
                 await throttle(len(tokens), since=t_sent)
             else:
+                t_d = loop.time()
                 tokens = dev.draft(k=k)
+                draft_s = loop.time() - t_d
                 await throttle(len(tokens))
         await self._send(codec.Close(self.device_id))
         self.ep.close()

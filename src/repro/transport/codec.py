@@ -131,6 +131,11 @@ class Verdict:
     and ``queue_depth`` (the serving replica's planner queue after dispatch)
     are the v2 closed-loop feedback fields: devices feed them to an AIMD
     spec-length controller (serving/speclen.py) to tune ``k`` online.
+
+    ``queue_s``/``verify_s`` are the server-timing breakdown (how long the
+    round sat in the admission queue and how long its verify step took), so
+    an edge client can attribute round latency to queue vs verify vs wire:
+    wire time = measured RTT minus the two server spans.
     """
 
     device_id: int
@@ -141,6 +146,8 @@ class Verdict:
     flags: int = 0  # reserved for future protocol bits (always 0 in v2)
     accept_rate: float = 0.0  # this round's accepted/drafted, in [0, 1]
     queue_depth: int = 0  # replica queue depth after this round's dispatch
+    queue_s: float = 0.0  # admission-queue wait for this round (server clock)
+    verify_s: float = 0.0  # verify-step wall time for this round's batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,6 +252,8 @@ class VerdictRec:
     next_prev: int
     accept_rate: float = 0.0
     queue_depth: int = 0
+    queue_s: float = 0.0  # server-timing breakdown (see Verdict)
+    verify_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -366,9 +375,12 @@ class StatsRequest:
 
 @dataclasses.dataclass(frozen=True)
 class ReplicaStats:
-    """Worker -> router: the uniform EngineStats record as JSON."""
+    """Worker -> router: the uniform EngineStats record as JSON, plus an
+    optional telemetry payload (metrics snapshot + flight-recorder dump —
+    see repro.telemetry) when the placed spec enabled telemetry."""
 
     stats_json: str
+    telemetry_json: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -671,7 +683,7 @@ def encode_frame(msg: Message) -> bytes:
         mtype = T_VERDICT
         out.append(
             struct.pack(
-                ">IIHiBfH",
+                ">IIHiBfHff",
                 msg.device_id,
                 msg.seq,
                 msg.n_accepted,
@@ -679,6 +691,8 @@ def encode_frame(msg: Message) -> bytes:
                 msg.flags,
                 float(msg.accept_rate),
                 min(int(msg.queue_depth), 0xFFFF),
+                float(msg.queue_s),
+                float(msg.verify_s),
             )
         )
         _put_tokens(out, msg.tokens)
@@ -746,12 +760,14 @@ def encode_frame(msg: Message) -> bytes:
         for v in msg.verdicts:
             out.append(
                 struct.pack(
-                    ">IHifI",
+                    ">IHifIff",
                     v.device_id,
                     v.n_accepted,
                     v.next_prev,
                     float(v.accept_rate),
                     v.queue_depth,
+                    float(v.queue_s),
+                    float(v.verify_s),
                 )
             )
             _put_tokens(out, v.tokens)
@@ -792,6 +808,7 @@ def encode_frame(msg: Message) -> bytes:
     elif isinstance(msg, ReplicaStats):
         mtype = T_REPLICA_STATS
         _put_str(out, msg.stats_json)
+        _put_str(out, msg.telemetry_json)
     elif isinstance(msg, WarmupRequest):
         mtype = T_WARMUP
     elif isinstance(msg, WarmupReply):
@@ -846,6 +863,7 @@ def decode_frame(buf: bytes) -> tuple:
     elif mtype == T_VERDICT:
         dev, seq, n_acc, nxt, flags = r.u32(), r.u32(), r.u16(), r.i32(), r.u8()
         accept_rate, queue_depth = r.f32(), r.u16()
+        queue_s, verify_s = r.f32(), r.f32()
         msg = Verdict(
             device_id=dev,
             seq=seq,
@@ -855,6 +873,8 @@ def decode_frame(buf: bytes) -> tuple:
             flags=flags,
             accept_rate=accept_rate,
             queue_depth=queue_depth,
+            queue_s=queue_s,
+            verify_s=verify_s,
         )
     elif mtype == T_FALLBACK:
         msg = Fallback(device_id=r.u32(), seq=r.u32(), tokens=r.tokens())
@@ -894,10 +914,12 @@ def decode_frame(buf: bytes) -> tuple:
         verdicts = []
         for _ in range(r.u16()):
             dev, n_acc, nxt, rate, vdepth = r.u32(), r.u16(), r.i32(), r.f32(), r.u32()
+            vqueue_s, vverify_s = r.f32(), r.f32()
             verdicts.append(
                 VerdictRec(
                     device_id=dev, n_accepted=n_acc, tokens=r.tokens(),
                     next_prev=nxt, accept_rate=rate, queue_depth=vdepth,
+                    queue_s=vqueue_s, verify_s=vverify_s,
                 )
             )
         msg = StepReply(
@@ -927,7 +949,7 @@ def decode_frame(buf: bytes) -> tuple:
     elif mtype == T_STATS:
         msg = StatsRequest(now=r.f64(), has_now=bool(r.u8()))
     elif mtype == T_REPLICA_STATS:
-        msg = ReplicaStats(stats_json=r.string())
+        msg = ReplicaStats(stats_json=r.string(), telemetry_json=r.string())
     elif mtype == T_WARMUP:
         msg = WarmupRequest()
     elif mtype == T_WARMUP_REPLY:

@@ -206,6 +206,8 @@ class TransportServer:
                             next_prev=v.next_prev,
                             accept_rate=v.accept_rate,
                             queue_depth=v.queue_depth,
+                            queue_s=v.queue_s,
+                            verify_s=v.verify_s,
                         )
                     )
                     self._record(v.device_id, frame, seq)

@@ -39,13 +39,17 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import logging
 from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.transport import codec
 from repro.transport.links import Endpoint, listen_addr
+
+log = logging.getLogger(__name__)
 
 
 def stream_to_state(stream, row: Optional[dict] = None) -> codec.StreamState:
@@ -143,6 +147,8 @@ class WorkerCore:
                     next_prev=int(v.next_prev),
                     accept_rate=float(v.accept_rate),
                     queue_depth=int(v.queue_depth),
+                    queue_s=float(v.queue_s),
+                    verify_s=float(v.verify_s),
                 )
                 for v in verdicts
             )
@@ -169,7 +175,11 @@ class WorkerCore:
             return codec.ImportAck(msg.stream.device_id, slot=stream.slot)
         if isinstance(msg, codec.StatsRequest):
             st = engine.stats(msg.now if msg.has_now else None)
-            return codec.ReplicaStats(stats_json=json.dumps(st.to_json()))
+            payload = engine.telemetry_payload() if hasattr(engine, "telemetry_payload") else {}
+            return codec.ReplicaStats(
+                stats_json=json.dumps(st.to_json()),
+                telemetry_json=json.dumps(payload) if payload else "",
+            )
         if isinstance(msg, codec.WarmupRequest):
             secs = engine.warmup()
             return codec.WarmupReply(
@@ -213,6 +223,7 @@ class ReplicaWorker:
         self._drained = asyncio.Event()
         server, self.resolved = await listen_addr(self._serve_conn, self.listen)
         print(f"repro-worker listening on {self.resolved}", flush=True)
+        log.info("worker listening on %s", self.resolved)
         try:
             await self._drained.wait()
         finally:
@@ -275,7 +286,15 @@ def main(argv: Optional[List[str]] = None) -> None:
         help="optional ServeSpec JSON artifact: build the engine up front "
              "instead of waiting for a PlaceReplica frame",
     )
+    ap.add_argument(
+        "--log-level", type=str, default=None,
+        help="repro.* logger level (debug/info/warning/error); "
+             "falls back to REPRO_LOG_LEVEL, default warning",
+    )
     args = ap.parse_args(argv)
+    if args.log_level or not logging.getLogger("repro").handlers:
+        # don't clobber a level the repro CLI's global --log-level already set
+        telemetry.setup_logging(args.log_level)
     engine = None
     if args.spec:
         from repro.api.spec import ServeSpec

@@ -129,7 +129,8 @@ def _control_messages():
         codec.StepReply(
             verdicts=(
                 codec.VerdictRec(device_id=7, n_accepted=2, tokens=toks[:3],
-                                 next_prev=9, accept_rate=0.5, queue_depth=1),
+                                 next_prev=9, accept_rate=0.5, queue_depth=1,
+                                 queue_s=0.5, verify_s=0.25),
             ),
             queue_depth=1, n_free=1, hint=3.5,
         ),
@@ -146,6 +147,8 @@ def _control_messages():
         codec.ImportAck(device_id=7, slot=0),
         codec.StatsRequest(now=9.0, has_now=True),
         codec.ReplicaStats(stats_json='{"rounds": 3}'),
+        codec.ReplicaStats(stats_json='{"rounds": 3}',
+                           telemetry_json='{"snapshot": {"counters": {}}}'),
         codec.WarmupRequest(),
         codec.WarmupReply(compile_json='{"4": 0.1}'),
         codec.Drain(),
