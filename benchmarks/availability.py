@@ -1,0 +1,142 @@
+"""Availability under chaos: what a mid-serve worker kill costs.
+
+Three runs of the SAME fleet spec (2 replicas, shared models/steps so the
+sweep measures serving, not compiles):
+
+  baseline       fault-free
+  kill+recover   seeded kill of replica 1 mid-serve, supervised respawn +
+                 device-replay stream recovery ON — must stay
+                 token-identical to baseline with zero shed streams
+  kill+shed      same schedule, recovery OFF — the dead replica's streams
+                 are shed into ``lost_devices`` (today's pre-supervision
+                 behavior, kept as the degraded floor)
+
+Reported per run: committed tokens, committed-tokens/s, evictions /
+respawns / recovered / shed counts, and (telemetry spans) respawn +
+recovery latency.  ``--json PATH`` writes the BENCH artifact with the
+uniform ``ServeResult.to_json`` records.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from benchmarks.common import emit
+
+
+def _specs(quick: bool, processes: bool):
+    from repro.api import ClusterSpec, FaultSpec, ModelSpec, ServeSpec
+
+    replicas: object = 2
+    if processes:
+        replicas = [{"flavor": "remote"}, {"flavor": "remote"}]
+    base = ServeSpec(
+        backend="cluster",
+        model=ModelSpec(vocab_size=128, target_layers=2, draft_layers=1,
+                        draft_noise=0.03),
+        cluster=ClusterSpec(replicas=replicas),
+        devices=4 if quick else 8,
+        prompt_len=8,
+        max_new=8 if quick else 16,
+        k_max=4,
+        telemetry=True,
+    )
+    schedule = FaultSpec(events=({"kind": "kill", "replica": 1, "round": 5},))
+    recover = dataclasses.replace(
+        base,
+        cluster=dataclasses.replace(
+            base.cluster,
+            faults={"respawn": True, "recover_streams": True,
+                    "backoff_base_s": 0.02, "backoff_max_s": 0.2},
+        ),
+        faults=schedule,
+    )
+    shed = dataclasses.replace(base, faults=schedule)
+    return base, recover, shed
+
+
+def _span_stats(result, name: str):
+    hists = ((result.telemetry or {}).get("snapshot", {}) or {}).get("histograms", {})
+    h = hists.get(name)
+    return (h["count"], h["sum"]) if h else (0, 0.0)
+
+
+def _run_one(spec, models, case: str) -> tuple:
+    from repro import telemetry
+    from repro.api import System
+
+    telemetry.registry().reset()  # per-case spans: no bleed between runs
+    system = System.build(spec, models=models)
+    t0 = time.time()
+    try:
+        result = system.serve()
+    except BaseException:
+        system.close()
+        raise
+    wall = time.time() - t0
+    router = system.engine
+    n_resp, s_resp = _span_stats(result, "router_respawn_seconds")
+    n_rec, s_rec = _span_stats(result, "router_recovery_seconds")
+    row = {
+        "case": case,
+        "tokens": result.total_tokens,
+        "tok_s": round(result.total_tokens / max(wall, 1e-9), 1),
+        "wall_s": round(wall, 3),
+        "evictions": getattr(router, "evictions", 0),
+        "respawns": getattr(router, "respawns", 0),
+        "recovered": getattr(router, "recovered_streams", 0),
+        "shed": getattr(router, "shed_streams", 0),
+        "lost": len(result.lost_devices),
+        "respawn_s": round(s_resp / max(n_resp, 1), 4) if n_resp else 0.0,
+        "recovery_s": round(s_rec / max(n_rec, 1), 4) if n_rec else 0.0,
+    }
+    system.close()
+    return row, result, system.models
+
+
+def run(quick: bool = False, processes: bool = False, json_path: str = "") -> list:
+    base, recover, shed = _specs(quick, processes)
+
+    row_base, res_base, models = _run_one(base, None, "baseline")
+    row_rec, res_rec, _ = _run_one(recover, models, "kill_recover")
+    row_shed, res_shed, _ = _run_one(shed, models, "kill_shed")
+
+    # the availability claims this benchmark exists to watch
+    row_rec["identical"] = res_rec.outputs == res_base.outputs
+    row_rec["availability"] = round(
+        res_rec.total_tokens / max(res_base.total_tokens, 1), 3
+    )
+    row_shed["availability"] = round(
+        res_shed.total_tokens / max(res_base.total_tokens, 1), 3
+    )
+    rows = [row_base, row_rec, row_shed]
+    emit(rows, "availability")
+    assert row_rec["identical"], "recovery must be token-identical to baseline"
+    assert row_rec["shed"] == 0 and row_rec["lost"] == 0
+    assert row_shed["lost"] > 0, "evict-only run should shed the dead replica"
+
+    if json_path:
+        artifact = {
+            "rows": [dict(r) for r in rows],
+            "results": {
+                "baseline": res_base.to_json(),
+                "kill_recover": res_rec.to_json(),
+                "kill_shed": res_shed.to_json(),
+            },
+        }
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=2, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--processes", action="store_true",
+                    help="spawned worker processes (real SIGKILL recovery)")
+    ap.add_argument("--json", type=str, default="",
+                    help="write the BENCH artifact here")
+    args = ap.parse_args()
+    run(quick=args.quick, processes=args.processes, json_path=args.json)

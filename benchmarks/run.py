@@ -16,10 +16,11 @@ def main() -> None:
     ap.add_argument("--only", type=str, default=None)
     args = ap.parse_args()
 
-    from benchmarks import capacity, confidence, pareto, roofline_bench, speclen
-    from benchmarks import verify_kernel, wstgr
+    from benchmarks import availability, capacity, confidence, pareto
+    from benchmarks import roofline_bench, speclen, verify_kernel, wstgr
 
     suites = {
+        "availability": availability.run,
         "table1_capacity": capacity.run,
         "fig3_confidence": confidence.run,
         "fig4_wstgr": wstgr.run,

@@ -21,6 +21,9 @@ from repro.api.events import (
 from repro.api.spec import (
     BACKENDS,
     ClusterSpec,
+    FaultEvent,
+    FaultPolicy,
+    FaultSpec,
     ModelSpec,
     ReplicaSpec,
     SchedulerSpec,
@@ -35,6 +38,9 @@ __all__ = [
     "ClusterSpec",
     "DoneEvent",
     "Event",
+    "FaultEvent",
+    "FaultPolicy",
+    "FaultSpec",
     "ModelBundle",
     "ModelSpec",
     "ReplicaSpec",

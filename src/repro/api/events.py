@@ -68,6 +68,11 @@ class SessionResult:
     fallback_rounds: int = 0
     fallback_tokens: int = 0
     wall_seconds: float = 0.0
+    # the stream went down with an evicted replica and could not be
+    # re-placed (capacity/deadline): ``tokens`` holds what was committed
+    # before the loss, and the session ended with an explicit rejection
+    # verdict instead of a hang
+    shed: bool = False
     client: Optional[ClientStats] = None  # transport backend only
     # per-round TraceEvents (repro.telemetry), populated when the spec was
     # built with telemetry=True; empty otherwise
@@ -90,6 +95,8 @@ class SessionResult:
             "fallback_tokens": self.fallback_tokens,
             "wall_seconds": self.wall_seconds,
         }
+        if self.shed:
+            d["shed"] = True
         if self.client is not None:
             d["client"] = self.client.to_json()
         if self.trace:
@@ -106,6 +113,10 @@ class ServeResult:
     engine: EngineStats
     clients: Optional[ClientStats] = None  # ClientStats.merge over the fleet
     wall_seconds: float = 0.0
+    # devices whose streams were shed with an evicted replica (Router
+    # supervision); empty on fault-free runs and when recovery re-placed
+    # every stream
+    lost_devices: List[int] = dataclasses.field(default_factory=list)
     # metrics snapshot + flight-recorder rows (engine.telemetry_payload());
     # None unless telemetry was enabled for the run
     telemetry: Optional[dict] = None
@@ -133,6 +144,8 @@ class ServeResult:
             "engine": self.engine.to_json(),
             "sessions": [s.to_json() for s in self.sessions],
         }
+        if self.lost_devices:
+            d["lost_devices"] = [int(x) for x in self.lost_devices]
         if self.clients is not None:
             d["clients"] = self.clients.to_json()
         if self.telemetry is not None:

@@ -31,9 +31,11 @@ PLACEMENTS = ("least-loaded", "affinity", "round-robin")
 QMODES = ("none", "f32", "f16", "int8")
 QUANT_BITS = (4, 8, 16)
 # v1: no Verdict feedback fields; v2: feedback wire; v3: + the
-# Router<->worker control plane (PlaceReplica / driver RPCs / Drain)
-CODEC_VERSIONS = (1, 2, 3)
+# Router<->worker control plane (PlaceReplica / driver RPCs / Drain);
+# v4: + per-RPC sequence ids (replay-safe retries) and Ping/Pong heartbeat
+CODEC_VERSIONS = (1, 2, 3, 4)
 FLAVORS = ("inproc", "remote")
+FAULT_KINDS = ("kill", "hang", "drop", "delay", "flap")
 
 
 class SpecError(ValueError):
@@ -92,7 +94,7 @@ class TransportSpec:
     verify_timeout: float = 30.0  # device-side round timeout (s)
     stagger_s: float = 0.0  # client i joins i * stagger_s seconds in
     draft_rate: Optional[float] = None  # emulated device tokens/s (None: unthrottled)
-    codec_version: int = 3
+    codec_version: int = 4
 
     def validate(self) -> None:
         _check(self.link in LINKS, f"transport.link {self.link!r} not in {LINKS}")
@@ -150,6 +152,55 @@ class ReplicaSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Fault-tolerance knobs for the replica Router (``cluster.faults``).
+
+    Everything defaults to today's fail-fast behaviour: a dead replica is
+    evicted, its streams are reported in ``lost_devices``, and an all-dead
+    cluster raises.  Flip ``respawn`` / ``recover_streams`` to get
+    supervised worker restarts and device-replay stream recovery instead.
+
+    ``heartbeat_interval_s > 0`` starts a background monitor that Pings
+    each remote replica over its own control connection (codec v4); a peer
+    that misses ``heartbeat_misses`` consecutive pings within
+    ``heartbeat_timeout_s`` each is marked suspect and evicted at the next
+    router step — seconds, not the 120 s RPC timeout.
+    """
+
+    respawn: bool = False  # restart spawned workers / redial dialed ones
+    recover_streams: bool = False  # re-admit lost streams by device replay
+    max_respawns: int = 3  # per replica, across its lifetime
+    backoff_base_s: float = 0.2  # first respawn delay
+    backoff_max_s: float = 5.0  # exponential backoff cap
+    backoff_jitter: float = 0.1  # +- fraction of the delay, seeded
+    redial_interval_s: float = 1.0  # dead dial-only replicas: retry cadence
+    all_dead_deadline_s: float = 30.0  # all-dead: keep respawning this long
+    heartbeat_interval_s: float = 0.0  # 0 = heartbeat monitor off
+    heartbeat_timeout_s: float = 2.0  # per-ping reply deadline
+    heartbeat_misses: int = 3  # consecutive misses before suspect
+    rpc_timeout_s: float = 0.0  # control-plane RPC timeout; 0 = codec default
+    retry_rpcs: bool = True  # one-shot idempotent retry over reconnect (v4)
+
+    def validate(self) -> None:
+        _check(self.max_respawns >= 0, "faults.max_respawns must be >= 0")
+        _check(self.backoff_base_s > 0, "faults.backoff_base_s must be > 0")
+        _check(
+            self.backoff_max_s >= self.backoff_base_s,
+            "faults.backoff_max_s must be >= backoff_base_s",
+        )
+        _check(
+            0.0 <= self.backoff_jitter < 1.0,
+            "faults.backoff_jitter must be in [0, 1)",
+        )
+        _check(self.redial_interval_s > 0, "faults.redial_interval_s must be > 0")
+        _check(self.all_dead_deadline_s >= 0, "faults.all_dead_deadline_s must be >= 0")
+        _check(self.heartbeat_interval_s >= 0, "faults.heartbeat_interval_s must be >= 0")
+        _check(self.heartbeat_timeout_s > 0, "faults.heartbeat_timeout_s must be > 0")
+        _check(self.heartbeat_misses >= 1, "faults.heartbeat_misses must be >= 1")
+        _check(self.rpc_timeout_s >= 0, "faults.rpc_timeout_s must be >= 0 (0 = default)")
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """Replica fleet shape (``backend="cluster"`` or ``"transport"``).
 
@@ -176,6 +227,7 @@ class ClusterSpec:
     replicas: Union[int, Tuple[ReplicaSpec, ...]] = 1
     placement: str = "least-loaded"
     migrate_on_retire: bool = True
+    faults: FaultPolicy = dataclasses.field(default_factory=FaultPolicy)
 
     def __post_init__(self) -> None:
         # normalize list/tuple forms (JSON gives a list of dicts) into a
@@ -184,6 +236,10 @@ class ClusterSpec:
         if isinstance(reps, (list, tuple)):
             object.__setattr__(
                 self, "replicas", tuple(_replica_from(r) for r in reps)
+            )
+        if isinstance(self.faults, dict):
+            object.__setattr__(
+                self, "faults", _sub_from_dict(FaultPolicy, "cluster.faults", self.faults)
             )
 
     @property
@@ -217,6 +273,7 @@ class ClusterSpec:
             self.placement in PLACEMENTS,
             f"cluster.placement {self.placement!r} not in {PLACEMENTS}",
         )
+        self.faults.validate()
 
 
 def _replica_from(r) -> ReplicaSpec:
@@ -236,6 +293,69 @@ def _replica_from(r) -> ReplicaSpec:
         raise
     except (TypeError, ValueError) as e:
         raise SpecError(f"bad replica value: {e}") from e
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: *what* happens to *which* replica at which
+    router step.  ``round`` counts Router.step() calls (the cluster's
+    logical clock), so a schedule is deterministic across runs.
+
+      kill    SIGKILL a spawned worker / sever a dialed control channel
+      hang    SIGSTOP a spawned worker (heartbeat detects; no clean close)
+      drop    fail the next ``count`` control RPCs with a connection error
+      delay   stall the next ``count`` control RPCs by ``delay_s`` each
+      flap    sever the control link once, then heal (retryable blip)
+    """
+
+    kind: str = "kill"
+    replica: int = 0
+    round: int = 1
+    count: int = 1  # drop/delay: how many RPCs are affected
+    delay_s: float = 0.0  # delay: per-RPC stall seconds
+
+    def validate(self) -> None:
+        _check(self.kind in FAULT_KINDS, f"fault.kind {self.kind!r} not in {FAULT_KINDS}")
+        _check(self.replica >= 0, "fault.replica must be >= 0")
+        _check(self.round >= 0, "fault.round must be >= 0")
+        _check(self.count >= 1, "fault.count must be >= 1")
+        _check(self.delay_s >= 0, "fault.delay_s must be >= 0")
+        if self.kind == "delay":
+            _check(self.delay_s > 0, "fault kind 'delay' needs delay_s > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """A deterministic chaos schedule (``ServeSpec.faults``).
+
+    ``seed`` keys every random choice the harness makes (backoff jitter,
+    injector tie-breaks), so a chaos run is exactly reproducible: same
+    spec, same kills, same recovery, same tokens.
+    """
+
+    seed: int = 0
+    events: Tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self) -> None:
+        evs = self.events
+        if isinstance(evs, (list, tuple)):
+            object.__setattr__(self, "events", tuple(_fault_event_from(e) for e in evs))
+
+    def validate(self) -> None:
+        for e in self.events:
+            e.validate()
+
+    @property
+    def active(self) -> bool:
+        return bool(self.events)
+
+
+def _fault_event_from(e) -> FaultEvent:
+    if isinstance(e, FaultEvent):
+        return e
+    if not isinstance(e, dict):
+        raise SpecError(f"faults.events entries must be objects, got {type(e).__name__}")
+    return _sub_from_dict(FaultEvent, "faults.events", e)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -296,6 +416,10 @@ class ServeSpec:
     # server-timing Verdict fields are populated either way, so flipping
     # this can never change the committed token streams.
     telemetry: bool = False
+    # chaos: a seeded, deterministic fault schedule injected while serving
+    # (kill/hang workers at a router step, drop/delay control RPCs).  Empty
+    # by default — no faults, no behaviour change.
+    faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
 
     def __post_init__(self) -> None:
         self.validate()
@@ -350,6 +474,20 @@ class ServeSpec:
             "kctl='adaptive' needs codec_version >= 2 (v1 Verdict frames "
             "carry no accept_rate/queue_depth feedback)",
         )
+        self.faults.validate()
+        _check(
+            not self.faults.active or self.backend in ("cluster", "transport"),
+            f"a fault schedule needs backend 'cluster' or 'transport', not "
+            f"{self.backend!r} (faults target replica workers and control links)",
+        )
+        if self.faults.active:
+            n = self.cluster.n_replicas
+            for e in self.faults.events:
+                _check(
+                    e.replica < n,
+                    f"fault event targets replica {e.replica} but the cluster "
+                    f"has only {n} replicas",
+                )
 
     # -- derived -------------------------------------------------------------
 
@@ -386,6 +524,7 @@ class ServeSpec:
         reps = d["cluster"]["replicas"]
         if isinstance(reps, tuple):
             d["cluster"]["replicas"] = [dict(r) for r in reps]
+        d["faults"]["events"] = [dict(e) for e in d["faults"]["events"]]
         return d
 
     def to_json_str(self, indent: int = 2) -> str:
@@ -411,6 +550,7 @@ class ServeSpec:
             ("transport", TransportSpec),
             ("cluster", ClusterSpec),
             ("scheduler", SchedulerSpec),
+            ("faults", FaultSpec),
         ):
             if name in data:
                 kw[name] = _sub_from_dict(sub_cls, name, data.pop(name))

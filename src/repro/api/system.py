@@ -52,7 +52,7 @@ from repro.api.events import (
     SessionResult,
     TokenEvent,
 )
-from repro.api.spec import ServeSpec
+from repro.api.spec import FaultSpec, ServeSpec
 from repro.cluster import Router
 from repro.configs.base import get_config
 from repro.core import engine_loop
@@ -205,7 +205,12 @@ class Session:
         else:
             self._accepted += int(n_accepted)
 
-    def _finish(self, tokens, client: Optional[ClientStats] = None) -> None:
+    def _finish(
+        self,
+        tokens,
+        client: Optional[ClientStats] = None,
+        shed: bool = False,
+    ) -> None:
         tokens = [int(t) for t in tokens][: self.max_new]
         self.result = SessionResult(
             device_id=self.device_id,
@@ -218,6 +223,7 @@ class Session:
             wall_seconds=(
                 client.wall_seconds if client is not None else time.time() - self._t_open
             ),
+            shed=shed,
             client=client,
             trace=self._trace,
         )
@@ -325,10 +331,13 @@ class System:
             if spec.cluster.has_remote:
                 engine = cls._build_remote_cluster(spec, models, engine_kw)
             elif spec.backend == "engine" or (
-                spec.backend == "transport" and spec.cluster.n_replicas == 1
+                spec.backend == "transport"
+                and spec.cluster.n_replicas == 1
+                and not spec.faults.active
             ):
                 # single replica: the bare engine (TransportServer fronts a
-                # Router or an engine interchangeably)
+                # Router or an engine interchangeably); a fault schedule
+                # needs the Router's supervision, so chaos runs keep it
                 engine = ServerEngine(models.target, models.target_params, **engine_kw)
             else:  # cluster, or transport fronting a replica set
                 n_slots = engine_kw.pop("n_slots")
@@ -339,8 +348,13 @@ class System:
                     n_slots=n_slots,
                     placement=spec.cluster.placement,
                     migrate_on_retire=spec.cluster.migrate_on_retire,
+                    faults=spec.cluster.faults,
                     **engine_kw,
                 )
+            if spec.faults.active and isinstance(engine, Router):
+                from repro.cluster.faults import ChaosInjector
+
+                engine.chaos = ChaosInjector(spec.faults, engine)
         kit = kit or EdgeDeviceKit(
             models.draft,
             models.draft_params,
@@ -367,10 +381,22 @@ class System:
         token-identical to the in-process cluster.  Local entries construct
         ServerEngines in this process, sharing one compiled bundle."""
         from repro.cluster import RemoteReplica, spawn_worker
+        from repro.cluster.faults import FaultyChannel
+        from repro.cluster.remote import DEFAULT_TIMEOUT
 
+        policy = spec.cluster.faults
+        rpc_timeout = policy.rpc_timeout_s if policy.rpc_timeout_s > 0 else DEFAULT_TIMEOUT
+        # drop/delay/flap chaos events act on the control channel, so remote
+        # channels get wrapped whenever the schedule contains one
+        wrap_channels = any(
+            e.kind in ("drop", "delay", "flap") for e in spec.faults.events
+        )
         n_slots_default = engine_kw.pop("n_slots")
         steps = engine_kw.pop("steps", None)
-        worker_base = spec.with_backend("engine")
+        # the chaos schedule is executed by the ROUTER against its replicas;
+        # the spec a worker is placed with must not carry it (and 'engine'
+        # backend rejects fault schedules outright)
+        worker_base = spec.with_backend("engine", faults=FaultSpec())
         replicas: list = []
         try:
             for rs in spec.cluster.replica_specs:
@@ -388,11 +414,15 @@ class System:
                     scheduler=dataclasses.replace(worker_base.scheduler, slots=slots),
                 )
                 if rs.address:
-                    remote = RemoteReplica.dial(rs.address)
+                    remote = RemoteReplica.dial(rs.address, timeout=rpc_timeout)
                 else:
                     proc, addr = spawn_worker()
-                    remote = RemoteReplica.dial(addr)
+                    remote = RemoteReplica.dial(addr, timeout=rpc_timeout)
                     remote.proc = proc
+                    remote.spawned = True
+                remote.retry_rpcs = policy.retry_rpcs
+                if wrap_channels:
+                    remote.channel = FaultyChannel(remote.channel)
                 remote.place(worker_spec)
                 replicas.append(remote)
         except BaseException:
@@ -404,6 +434,7 @@ class System:
             replicas,
             placement=spec.cluster.placement,
             migrate_on_retire=spec.cluster.migrate_on_retire,
+            faults=policy,
         )
 
     @property
@@ -559,6 +590,7 @@ class System:
             engine=stats,
             clients=clients,
             wall_seconds=time.time() - t0,
+            lost_devices=sorted(getattr(self.engine, "lost_devices", []) or []),
             telemetry=payload,
         )
 
@@ -669,11 +701,17 @@ class System:
             )
             self._running[dev_id] = s
             del self._waiting[dev_id]
-        for s in self._running.values():
+        for s in list(self._running.values()):
             if not s._device.awaiting:
                 toks = s._device.draft()
                 s._last_drafted = len(toks)
-                self.engine.submit(s.device_id, toks, time.time() - self._t0)
+                try:
+                    self.engine.submit(s.device_id, toks, time.time() - self._t0)
+                except ConnectionError:
+                    # the replica died and the stream could not be re-placed;
+                    # the shed sweep below turns it into an explicit loss
+                    if s.device_id in self.engine.streams:
+                        raise
         finished = []
         traced = telemetry.enabled()
         for v in self.engine.step(time.time() - self._t0) or []:
@@ -693,6 +731,23 @@ class System:
             self.engine.retire(s.device_id)
             del self._running[s.device_id]
             s._finish(s._device.committed)
+        self._sweep_lost()
+
+    def _sweep_lost(self) -> None:
+        """Sessions whose streams were shed with an evicted replica end with
+        an explicit rejection (SessionResult.shed) carrying whatever was
+        committed before the loss — never a hung serve loop."""
+        lost = getattr(self.engine, "lost_devices", None)
+        if not lost:
+            return
+        lost = set(lost)
+        for dev in [d for d in self._running if d in lost]:
+            s = self._running.pop(dev)
+            log.warning("session %d was shed with its replica; ending it", dev)
+            s._finish(s._device.committed if s._device is not None else [], shed=True)
+        for dev in [d for d in self._waiting if d in lost]:
+            s = self._waiting.pop(dev)
+            s._finish([], shed=True)
 
     # -- reference backend ---------------------------------------------------
 
@@ -771,6 +826,21 @@ class System:
     async def _transport_fleet(self, sessions: List[Session]):
         spec, tspec = self.spec, self.spec.transport
         server = TransportServer(self.engine)
+
+        def relink(dev: int):
+            # mid-stream reconnect hook: a fresh link of the same flavor,
+            # attached to the server before the client re-Hellos on it
+            async def dial():
+                fresh = make_link(
+                    tspec.link,
+                    net=NETS[tspec.net],
+                    seed=spec.session_seed_base + dev,
+                )
+                server.attach(fresh.server)
+                return fresh.device
+
+            return dial
+
         runs = []
         for idx, s in enumerate(sessions):
             link = make_link(
@@ -794,6 +864,7 @@ class System:
                 kctl=spec.kctl,
                 seed=spec.session_seed_base + s.device_id,
                 on_round=s._note_round,
+                reconnect=relink(s.device_id),
             )
             runs.append((idx, s, client))
 

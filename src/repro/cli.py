@@ -6,6 +6,7 @@
     repro worker --listen tcp:0.0.0.0:7001     run one replica worker process
     repro top --connect tcp:host:7001          live fleet table (control plane)
     repro trace --spec spec.json               per-round trace JSONL dump
+    repro chaos --kill 1:5 --check             seeded fault injection + identity
 
 A global ``--log-level LEVEL`` (anywhere on the command line) configures the
 ``repro.*`` logger hierarchy before the subcommand runs; ``REPRO_LOG_LEVEL``
@@ -29,6 +30,9 @@ commands:
            control sockets (see: repro top --help)
   trace    run a spec with telemetry on and dump the per-round trace as
            JSONL (see: repro trace --help)
+  chaos    run a deterministic fault schedule (kill/hang/drop/delay/flap at
+           fixed rounds) against a replica fleet and report what the
+           supervision layer recovered (see: repro chaos --help)
 
 Run configurations are declarative ServeSpec JSON artifacts; `repro serve
 --dump-spec` converts any flag combination into one.
@@ -85,6 +89,11 @@ def main(argv: Optional[List[str]] = None) -> None:
         from repro.telemetry.top import main_trace
 
         main_trace(rest)
+        return
+    if cmd == "chaos":
+        from repro.launch.chaos import main as chaos_main
+
+        chaos_main(rest)
         return
     print(_USAGE, end="", file=sys.stderr)
     raise SystemExit(f"repro: unknown command {cmd!r}")

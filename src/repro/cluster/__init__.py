@@ -6,8 +6,12 @@
               transport failure.  Replicas are LocalReplica-wrapped
               in-process ServerEngines or...
   remote.py — RemoteReplica: the same driver surface proxied to a
-              ``repro worker`` process over codec v3 control frames on a
+              ``repro worker`` process over codec v4 control frames on a
               blocking TCP/UDS ControlChannel; spawn_worker launches one.
+  faults.py — supervision + chaos: seeded Backoff, the armable
+              FaultyChannel wrapper, and the ChaosInjector that executes a
+              ServeSpec's deterministic FaultSpec schedule against a
+              live Router.
 
 The router exposes the same admit/submit/step/retire surface as a single
 ``ServerEngine``, so every existing driver (launch/serve.py inproc loop,
@@ -16,6 +20,7 @@ swapping the object it holds — admission becomes a placement decision, and
 with remote replicas the fleet spans OS processes.
 """
 
+from repro.cluster.faults import Backoff, ChaosInjector, FaultyChannel
 from repro.cluster.remote import (
     ControlChannel,
     RemoteReplica,
@@ -38,7 +43,10 @@ from repro.cluster.router import (
 __all__ = [
     "PLACEMENT_POLICIES",
     "AffinityPlacement",
+    "Backoff",
+    "ChaosInjector",
     "ControlChannel",
+    "FaultyChannel",
     "LeastLoadedPlacement",
     "LocalReplica",
     "MigrationError",

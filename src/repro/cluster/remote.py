@@ -16,25 +16,30 @@ trip — only actual engine work (admit's prefill, step's verification,
 migration's row copy) crosses the wire.
 
 Supervision is reconnect-or-evict: a transport failure on a SIDE-EFFECT-FREE
-RPC (stats) is retried once over a fresh connection; a failure on a
-side-effectful RPC (admit / submit / step / retire / migration) raises
-:class:`ReplicaGone` immediately — the worker may or may not have applied
-it, so retrying could double-apply a round — and the Router evicts the
-replica.  A worker-side handler error arrives as an ErrorReply and raises
-:class:`WorkerError` (the worker is alive; the request was just invalid).
+RPC (stats) is retried once over a fresh connection.  Side-effectful RPCs
+(admit / submit / step / retire / migration) carry a codec-v4 per-channel
+``seq``, so when the Router's :class:`~repro.api.spec.FaultPolicy` enables
+``retry_rpcs`` they too get ONE reconnect-and-resend — the worker's replay
+cache returns the original reply if the first copy landed, so the retry can
+never double-apply a round.  A failure that survives the retry raises
+:class:`ReplicaGone` and the Router evicts (and, policy permitting,
+revives) the replica.  A worker-side handler error arrives as an ErrorReply
+and raises :class:`WorkerError` (the worker is alive; the request was just
+invalid).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import shutil
 import socket
 import subprocess
 import sys
 import tempfile
 import time
 import uuid
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -63,6 +68,14 @@ class ControlChannel:
         self.timeout = timeout
         self._sock: Optional[socket.socket] = None
         self._decoder = codec.FrameDecoder()
+        self._seq = 0  # per-channel RPC seq (v4 replay keys); 0 = unused
+
+    def next_seq(self) -> int:
+        """Monotonic non-zero seq for side-effectful RPCs.  Survives
+        reconnects of THIS channel (the worker's replay cache is keyed by
+        it); a respawned worker gets a fresh channel and a fresh count."""
+        self._seq += 1
+        return self._seq
 
     def connect(self) -> None:
         parsed = parse_addr(self.address)
@@ -146,6 +159,41 @@ def repro_python_env() -> dict:
     return env
 
 
+def worker_sock_dir(address: str) -> Optional[str]:
+    """The private ``repro-worker-*`` temp dir behind a spawned worker's UDS
+    address, or None when the address is not one of ours."""
+    if not address.startswith("uds:"):
+        return None
+    d = os.path.dirname(address[len("uds:"):])
+    if os.path.basename(d).startswith("repro-worker-"):
+        return d
+    return None
+
+
+def cleanup_worker_dir(address: str) -> None:
+    """Remove the private socket dir a spawned worker was listening under."""
+    d = worker_sock_dir(address)
+    if d is not None:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def kill_worker_proc(proc: Optional[subprocess.Popen], *, wait_s: float = 5.0) -> None:
+    """Reap a worker subprocess: terminate, bounded wait, then kill —
+    a SIGTERM the worker ignores (hung in a compile, SIGSTOPped by the
+    chaos harness) must not leave a zombie behind."""
+    if proc is None or proc.poll() is not None:
+        return
+    proc.terminate()
+    try:
+        proc.wait(timeout=wait_s)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        try:
+            proc.wait(timeout=wait_s)
+        except subprocess.TimeoutExpired:
+            pass
+
+
 def spawn_worker(
     address: Optional[str] = None,
     *,
@@ -156,10 +204,12 @@ def spawn_worker(
 
     Returns ``(proc, address)``.  Without an explicit address the worker
     listens on a fresh UDS socket under a private temp dir (no port to
-    guess, no parsing of the worker's stdout)."""
+    guess, no parsing of the worker's stdout); the dir is removed by
+    RemoteReplica.close()/drain(), or here if startup fails."""
+    made_dir = None
     if address is None:
-        sock_dir = tempfile.mkdtemp(prefix="repro-worker-")
-        address = f"uds:{os.path.join(sock_dir, uuid.uuid4().hex[:8] + '.sock')}"
+        made_dir = tempfile.mkdtemp(prefix="repro-worker-")
+        address = f"uds:{os.path.join(made_dir, uuid.uuid4().hex[:8] + '.sock')}"
     cmd = [sys.executable, "-m", "repro.cli", "worker", "--listen", address]
     if spec_path:
         cmd += ["--spec", spec_path]
@@ -170,6 +220,8 @@ def spawn_worker(
     probe = ControlChannel(address, timeout=5.0)
     while True:
         if proc.poll() is not None:
+            if made_dir is not None:
+                shutil.rmtree(made_dir, ignore_errors=True)
             raise RuntimeError(
                 f"worker exited with code {proc.returncode} during startup "
                 f"(cmd: {' '.join(cmd)})"
@@ -180,7 +232,9 @@ def spawn_worker(
             return proc, address
         except ReplicaGone:
             if time.time() > deadline:
-                proc.terminate()
+                kill_worker_proc(proc)
+                if made_dir is not None:
+                    shutil.rmtree(made_dir, ignore_errors=True)
                 raise RuntimeError(
                     f"worker at {address} did not come up within {startup_timeout}s"
                 ) from None
@@ -207,7 +261,12 @@ class RemoteReplica:
         self.channel = channel
         self.address = address or channel.address
         self.proc = proc  # set when this replica spawned its worker
+        self.spawned = proc is not None  # revive() respawns vs redials
         self.dead = False
+        self.suspect = False  # heartbeat monitor: peer stopped answering
+        self.retry_rpcs = False  # FaultPolicy: one-shot retry over reconnect
+        self.retries = 0
+        self.spec = None  # the placed ServeSpec subtree (revive re-places it)
         self._placed = False
         self._n_slots = 0
         self.k_max = 0
@@ -219,6 +278,10 @@ class RemoteReplica:
         self._queue_depth = 0
         self._hint: Optional[float] = None
         self.last_telemetry: Optional[dict] = None  # worker payload from stats()
+        self._hb_channel: Optional[ControlChannel] = None  # heartbeat probes
+        # tests/chaos override: how revive() obtains a fresh channel; the
+        # default respawns the worker process or redials the address
+        self.channel_factory: Optional[Callable[[], ControlChannel]] = None
 
     @classmethod
     def dial(cls, address: str, *, timeout: float = DEFAULT_TIMEOUT) -> "RemoteReplica":
@@ -229,7 +292,8 @@ class RemoteReplica:
     # -- placement -----------------------------------------------------------
 
     def place(self, spec) -> None:
-        """Ship the ServeSpec subtree; the worker builds its engine from it."""
+        """Ship the ServeSpec subtree; the worker builds its engine from it.
+        The spec is kept so a supervised revive() can re-place it."""
         ack = self.channel.request(
             codec.PlaceReplica(spec.to_json_str()), timeout=WARMUP_TIMEOUT
         )
@@ -237,12 +301,119 @@ class RemoteReplica:
             raise WorkerError(f"expected PlaceAck, got {type(ack).__name__}")
         if not ack.ok:
             raise WorkerError(f"worker at {self.address} refused placement: {ack.error}")
+        self.spec = spec
         self._placed = True
         self._n_slots = ack.n_slots
         self.k_max = ack.k_max
         self.max_len = ack.max_len
         self.greedy = ack.greedy
         self.paged_attention = ack.paged_attention
+
+    # -- supervision: retryable RPCs, chaos hooks, revive ---------------------
+
+    def _request(self, msg: codec.Message, *, timeout: Optional[float] = None):
+        """Side-effectful RPC with v4 replay protection.  The frame already
+        carries a fresh non-zero seq; when ``retry_rpcs`` is on, one
+        ReplicaGone is absorbed by reconnecting and RESENDING the same frame
+        — the worker's replay cache dedups it if the first copy landed."""
+        try:
+            return self.channel.request(msg, timeout=timeout)
+        except ReplicaGone:
+            if not self.retry_rpcs or getattr(msg, "seq", 0) == 0:
+                raise
+            self.retries += 1
+            self.channel.reconnect()
+            return self.channel.request(msg, timeout=timeout)
+
+    def ping(self, *, timeout: float = 2.0) -> bool:
+        """Heartbeat probe on a DEDICATED channel — the main channel is
+        driven by the router thread and is not shareable.  False on any
+        failure (dial refused, timeout, bad reply); the failed channel is
+        torn down so the next probe redials from scratch."""
+        try:
+            if self._hb_channel is None:
+                self._hb_channel = ControlChannel(self.address, timeout=timeout)
+                self._hb_channel.connect()
+            reply = self._hb_channel.request(
+                codec.Ping(seq=self._hb_channel.next_seq(), t=time.monotonic()),
+                timeout=timeout,
+            )
+            return isinstance(reply, codec.Pong)
+        except Exception:
+            ch, self._hb_channel = self._hb_channel, None
+            if ch is not None:
+                ch.close()
+            return False
+
+    def chaos_kill(self) -> None:
+        """Deterministic fault injection: make this worker unreachable the
+        way a real crash would — SIGKILL a spawned process, or sever the
+        control link of a dialed/faked one.  The Router discovers it on the
+        next RPC exactly as it would a genuine failure."""
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.kill()
+            try:
+                self.proc.wait(timeout=10.0)
+            except subprocess.TimeoutExpired:
+                pass
+        kill = getattr(self.channel, "kill", None)
+        if kill is not None:
+            kill()  # test channels: flip their killed flag
+        else:
+            self.channel.close()
+
+    def chaos_hang(self) -> None:
+        """SIGSTOP a spawned worker: connected but silent (partition-like);
+        only the heartbeat monitor or an RPC timeout can notice."""
+        import signal
+
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.send_signal(signal.SIGSTOP)
+        else:
+            hang = getattr(self.channel, "hang", None)
+            if hang is not None:
+                hang()
+
+    def can_revive(self) -> bool:
+        return self.channel_factory is not None or self.spawned or bool(self.address)
+
+    def revive(self) -> None:
+        """Bring a dead replica back: respawn the worker (or redial the
+        address), re-place the stored spec, re-warmup.  The new engine is
+        rebuilt deterministically from the spec's model seed, so recovered
+        streams stay token-identical.  Raises ReplicaGone/RuntimeError on
+        failure; the caller owns backoff and retry budgets."""
+        if self.spec is None and self.channel_factory is None:
+            raise ReplicaGone(f"replica at {self.address} was never placed")
+        old_addr = self.address
+        self.channel.close()
+        if self._hb_channel is not None:
+            self._hb_channel.close()
+            self._hb_channel = None
+        if self.channel_factory is not None:
+            self.channel = self.channel_factory()
+        elif self.spawned:
+            kill_worker_proc(self.proc)
+            cleanup_worker_dir(old_addr)
+            self.proc, self.address = spawn_worker()
+            self.channel = ControlChannel(self.address, timeout=self.channel.timeout)
+            self.channel.connect()
+        else:
+            self.channel = ControlChannel(self.address, timeout=self.channel.timeout)
+            self.channel.connect()
+        self._streams.clear()
+        self._pending.clear()
+        self._queue_depth = 0
+        self._hint = None
+        self._placed = False
+        if self.spec is not None:
+            try:
+                self.place(self.spec)
+                self.warmup()
+            except WorkerError as e:
+                raise ReplicaGone(f"revived worker refused placement: {e}") from e
+        self.dead = False
+        self.suspect = False
 
     @property
     def fingerprint(self) -> tuple:
@@ -276,8 +447,11 @@ class RemoteReplica:
     # -- driver surface (proxied) --------------------------------------------
 
     def admit(self, device_id: int, prompt, now: float = 0.0) -> Optional[DeviceStream]:
-        reply = self.channel.request(
-            codec.AdmitRequest(device_id, np.asarray(prompt, np.int32), now)
+        reply = self._request(
+            codec.AdmitRequest(
+                device_id, np.asarray(prompt, np.int32), now,
+                seq=self.channel.next_seq(),
+            )
         )
         if not reply.ok:
             return None
@@ -292,11 +466,12 @@ class RemoteReplica:
 
     def submit(self, device_id: int, draft_tokens, now: float, draft_q=None) -> None:
         toks = np.asarray(draft_tokens, np.int32).reshape(-1)
-        self.channel.request(
+        self._request(
             codec.SubmitRequest(
                 device_id, toks, now,
                 draft_q=None if draft_q is None else np.asarray(draft_q, np.float32),
                 qmode="none" if draft_q is None else "f32",
+                seq=self.channel.next_seq(),
             )
         )
         self._pending[device_id] = int(toks.shape[0])
@@ -304,7 +479,7 @@ class RemoteReplica:
     def step(self, now: float) -> Optional[List[Verdict]]:
         if not self._pending:
             return None  # nothing queued on this worker: skip the round trip
-        reply = self.channel.request(codec.StepRequest(now))
+        reply = self._request(codec.StepRequest(now, seq=self.channel.next_seq()))
         self._queue_depth = reply.queue_depth
         self._hint = reply.hint
         verdicts: List[Verdict] = []
@@ -332,7 +507,9 @@ class RemoteReplica:
         return verdicts or None
 
     def retire(self, device_id: int) -> DeviceStream:
-        reply = self.channel.request(codec.RetireRequest(device_id))
+        reply = self._request(
+            codec.RetireRequest(device_id, seq=self.channel.next_seq())
+        )
         self._pending.pop(device_id, None)
         self._streams.pop(device_id, None)
         from repro.transport.worker import state_to_stream
@@ -340,14 +517,18 @@ class RemoteReplica:
         return state_to_stream(reply.stream)
 
     def cancel_request(self, device_id: int) -> bool:
-        reply = self.channel.request(codec.CancelRequest(device_id))
+        reply = self._request(
+            codec.CancelRequest(device_id, seq=self.channel.next_seq())
+        )
         if reply.ok:
             self._pending.pop(device_id, None)
         return reply.ok
 
     def force_extend(self, device_id: int, tokens) -> int:
-        reply = self.channel.request(
-            codec.ForceExtendRequest(device_id, np.asarray(tokens, np.int32))
+        reply = self._request(
+            codec.ForceExtendRequest(
+                device_id, np.asarray(tokens, np.int32), seq=self.channel.next_seq()
+            )
         )
         stream = self._streams.get(device_id)
         if stream is not None:
@@ -358,7 +539,9 @@ class RemoteReplica:
     # -- migration (streams cross the wire bit-exactly) ----------------------
 
     def export_stream(self, device_id: int):
-        reply = self.channel.request(codec.ExportStream(device_id))
+        reply = self._request(
+            codec.ExportStream(device_id, seq=self.channel.next_seq())
+        )
         self._pending.pop(device_id, None)
         self._streams.pop(device_id, None)
         from repro.transport.worker import state_to_stream
@@ -368,8 +551,10 @@ class RemoteReplica:
     def import_stream(self, stream: DeviceStream, row_cache) -> DeviceStream:
         from repro.transport.worker import stream_to_state
 
-        reply = self.channel.request(
-            codec.ImportStream(stream_to_state(stream, row_cache))
+        reply = self._request(
+            codec.ImportStream(
+                stream_to_state(stream, row_cache), seq=self.channel.next_seq()
+            )
         )
         stream.slot = reply.slot
         self._streams[stream.device_id] = stream
@@ -396,7 +581,8 @@ class RemoteReplica:
         return {int(k): v for k, v in json.loads(reply.compile_json).items()}
 
     def drain(self) -> None:
-        """Best-effort: ask the worker to exit; reap a spawned process."""
+        """Best-effort: ask the worker to exit; reap a spawned process and
+        remove its private socket dir."""
         try:
             if self.channel.connected or not self.dead:
                 self.channel.request(codec.Drain(), timeout=10.0)
@@ -407,12 +593,13 @@ class RemoteReplica:
             try:
                 self.proc.wait(timeout=10.0)
             except subprocess.TimeoutExpired:
-                self.proc.terminate()
-                try:
-                    self.proc.wait(timeout=5.0)
-                except subprocess.TimeoutExpired:
-                    self.proc.kill()
+                kill_worker_proc(self.proc)
             self.proc = None
 
     def close(self) -> None:
         self.channel.close()
+        if self._hb_channel is not None:
+            self._hb_channel.close()
+            self._hb_channel = None
+        if self.spawned:
+            cleanup_worker_dir(self.address)

@@ -40,19 +40,39 @@ The router mirrors the full ServerEngine driver surface (admit / submit /
 step / retire / cancel_request / force_extend / stats / warmup), so the
 transport server and the in-process serving loops drive a replica fleet by
 holding a Router where they held an engine.
+
+**Supervision** is governed by a :class:`~repro.api.spec.FaultPolicy`
+(default: today's evict-only behavior).  With ``respawn`` on, an evicted
+replica is revived in place — respawn the worker (or redial a dial-only
+address), re-place its spec, re-warmup — under a capped, seeded-jitter
+:class:`~repro.cluster.faults.Backoff` and a ``max_respawns`` budget; dead
+replicas are also redialed periodically from the step loop, and all-dead
+becomes retry-until-``all_dead_deadline_s`` instead of instantly fatal.
+With ``recover_streams`` on, the streams that went down with a replica are
+re-admitted to a surviving (or freshly revived) replica by DEVICE REPLAY:
+the router shadows each stream's prompt, committed tokens, and last
+unanswered submit, so recovery is admit + chunked ``force_extend`` of the
+committed history (runs of <= k_max+1) + re-submit — greedy continuation
+stays token-identical to the fault-free run.  Only streams that exceed the
+surviving capacity are shed into ``lost_devices``.  A ``heartbeat_interval_s``
+ > 0 starts a background Ping monitor that marks silent peers ``suspect``
+within seconds instead of waiting out the 120 s control-RPC timeout.
 """
 
 from __future__ import annotations
 
 import logging
+import threading
+import time
 from collections.abc import Mapping
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, Iterator, List, Optional, Sequence
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 import jax
 import numpy as np
 
 from repro import telemetry
+from repro.cluster.faults import Backoff
 from repro.core.admission import DeviceStream
 from repro.core.engine import EngineStats, Verdict
 from repro.core.server_engine import ServerEngine
@@ -77,6 +97,8 @@ class LocalReplica:
     def __init__(self, engine: ServerEngine):
         self.engine = engine
         self.dead = False
+        self.suspect = False
+        self._killed = False  # chaos: delegated calls fail like a dead worker
 
     @property
     def n_free(self) -> int:
@@ -91,6 +113,32 @@ class LocalReplica:
         e = self.engine
         return (e.k_max, e.pool.max_len, e.greedy, e.paged_attention)
 
+    def chaos_kill(self) -> None:
+        """Fault injection: every delegated call now raises ConnectionError,
+        which is exactly what a crashed worker looks like to the Router —
+        the in-process path exercises the same evict/recover machinery."""
+        self._killed = True
+
+    def can_revive(self) -> bool:
+        return self._killed  # only a chaos-killed local can come back
+
+    def revive(self) -> None:
+        """Undo a chaos kill: the engine object was never actually broken,
+        so revival is clearing the flag and retiring the dead incarnation's
+        streams (a real respawn starts with an empty pool too)."""
+        self._killed = False
+        for dev in list(self.engine.streams):
+            try:
+                self.engine.cancel_request(dev)
+            except Exception:
+                pass
+            try:
+                self.engine.retire(dev)
+            except Exception:
+                pass
+        self.dead = False
+        self.suspect = False
+
     def drain(self) -> None:  # lifecycle parity with RemoteReplica
         pass
 
@@ -98,6 +146,8 @@ class LocalReplica:
         pass
 
     def __getattr__(self, name: str):
+        if self.__dict__.get("_killed"):
+            raise ConnectionError(f"local replica is chaos-killed ({name!r})")
         return getattr(self.engine, name)
 
 
@@ -207,6 +257,7 @@ class Router:
         *,
         placement: str | PlacementPolicy = "least-loaded",
         migrate_on_retire: bool = True,
+        faults: Optional[Any] = None,
     ):
         if not replicas:
             raise ValueError("Router needs at least one replica")
@@ -220,14 +271,24 @@ class Router:
                 f"replicas must be homogeneous for migration: k_max {k_maxes}, "
                 f"max_len {max_lens}"
             )
+        if faults is None:
+            from repro.api.spec import FaultPolicy  # lazy: api sits above cluster
+
+            faults = FaultPolicy()
         self.replicas: List[Any] = wrapped
         self.placement = (
             placement if isinstance(placement, PlacementPolicy) else make_placement(placement)
         )
         self.migrate_on_retire = migrate_on_retire
+        self.faults = faults
+        self.chaos: Optional[Any] = None  # ChaosInjector, attached by System/tests
         self.migrations = 0
         self.evictions = 0
-        self.lost_devices: List[int] = []  # streams dropped with evicted replicas
+        self.respawns = 0
+        self.recovered_streams = 0
+        self.shed_streams = 0
+        self.steps_taken = 0  # cluster step counter (chaos schedule clock)
+        self.lost_devices: List[int] = []  # streams shed with evicted replicas
         self._where: Dict[int, int] = {}  # device_id -> replica index
         self._pool: Optional[ThreadPoolExecutor] = None  # remote step fan-out
         # router-side shadow flight recorders, one ring per replica: fed from
@@ -239,6 +300,18 @@ class Router:
         self.flight_dumps: Dict[int, List[dict]] = {}  # idx -> dump at eviction
         self._round_seq: Dict[int, int] = {}  # device_id -> round seq
         self._last_k: Dict[int, int] = {}  # device_id -> last submitted len
+        # device-replay shadows: everything needed to rebuild a stream on
+        # another replica after its worker dies (prompt + committed history +
+        # the round that was in flight, if any)
+        self._prompts: Dict[int, np.ndarray] = {}
+        self._admit_now: Dict[int, float] = {}
+        self._committed: Dict[int, List[int]] = {}
+        self._last_submit: Dict[int, Tuple] = {}  # dev -> (tokens, now, draft_q)
+        # respawn bookkeeping
+        self._backoff: Dict[int, Backoff] = {}
+        self._respawn_count: Dict[int, int] = {}
+        self._redial_at: Dict[int, float] = {}
+        self._hb: Optional[_HeartbeatMonitor] = None
 
     @classmethod
     def build(
@@ -250,6 +323,7 @@ class Router:
         n_slots: int,
         placement: str | PlacementPolicy = "least-loaded",
         migrate_on_retire: bool = True,
+        faults: Optional[Any] = None,
         **engine_kw,
     ) -> "Router":
         """N homogeneous in-process replicas (``n_slots`` rows each) sharing
@@ -267,7 +341,10 @@ class Router:
             for _ in range(replicas - 1)
         ]
         return cls(
-            [first, *rest], placement=placement, migrate_on_retire=migrate_on_retire
+            [first, *rest],
+            placement=placement,
+            migrate_on_retire=migrate_on_retire,
+            faults=faults,
         )
 
     # -- introspection -------------------------------------------------------
@@ -307,7 +384,13 @@ class Router:
 
     def loads(self) -> List[int]:
         """Active stream count per replica (placement test surface)."""
-        return [len(r.streams) for r in self.replicas]
+        out = []
+        for r in self.replicas:
+            try:
+                out.append(len(r.streams))
+            except ConnectionError:  # chaos-killed local: unreachable engine
+                out.append(0)
+        return out
 
     def _replica(self, device_id: int):
         return self.replicas[self._where[device_id]]
@@ -315,10 +398,13 @@ class Router:
     # -- supervision ---------------------------------------------------------
 
     def _evict(self, idx: int) -> None:
-        """A replica's worker is unreachable: mark it dead, record which
-        streams went down with it, and keep serving on the survivors.  Side-
-        effectful RPCs are never retried (the worker may have half-applied
-        them), so eviction is the only safe response to transport failure."""
+        """A replica's worker is unreachable: mark it dead, harvest the
+        streams that went down with it, and keep serving on the survivors.
+        Under the default FaultPolicy that is the whole story (a one-shot
+        RPC retry happens below this layer, guarded by the worker's v4
+        replay cache); with ``respawn``/``recover_streams`` on, the replica
+        is revived in place and its streams are re-placed by device replay —
+        only what exceeds the surviving capacity is shed."""
         replica = self.replicas[idx]
         if replica.dead:
             return
@@ -326,14 +412,13 @@ class Router:
         lost = [d for d, i in self._where.items() if i == idx]
         for d in lost:
             del self._where[d]
-        self.lost_devices.extend(lost)
         self.evictions += 1
         # the worker may be gone without a goodbye: dump the router-side
         # shadow ring so the loss report carries the replica's last N rounds
         dump = self.flight[idx].dump()
         self.flight_dumps[idx] = dump
         log.warning(
-            "evicting replica %d (%s): lost devices %s; flight recorder "
+            "evicting replica %d (%s): streams down %s; flight recorder "
             "holds %d round(s)",
             idx, getattr(replica, "flavor", "local"), lost, len(dump),
         )
@@ -341,10 +426,177 @@ class Router:
             log.warning("  flight[replica %d]: %s", idx, row)
         telemetry.count("router_evictions_total")
         replica.close()
+        if self.faults.respawn or self.faults.recover_streams:
+            recovered = self._recover(idx, lost)
+            lost = [d for d in lost if d not in recovered]
+        for d in lost:
+            self._shed(d)
         if not self.alive:
             raise RuntimeError(
                 f"all {len(self.replicas)} replicas evicted; cluster has no capacity"
             )
+
+    def _shed(self, dev: int) -> None:
+        """Give up on one stream: record the loss and drop its shadows."""
+        self.lost_devices.append(dev)
+        self.shed_streams += 1
+        for shadow in (
+            self._prompts, self._admit_now, self._committed,
+            self._last_submit, self._round_seq, self._last_k,
+        ):
+            shadow.pop(dev, None)
+        telemetry.count("router_shed_streams_total")
+
+    # -- recovery: respawn + device replay ------------------------------------
+
+    def _recover(self, idx: int, lost: List[int]) -> Set[int]:
+        """Post-eviction recovery: revive the dead replica (policy
+        permitting), then re-place each lost stream by device replay.
+        Returns the devices that made it back."""
+        p = self.faults
+        if p.respawn:
+            self._try_revive(idx)
+        if not self.alive:
+            if p.respawn:
+                self._revive_until_deadline()  # raises when the fleet is gone
+            else:
+                return set()
+        if not p.recover_streams or not lost:
+            return set()
+        recovered: Set[int] = set()
+        with telemetry.span("router_recovery_seconds"):
+            for dev in lost:
+                if self._readmit(dev):
+                    recovered.add(dev)
+                    self.recovered_streams += 1
+                    telemetry.count("router_recovered_streams_total")
+                else:
+                    log.warning("device %d could not be re-placed; shedding", dev)
+        log.info(
+            "recovered %d/%d stream(s) after evicting replica %d",
+            len(recovered), len(lost), idx,
+        )
+        return recovered
+
+    def _readmit(self, dev: int) -> bool:
+        """Re-place one orphaned stream by DEVICE REPLAY: admit the original
+        prompt, force_extend the committed history in runs of <= k_max+1
+        (the engine's fallback-run ceiling), then re-submit the round that
+        was in flight.  The rebuilt engine state matches the fault-free
+        stream exactly, so greedy continuation is token-identical."""
+        prompt = self._prompts.get(dev)
+        if prompt is None:
+            return False
+        committed = list(self._committed.get(dev, ()))
+        stream = self.admit(dev, prompt, self._admit_now.get(dev, 0.0))
+        if stream is None:
+            return False  # every surviving pool is full: shed
+        run = self.k_max + 1
+        try:
+            idx = self._where[dev]
+            for i in range(0, len(committed), run):
+                chunk = np.asarray(committed[i : i + run], np.int32)
+                with self._guard(idx):
+                    self.replicas[idx].force_extend(dev, chunk)
+            pending = self._last_submit.get(dev)
+            if pending is not None:
+                tokens, t_sub, draft_q = pending
+                with self._guard(self._where[dev]):
+                    self.replicas[self._where[dev]].submit(
+                        dev, tokens, t_sub, draft_q=draft_q
+                    )
+        except ConnectionError:
+            # the target died mid-replay; ITS eviction recursed into
+            # recovery, so the stream is either fully re-placed or lost
+            return dev in self._where
+        return True
+
+    def _try_revive(self, idx: int, *, wait: bool = True) -> bool:
+        """One supervised revive attempt: seeded-jitter backoff (skipped on
+        the periodic-redial path, which is paced by ``redial_interval_s``),
+        a ``max_respawns`` budget, and the replica's own revive() doing the
+        respawn-or-redial + re-place + re-warmup."""
+        replica = self.replicas[idx]
+        if not replica.dead:
+            return True
+        if not getattr(replica, "can_revive", lambda: False)():
+            return False
+        p = self.faults
+        n = self._respawn_count.get(idx, 0)
+        if n >= p.max_respawns:
+            return False
+        bo = self._backoff.get(idx)
+        if bo is None:
+            bo = self._backoff[idx] = Backoff(
+                p.backoff_base_s, p.backoff_max_s, p.backoff_jitter, seed=idx
+            )
+        if wait:
+            time.sleep(bo.attempt())
+        self._respawn_count[idx] = n + 1
+        try:
+            with telemetry.span("router_respawn_seconds"):
+                replica.revive()
+        except Exception as e:
+            log.warning(
+                "revive of replica %d failed (attempt %d/%d): %s",
+                idx, n + 1, p.max_respawns, e,
+            )
+            return False
+        bo.reset()
+        self.respawns += 1
+        telemetry.count("router_respawns_total")
+        log.info("replica %d revived (respawn %d/%d)", idx, n + 1, p.max_respawns)
+        return True
+
+    def _revive_until_deadline(self) -> None:
+        """Every replica is dead but respawn is on: keep trying to bring one
+        back until ``all_dead_deadline_s`` runs out, then raise."""
+        p = self.faults
+        deadline = time.monotonic() + p.all_dead_deadline_s
+        while time.monotonic() < deadline:
+            eligible = [
+                i
+                for i, r in enumerate(self.replicas)
+                if r.dead
+                and getattr(r, "can_revive", lambda: False)()
+                and self._respawn_count.get(i, 0) < p.max_respawns
+            ]
+            if not eligible:
+                break
+            for i in eligible:
+                if self._try_revive(i):
+                    return
+        raise RuntimeError(
+            f"all {len(self.replicas)} replicas evicted and none revived within "
+            f"{p.all_dead_deadline_s:.1f}s; cluster has no capacity"
+        )
+
+    def _maybe_redial(self) -> None:
+        """Step-loop supervision tick: periodically retry dead replicas that
+        can come back (dial-only peers whose partition may have healed,
+        spawned workers under their respawn budget)."""
+        if not self.faults.respawn:
+            return
+        t = time.monotonic()
+        for i, r in enumerate(self.replicas):
+            if not r.dead:
+                continue
+            if not getattr(r, "can_revive", lambda: False)():
+                continue
+            if self._respawn_count.get(i, 0) >= self.faults.max_respawns:
+                continue
+            if t < self._redial_at.get(i, 0.0):
+                continue
+            self._redial_at[i] = t + self.faults.redial_interval_s
+            self._try_revive(i, wait=False)
+
+    def _check_suspects(self) -> None:
+        """Evict replicas the heartbeat monitor marked suspect (they stopped
+        answering Pings); eviction runs the normal recovery path."""
+        for i, r in enumerate(self.replicas):
+            if not r.dead and getattr(r, "suspect", False):
+                log.warning("replica %d failed heartbeat; evicting", i)
+                self._evict(i)
 
     def _guard(self, idx: int):
         """Context for one replica RPC: ReplicaGone -> evict, re-raised so
@@ -373,6 +625,9 @@ class Router:
             if stream is None:  # policy raced a concurrent admit; treat as full
                 return None
             self._where[device_id] = idx
+            self._prompts[device_id] = np.asarray(prompt, np.int32).reshape(-1)
+            self._admit_now[device_id] = now
+            self._committed.setdefault(device_id, [])
             log.info(
                 "placed device %d on replica %d (%s, %d free slot(s) left)",
                 device_id, idx, self.replicas[idx].flavor, self.replicas[idx].n_free,
@@ -381,8 +636,11 @@ class Router:
 
     def retire(self, device_id: int) -> DeviceStream:
         idx = self._where.pop(device_id)
-        self._round_seq.pop(device_id, None)
-        self._last_k.pop(device_id, None)
+        for shadow in (
+            self._round_seq, self._last_k, self._prompts,
+            self._admit_now, self._committed, self._last_submit,
+        ):
+            shadow.pop(device_id, None)
         with self._guard(idx):
             stream = self.replicas[idx].retire(device_id)
         if self.migrate_on_retire:
@@ -468,17 +726,51 @@ class Router:
         now: float,
         draft_q: Optional[np.ndarray] = None,
     ) -> None:
-        self._last_k[device_id] = int(np.asarray(draft_tokens).shape[0])
-        with self._guard(self._where[device_id]):
-            self._replica(device_id).submit(device_id, draft_tokens, now, draft_q=draft_q)
+        tokens = np.asarray(draft_tokens)
+        self._last_k[device_id] = int(tokens.shape[0])
+        self._last_submit[device_id] = (tokens, now, draft_q)
+        idx = self._where[device_id]
+        try:
+            self.replicas[idx].submit(device_id, tokens, now, draft_q=draft_q)
+        except ConnectionError:
+            self._evict(idx)
+            if device_id not in self._where:
+                raise  # the stream was shed with the replica
+            # recovery re-placed the stream AND re-submitted this round (it
+            # was already in _last_submit), so the caller's submit succeeded
 
     def cancel_request(self, device_id: int) -> bool:
-        with self._guard(self._where[device_id]):
-            return self._replica(device_id).cancel_request(device_id)
+        idx = self._where[device_id]
+        try:
+            ok = self.replicas[idx].cancel_request(device_id)
+        except ConnectionError:
+            self._evict(idx)
+            if device_id not in self._where:
+                raise
+            # recovered elsewhere (pending round re-submitted); re-cancel it
+            with self._guard(self._where[device_id]):
+                ok = self.replicas[self._where[device_id]].cancel_request(device_id)
+        if ok:
+            self._last_submit.pop(device_id, None)
+        return ok
 
     def force_extend(self, device_id: int, tokens: np.ndarray) -> int:
-        with self._guard(self._where[device_id]):
-            return self._replica(device_id).force_extend(device_id, tokens)
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        idx = self._where[device_id]
+        try:
+            prev = self.replicas[idx].force_extend(device_id, toks)
+        except ConnectionError:
+            self._evict(idx)
+            if device_id not in self._where:
+                raise
+            # recovered (committed shadow did NOT include these tokens, so
+            # the replay stopped short of them); apply them on the new home
+            with self._guard(self._where[device_id]):
+                prev = self.replicas[self._where[device_id]].force_extend(
+                    device_id, toks
+                )
+        self._committed.setdefault(device_id, []).extend(int(t) for t in toks)
+        return prev
 
     def has_inflight(self, device_id: int) -> bool:
         return device_id in self._where and self._replica(device_id).has_inflight(device_id)
@@ -501,7 +793,19 @@ class Router:
         feedback stays replica-local — that is the congestion signal for the
         streams riding that replica.  A worker that fails mid-step is
         evicted and the surviving replicas' verdicts are still returned.
+
+        This is also the supervision tick: the chaos schedule fires against
+        the step counter, suspect (heartbeat-silent) replicas are evicted,
+        and dead replicas get their periodic redial attempt.
         """
+        self.steps_taken += 1
+        if self.chaos is not None:
+            self.chaos.on_step(self.steps_taken)
+        if self._hb is None and self.faults.heartbeat_interval_s > 0:
+            self._hb = _HeartbeatMonitor(self, self.faults)
+            self._hb.start()
+        self._check_suspects()
+        self._maybe_redial()
         remote_idx = [
             i
             for i, r in enumerate(self.replicas)
@@ -518,18 +822,24 @@ class Router:
                     i: self._pool.submit(self.replicas[i].step, now) for i in remote_idx
                 }
             results: Dict[int, Optional[List[Verdict]]] = {}
+            failed: List[int] = []
             for i, replica in enumerate(self.replicas):
                 if replica.dead or i in futures:
                     continue
                 try:
                     results[i] = replica.step(now)
                 except ConnectionError:
-                    self._evict(i)
+                    failed.append(i)
             for i, fut in futures.items():
                 try:
                     results[i] = fut.result()
                 except ConnectionError:
-                    self._evict(i)
+                    failed.append(i)
+            # evictions run AFTER every step future resolved: recovery may
+            # re-admit streams onto surviving replicas, and their control
+            # channels must be idle first (they are not thread-safe)
+            for i in failed:
+                self._evict(i)
         verdicts: List[Verdict] = []
         for i in sorted(results):
             out = results[i]
@@ -555,6 +865,13 @@ class Router:
                         replica=i,
                     )
                 )
+                # device-replay shadow: the delivered verdict's tokens are
+                # committed history now, and its round is no longer in flight
+                if len(v.tokens):
+                    self._committed.setdefault(v.device_id, []).extend(
+                        int(t) for t in v.tokens
+                    )
+                self._last_submit.pop(v.device_id, None)
             verdicts.extend(out)
         return verdicts or None
 
@@ -579,6 +896,9 @@ class Router:
     def drain(self) -> None:
         """Ask every remote worker to exit (reaping spawned processes);
         local replicas are no-ops.  Idempotent."""
+        if self._hb is not None:
+            self._hb.stop()
+            self._hb = None
         for r in self.replicas:
             if not r.dead:
                 r.drain()
@@ -613,16 +933,73 @@ class Router:
         flight = [ev.to_json() for ring in self.flight.values() for ev in ring.events()]
         flight.sort(key=lambda e: e["t"])
         out = {"snapshot": telemetry.registry().snapshot(), "flight": flight}
-        workers = {
-            str(i): r.last_telemetry
-            for i, r in enumerate(self.replicas)
-            if getattr(r, "last_telemetry", None)
-        }
+        workers = {}
+        for i, r in enumerate(self.replicas):
+            try:
+                payload = getattr(r, "last_telemetry", None)
+            except ConnectionError:  # chaos-killed local: nothing to report
+                payload = None
+            if payload:
+                workers[str(i)] = payload
         if workers:
             out["workers"] = workers
         if self.flight_dumps:
             out["evicted"] = {str(i): d for i, d in self.flight_dumps.items()}
+        if self.evictions or self.respawns or self.shed_streams:
+            out["supervision"] = {
+                "evictions": self.evictions,
+                "respawns": self.respawns,
+                "recovered_streams": self.recovered_streams,
+                "shed_streams": self.shed_streams,
+                "lost_devices": list(self.lost_devices),
+            }
         return out
+
+
+class _HeartbeatMonitor(threading.Thread):
+    """Background Ping loop over every remote replica's dedicated heartbeat
+    channel: ``heartbeat_misses`` consecutive unanswered Pings mark the
+    replica ``suspect``, and the Router evicts suspects at the top of its
+    next step — a partitioned or SIGSTOPped worker is detected in seconds
+    instead of waiting out the 120 s control-RPC timeout.  Replicas without
+    a ``ping`` method (locals) are skipped."""
+
+    def __init__(self, router: Router, policy: Any):
+        super().__init__(daemon=True, name="router-heartbeat")
+        self.router = router
+        self.policy = policy
+        self.misses: Dict[int, int] = {}
+        self._stopped = threading.Event()
+
+    def stop(self) -> None:
+        self._stopped.set()
+
+    def run(self) -> None:
+        while not self._stopped.wait(self.policy.heartbeat_interval_s):
+            self.sweep()
+
+    def sweep(self) -> None:
+        """One pass over the fleet (separated from run() for tests)."""
+        for i, r in enumerate(self.router.replicas):
+            ping = getattr(r, "ping", None)
+            if r.dead or getattr(r, "suspect", False) or ping is None:
+                continue
+            try:
+                ok = ping(timeout=self.policy.heartbeat_timeout_s)
+            except Exception:
+                ok = False
+            if ok:
+                self.misses[i] = 0
+                continue
+            self.misses[i] = self.misses.get(i, 0) + 1
+            telemetry.count("router_heartbeat_misses_total")
+            if self.misses[i] >= self.policy.heartbeat_misses:
+                log.warning(
+                    "replica %d missed %d consecutive heartbeat(s); marking suspect",
+                    i, self.misses[i],
+                )
+                r.suspect = True
+                self.misses[i] = 0
 
 
 class _EvictOnGone:

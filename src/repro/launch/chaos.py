@@ -1,0 +1,175 @@
+"""``repro chaos`` — run a deterministic fault schedule against a fleet.
+
+A thin launcher over the unified ``repro.api`` front door: build a ServeSpec
+whose ``faults`` schedule kills / hangs / flaps replicas at fixed rounds,
+serve it, and report what the supervision layer did about it — evictions,
+respawns, recovered vs shed streams — plus (``--check``, default on) a
+token-identity verdict against the fault-free twin of the same spec.
+
+    repro chaos                                   # 2 replicas, kill #1 at
+                                                  # round 5, recovery on
+    repro chaos --kill 1:5 --kill 0:9             # two kills
+    repro chaos --no-recover                      # today's evict-only path
+    repro chaos --flavor remote                   # real worker processes
+    repro chaos --spec chaos.json --json out.json # from / to artifacts
+
+Exit status is non-zero when --check finds divergence, so CI can gate on a
+committed chaos schedule staying token-identical under recovery.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional
+
+from repro.api import ClusterSpec, FaultSpec, ModelSpec, ServeSpec, System
+
+
+def _parse_kill(text: str) -> dict:
+    """``REPLICA:ROUND`` (or ``kind:REPLICA:ROUND``) -> FaultEvent dict."""
+    parts = text.split(":")
+    if len(parts) == 2:
+        kind, replica, rnd = "kill", parts[0], parts[1]
+    elif len(parts) == 3:
+        kind, replica, rnd = parts
+    else:
+        raise argparse.ArgumentTypeError(
+            f"bad fault {text!r} (want REPLICA:ROUND or KIND:REPLICA:ROUND)"
+        )
+    return {"kind": kind, "replica": int(replica), "round": int(rnd)}
+
+
+def spec_from_args(args) -> ServeSpec:
+    events = tuple(args.kill) if args.kill else ({"kind": "kill", "replica": 1, "round": 5},)
+    faults_policy = {
+        "respawn": args.recover,
+        "recover_streams": args.recover,
+        "backoff_base_s": args.backoff,
+        "backoff_max_s": max(args.backoff * 8, args.backoff),
+    }
+    replicas: object = args.replicas
+    if args.flavor == "remote":
+        replicas = [{"flavor": "remote"} for _ in range(args.replicas)]
+    return ServeSpec(
+        backend="cluster",
+        model=ModelSpec(vocab_size=128, target_layers=2, draft_layers=1,
+                        draft_noise=0.03),
+        cluster=ClusterSpec(replicas=replicas, faults=faults_policy),
+        devices=args.devices,
+        max_new=args.max_new,
+        k_max=4,
+        faults=FaultSpec(seed=args.seed, events=events),
+        telemetry=True,
+    )
+
+
+def run_chaos(spec: ServeSpec, *, check: bool = True) -> dict:
+    """Serve the chaos spec, print the supervision report, return the
+    BENCH-shaped record.  Raises AssertionError on --check divergence."""
+    fault_free = dataclasses.replace(spec, faults=FaultSpec())
+    system = System.build(spec)
+    kinds = [f"{e.kind}@r{e.round}->replica{e.replica}" for e in spec.faults.events]
+    print(
+        f"chaos: {spec.cluster.n_replicas} replicas, {spec.devices} devices, "
+        f"schedule [{', '.join(kinds)}] (seed {spec.faults.seed}), "
+        f"recovery {'ON' if spec.cluster.faults.recover_streams else 'OFF'}"
+    )
+    t0 = time.time()
+    try:
+        result = system.serve()
+    except BaseException:
+        system.close()
+        raise
+    wall = time.time() - t0
+    router = system.engine
+    fired = list(getattr(getattr(router, "chaos", None), "fired", []) or [])
+    report = {
+        "fired": [{"round": r, "kind": k, "replica": i} for r, k, i in fired],
+        "evictions": getattr(router, "evictions", 0),
+        "respawns": getattr(router, "respawns", 0),
+        "recovered_streams": getattr(router, "recovered_streams", 0),
+        "shed_streams": getattr(router, "shed_streams", 0),
+        "lost_devices": sorted(result.lost_devices),
+        "committed_tokens": result.total_tokens,
+        "wall_seconds": wall,
+        "tokens_per_s": result.total_tokens / max(wall, 1e-9),
+    }
+    system.close()
+    for r, k, i in fired:
+        print(f"  fired {k} on replica {i} at round {r}")
+    print(
+        f"supervision: {report['evictions']} evictions, "
+        f"{report['respawns']} respawns, "
+        f"{report['recovered_streams']} streams recovered, "
+        f"{report['shed_streams']} shed {report['lost_devices']}"
+    )
+    print(
+        f"served {result.total_tokens} tokens in {wall:.1f}s "
+        f"({report['tokens_per_s']:.1f} tok/s)"
+    )
+    if check:
+        ref = System.build(fault_free, models=system.models).serve()
+        if spec.cluster.faults.recover_streams:
+            match = ref.outputs == result.outputs
+            print(f"fault-free token identity: {'OK' if match else 'MISMATCH'}")
+            assert match, "recovered run must be token-identical to fault-free"
+        else:
+            # without recovery shed streams end early; survivors must still
+            # match and every shed stream must be a clean prefix
+            ok = True
+            for s in result.sessions:
+                ref_toks = ref.outputs[s.device_id]
+                ok &= (s.tokens == ref_toks if not s.shed
+                       else ref_toks[: len(s.tokens)] == s.tokens)
+            print(f"survivor identity + shed prefixes: {'OK' if ok else 'MISMATCH'}")
+            assert ok, "shed streams must end as clean prefixes of fault-free"
+        report["check"] = "ok"
+    return {"spec": spec.to_json(), "result": result.to_json(), "chaos": report}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro chaos",
+        description="deterministic fault injection against a replica fleet",
+    )
+    ap.add_argument("--spec", type=str, default="",
+                    help="ServeSpec JSON artifact (its faults schedule runs as-is)")
+    ap.add_argument("--kill", action="append", type=_parse_kill, default=None,
+                    metavar="REPLICA:ROUND",
+                    help="fault event (repeatable); KIND:REPLICA:ROUND for "
+                         "hang/drop/delay/flap")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--flavor", choices=("local", "remote"), default="local",
+                    help="remote = spawned worker processes (real SIGKILL)")
+    ap.add_argument("--recover", action=argparse.BooleanOptionalAction, default=True,
+                    help="respawn + device-replay recovery (off = evict-only)")
+    ap.add_argument("--backoff", type=float, default=0.05,
+                    help="respawn backoff base seconds")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action=argparse.BooleanOptionalAction, default=True,
+                    help="compare against the fault-free twin run")
+    ap.add_argument("--json", type=str, default="",
+                    help="write the BENCH artifact (spec + result + chaos report)")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    args = build_parser().parse_args(argv)
+    if args.spec:
+        with open(args.spec) as f:
+            spec = ServeSpec.from_json(f.read())
+    else:
+        spec = spec_from_args(args)
+    record = run_chaos(spec, check=args.check)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, default=str)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

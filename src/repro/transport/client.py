@@ -16,6 +16,13 @@
               client never mutates draft-cache state until the server has
               arbitrated, so client and server token streams can never
               diverge.
+  link loss   a ConnectionError mid-stream (peer closed, socket died) no
+              longer kills the session coroutine: with a ``reconnect``
+              hook installed the client redials under a bounded, seeded
+              jittered backoff, re-Hellos (the server resends Admit for an
+              admitted stream), and resyncs the open round through the
+              SAME Fallback arbitration as a timeout — so a flapped link
+              converges exactly like a slow one.
   adaptive k  with ``kctl="adaptive"`` the client feeds each Verdict's
               accept_rate/queue_depth feedback to a bounded AIMD controller
               (serving/speclen.py) and caps the next round's draft length
@@ -54,6 +61,7 @@ class ClientStats:
     drafted: int = 0  # device-side draft() tokens (excludes ahead-drafts)
     late_verdicts: int = 0
     hello_retries: int = 0
+    reconnects: int = 0  # mid-stream link deaths survived by redialing
     bytes_tx: int = 0
     bytes_rx: int = 0
     frames_tx: int = 0
@@ -115,6 +123,8 @@ class EdgeClient:
         kctl_kw: Optional[dict] = None,
         seed: int = 0,
         on_round: Optional[Callable[[np.ndarray, int, int, bool], None]] = None,
+        reconnect: Optional[Callable[[], "asyncio.Future"]] = None,
+        max_reconnects: int = 4,
     ):
         self.kit = kit
         self.device_id = device_id
@@ -139,6 +149,13 @@ class EdgeClient:
         # (committed_tokens, n_drafted, n_accepted, fallback) as each round
         # resolves — fallback rounds pass the locally-released tokens
         self.on_round = on_round
+        # mid-stream link recovery: an async callable returning a FRESH
+        # Endpoint already attached to the server (None = legacy behavior,
+        # ConnectionError escapes).  Redials are bounded by max_reconnects
+        # and paced by a seeded jittered backoff so chaos runs replay.
+        self.reconnect_cb = reconnect
+        self.max_reconnects = max_reconnects
+        self._backoff = None
         self.seed = seed
         self.stats = ClientStats(device_id=device_id)
         self.device: Optional[EdgeDevice] = None
@@ -161,6 +178,49 @@ class EdgeClient:
         if frame is None:
             raise ConnectionError(f"device {self.device_id}: server closed the link")
         return codec.decode_frame(frame)[0]
+
+    async def _redial(self, cause: BaseException) -> None:
+        """The link died mid-stream: dial a fresh endpoint (bounded, seeded
+        jittered backoff) and re-Hello.  The server answers a duplicate
+        Hello for an admitted stream by resending Admit — re-admission is
+        state-free — after which the caller resyncs any open round through
+        the Fallback arbitration path.  The new link is live (and mapped in
+        the server's connection table) BEFORE the dead one is closed, so
+        the server never mistakes the redial for a device that vanished."""
+        if self.reconnect_cb is None:
+            raise cause
+        if self._backoff is None:
+            # lazy import: transport is a lower layer than cluster, and only
+            # reconnect-enabled clients pay for the dependency
+            from repro.cluster.faults import Backoff
+
+            self._backoff = Backoff(
+                base_s=0.05, max_s=1.0, jitter=0.1, seed=self.device_id
+            )
+        while True:
+            if self.stats.reconnects >= self.max_reconnects:
+                raise ProtocolError(
+                    f"device {self.device_id}: link lost and "
+                    f"{self.max_reconnects} reconnects exhausted"
+                ) from cause
+            await asyncio.sleep(self._backoff.attempt())
+            self.stats.reconnects += 1
+            telemetry.count("client_reconnects_total")
+            try:
+                fresh = await self.reconnect_cb()
+                old = self.ep
+                self.ep = fresh
+                await self._admission()
+            except ConnectionError:
+                continue
+            self._fold_link_stats(old)
+            old.close()
+            return
+
+    def _fold_link_stats(self, ep: Endpoint) -> None:
+        """Bank a dead endpoint's wire counters before abandoning it."""
+        for f in ("bytes_tx", "bytes_rx", "frames_tx", "frames_rx", "frames_dropped"):
+            setattr(self.stats, f, getattr(self.stats, f) + getattr(ep.stats, f))
 
     # -- protocol phases -----------------------------------------------------
 
@@ -189,12 +249,24 @@ class EdgeClient:
         fallback resync."""
         sent_fallback = False
         for _ in range(self.max_retries):
-            msg = await self._recv(self.verify_timeout)
+            try:
+                msg = await self._recv(self.verify_timeout)
+            except ConnectionError as e:
+                # link died while the round was in flight: redial, then let
+                # the same Fallback arbitration below resolve the round —
+                # the server either resends the stored verdict or confirms
+                # a resync, exactly as if the verdict had merely been slow
+                await self._redial(e)
+                msg = None
             if msg is None:
-                # round timed out: ask the server to resync on our local
-                # release; state stays untouched until the server arbitrates
+                # round timed out (or the link was just re-dialed): ask the
+                # server to resync on our local release; state stays
+                # untouched until the server arbitrates
                 sent_fallback = True
-                await self._send(codec.Fallback(self.device_id, seq, draft_tokens))
+                try:
+                    await self._send(codec.Fallback(self.device_id, seq, draft_tokens))
+                except ConnectionError as e:
+                    await self._redial(e)
                 continue
             if isinstance(msg, codec.Verdict):
                 if msg.seq == seq:
@@ -241,9 +313,15 @@ class EdgeClient:
         await throttle(len(tokens))
         while True:
             q = dev.pending_q if self.qmode != "none" else None
-            await self._send(
-                codec.DraftPacket(self.device_id, seq, tokens, draft_q=q, qmode=self.qmode)
-            )
+            try:
+                await self._send(
+                    codec.DraftPacket(self.device_id, seq, tokens, draft_q=q, qmode=self.qmode)
+                )
+            except ConnectionError as e:
+                # link died between rounds: redial and resend this round's
+                # packet on the fresh link (the server dedups by seq)
+                await self._redial(e)
+                continue
             self.stats.rounds += 1
             # log what actually went on the wire: under pipelining a verdict
             # may shrink k after the next proposal was already pre-drafted,
@@ -305,18 +383,17 @@ class EdgeClient:
                 tokens = dev.draft(k=k)
                 draft_s = loop.time() - t_d
                 await throttle(len(tokens))
-        await self._send(codec.Close(self.device_id))
+        try:
+            await self._send(codec.Close(self.device_id))
+        except ConnectionError:
+            pass  # best effort; the server reclaims the slot on conn loss
         self.ep.close()
         self.stats.committed = min(len(dev.committed), self.max_new)
         self.stats.pipeline_hits = dev.pipeline_hits
         self.stats.pipeline_misses = dev.pipeline_misses
         self.stats.fallback_tokens = dev.fallback_tokens
         self.stats.drafted = dev.drafted
-        self.stats.bytes_tx = self.ep.stats.bytes_tx
-        self.stats.bytes_rx = self.ep.stats.bytes_rx
-        self.stats.frames_tx = self.ep.stats.frames_tx
-        self.stats.frames_rx = self.ep.stats.frames_rx
-        self.stats.frames_dropped = self.ep.stats.frames_dropped
+        self._fold_link_stats(self.ep)  # += : earlier links already banked
         self.stats.wall_seconds = asyncio.get_running_loop().time() - t0
         self.stats.k_final = self.kctl.k if self.kctl else self.kit.k_max
         self.stats.k_mean = float(sum(k_log) / len(k_log)) if k_log else 0.0

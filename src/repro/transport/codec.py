@@ -33,6 +33,16 @@ serialization of its KV pool row (bfloat16 rides the wire as raw uint16
 words — no float round-trip); ``ReplicaStats`` returns the uniform
 EngineStats record; ``Drain`` retires the worker.  Control payloads can
 carry whole KV rows, so the payload cap is far above the v2 data-plane one.
+
+v4 HARDENS the control plane for fault tolerance: every side-effectful
+request (admit/submit/step/retire/cancel/force-extend/export/import) now
+carries a per-channel ``seq`` id, and the worker keeps a bounded replay
+cache keyed by (msg type, device, seq) — a retried frame after a reconnect
+returns the ORIGINAL reply instead of double-applying the side effect, so a
+one-shot retry over a flapped link is safe.  ``Ping``/``Pong`` add a
+lightweight heartbeat (echoed seq + sender timestamp) so a partitioned or
+hung peer is detected in seconds rather than at the 120 s RPC timeout.
+``seq=0`` means "no replay protection" (v3-style fire-once semantics).
 """
 from __future__ import annotations
 
@@ -45,7 +55,7 @@ import numpy as np
 from repro.quant.quantize import QTensor, dequantize, quantize
 
 MAGIC = b"SL"
-VERSION = 3  # v3: cluster control-plane frames (remote replica workers)
+VERSION = 4  # v4: per-RPC seq ids (replay-safe retries) + Ping/Pong heartbeat
 _HEADER = struct.Struct(">2sBBI")
 HEADER_SIZE = _HEADER.size
 # v3 control frames carry serialized KV rows (ExportStream/ImportStream), so
@@ -86,6 +96,9 @@ T_WARMUP_REPLY = 29
 T_DRAIN = 30
 T_DRAIN_ACK = 31
 T_ERROR = 32
+# v4 heartbeat
+T_PING = 33
+T_PONG = 34
 
 QMODES = ("none", "f32", "f16", "int8")
 
@@ -204,11 +217,14 @@ class PlaceAck:
 @dataclasses.dataclass(frozen=True)
 class AdmitRequest:
     """Router -> worker: place a stream (prompt prefilled worker-side).
-    ``now`` is the ROUTER's clock — the worker never consults its own."""
+    ``now`` is the ROUTER's clock — the worker never consults its own.
+    ``seq`` (v4, all side-effectful requests) keys the worker's replay
+    cache: a retried frame with the same seq returns the original reply."""
 
     device_id: int
     prompt: np.ndarray  # (P,) int32
     now: float = 0.0
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,6 +244,7 @@ class SubmitRequest:
     now: float = 0.0
     draft_q: Optional[np.ndarray] = None
     qmode: str = "none"
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,6 +257,7 @@ class StepRequest:
     """Router -> worker: run one engine.step at the router's clock."""
 
     now: float
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,11 +288,13 @@ class StepReply:
 @dataclasses.dataclass(frozen=True)
 class RetireRequest:
     device_id: int
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class CancelRequest:
     device_id: int
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -289,6 +309,7 @@ class ForceExtendRequest:
 
     device_id: int
     tokens: np.ndarray  # (n,) int32
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -347,6 +368,7 @@ class ExportStream:
     """Router -> worker: detach a quiescent stream for migration."""
 
     device_id: int
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -359,6 +381,7 @@ class ImportStream:
     """Router -> worker: adopt a stream exported elsewhere (row populated)."""
 
     stream: StreamState
+    seq: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -410,6 +433,24 @@ class ErrorReply:
     message: str
 
 
+@dataclasses.dataclass(frozen=True)
+class Ping:
+    """Heartbeat probe (v4).  ``t`` is the SENDER's monotonic timestamp,
+    echoed back in the Pong so the sender computes RTT without clock sync.
+    Side-effect free: never enters the replay cache, safe on any channel."""
+
+    seq: int
+    t: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Pong:
+    """Heartbeat reply: echoes the Ping's seq and timestamp."""
+
+    seq: int
+    t: float = 0.0
+
+
 Message = Union[
     Hello, Admit, DraftPacket, Verdict, Fallback, FallbackAck, Close,
     PlaceReplica, PlaceAck, AdmitRequest, AdmitReply, SubmitRequest,
@@ -417,6 +458,7 @@ Message = Union[
     CancelRequest, CancelReply, ForceExtendRequest, ForceExtendReply,
     ExportStream, ExportReply, ImportStream, ImportAck, StatsRequest,
     ReplicaStats, WarmupRequest, WarmupReply, Drain, DrainAck, ErrorReply,
+    Ping, Pong,
 ]
 
 
@@ -725,7 +767,7 @@ def encode_frame(msg: Message) -> bytes:
         _put_str(out, msg.error)
     elif isinstance(msg, AdmitRequest):
         mtype = T_ADMIT_REQ
-        out.append(struct.pack(">Id", msg.device_id, float(msg.now)))
+        out.append(struct.pack(">IId", msg.seq, msg.device_id, float(msg.now)))
         _put_tokens(out, msg.prompt)
     elif isinstance(msg, AdmitReply):
         mtype = T_ADMIT_REPLY
@@ -734,7 +776,7 @@ def encode_frame(msg: Message) -> bytes:
         )
     elif isinstance(msg, SubmitRequest):
         mtype = T_SUBMIT
-        out.append(struct.pack(">Id", msg.device_id, float(msg.now)))
+        out.append(struct.pack(">IId", msg.seq, msg.device_id, float(msg.now)))
         _put_tokens(out, msg.tokens)
         _encode_q(out, msg.draft_q, msg.qmode)
     elif isinstance(msg, SubmitAck):
@@ -742,7 +784,7 @@ def encode_frame(msg: Message) -> bytes:
         out.append(struct.pack(">I", msg.device_id))
     elif isinstance(msg, StepRequest):
         mtype = T_STEP
-        out.append(struct.pack(">d", float(msg.now)))
+        out.append(struct.pack(">Id", msg.seq, float(msg.now)))
     elif isinstance(msg, StepReply):
         mtype = T_STEP_REPLY
         if len(msg.verdicts) > 0xFFFF:
@@ -773,31 +815,32 @@ def encode_frame(msg: Message) -> bytes:
             _put_tokens(out, v.tokens)
     elif isinstance(msg, RetireRequest):
         mtype = T_RETIRE
-        out.append(struct.pack(">I", msg.device_id))
+        out.append(struct.pack(">II", msg.seq, msg.device_id))
     elif isinstance(msg, RetireReply):
         mtype = T_RETIRE_REPLY
         _put_stream_state(out, msg.stream)
     elif isinstance(msg, CancelRequest):
         mtype = T_CANCEL
-        out.append(struct.pack(">I", msg.device_id))
+        out.append(struct.pack(">II", msg.seq, msg.device_id))
     elif isinstance(msg, CancelReply):
         mtype = T_CANCEL_REPLY
         out.append(struct.pack(">IB", msg.device_id, int(msg.ok)))
     elif isinstance(msg, ForceExtendRequest):
         mtype = T_FORCE_EXTEND
-        out.append(struct.pack(">I", msg.device_id))
+        out.append(struct.pack(">II", msg.seq, msg.device_id))
         _put_tokens(out, msg.tokens)
     elif isinstance(msg, ForceExtendReply):
         mtype = T_FORCE_EXTEND_REPLY
         out.append(struct.pack(">Ii", msg.device_id, msg.next_prev))
     elif isinstance(msg, ExportStream):
         mtype = T_EXPORT
-        out.append(struct.pack(">I", msg.device_id))
+        out.append(struct.pack(">II", msg.seq, msg.device_id))
     elif isinstance(msg, ExportReply):
         mtype = T_EXPORT_REPLY
         _put_stream_state(out, msg.stream)
     elif isinstance(msg, ImportStream):
         mtype = T_IMPORT
+        out.append(struct.pack(">I", msg.seq))
         _put_stream_state(out, msg.stream)
     elif isinstance(msg, ImportAck):
         mtype = T_IMPORT_ACK
@@ -822,6 +865,12 @@ def encode_frame(msg: Message) -> bytes:
     elif isinstance(msg, ErrorReply):
         mtype = T_ERROR
         _put_str(out, msg.message)
+    elif isinstance(msg, Ping):
+        mtype = T_PING
+        out.append(struct.pack(">Id", msg.seq, float(msg.t)))
+    elif isinstance(msg, Pong):
+        mtype = T_PONG
+        out.append(struct.pack(">Id", msg.seq, float(msg.t)))
     else:
         raise CodecError(f"cannot encode {type(msg).__name__}")
     payload = b"".join(out)
@@ -892,23 +941,26 @@ def decode_frame(buf: bytes) -> tuple:
             greedy=greedy, paged_attention=paged, error=r.string(),
         )
     elif mtype == T_ADMIT_REQ:
-        dev, now = r.u32(), r.f64()
-        msg = AdmitRequest(device_id=dev, prompt=r.tokens(), now=now)
+        seq, dev, now = r.u32(), r.u32(), r.f64()
+        msg = AdmitRequest(device_id=dev, prompt=r.tokens(), now=now, seq=seq)
     elif mtype == T_ADMIT_REPLY:
         msg = AdmitReply(
             device_id=r.u32(), ok=bool(r.u8()), slot=r.u32(), prev_token=r.i32()
         )
     elif mtype == T_SUBMIT:
-        dev, now = r.u32(), r.f64()
+        seq, dev, now = r.u32(), r.u32(), r.f64()
         toks = r.tokens()
         q, qmode = _decode_q(r)
         if q is not None and q.shape[0] != toks.shape[0]:
             raise CodecError(f"draft_q length {q.shape[0]} != token count {toks.shape[0]}")
-        msg = SubmitRequest(device_id=dev, tokens=toks, now=now, draft_q=q, qmode=qmode)
+        msg = SubmitRequest(
+            device_id=dev, tokens=toks, now=now, draft_q=q, qmode=qmode, seq=seq
+        )
     elif mtype == T_SUBMIT_ACK:
         msg = SubmitAck(device_id=r.u32())
     elif mtype == T_STEP:
-        msg = StepRequest(now=r.f64())
+        seq = r.u32()
+        msg = StepRequest(now=r.f64(), seq=seq)
     elif mtype == T_STEP_REPLY:
         depth, n_free, has_hint, hint = r.u32(), r.u32(), r.u8(), r.f64()
         verdicts = []
@@ -927,23 +979,28 @@ def decode_frame(buf: bytes) -> tuple:
             hint=hint if has_hint else None,
         )
     elif mtype == T_RETIRE:
-        msg = RetireRequest(device_id=r.u32())
+        seq = r.u32()
+        msg = RetireRequest(device_id=r.u32(), seq=seq)
     elif mtype == T_RETIRE_REPLY:
         msg = RetireReply(stream=r.stream_state())
     elif mtype == T_CANCEL:
-        msg = CancelRequest(device_id=r.u32())
+        seq = r.u32()
+        msg = CancelRequest(device_id=r.u32(), seq=seq)
     elif mtype == T_CANCEL_REPLY:
         msg = CancelReply(device_id=r.u32(), ok=bool(r.u8()))
     elif mtype == T_FORCE_EXTEND:
-        msg = ForceExtendRequest(device_id=r.u32(), tokens=r.tokens())
+        seq = r.u32()
+        msg = ForceExtendRequest(device_id=r.u32(), tokens=r.tokens(), seq=seq)
     elif mtype == T_FORCE_EXTEND_REPLY:
         msg = ForceExtendReply(device_id=r.u32(), next_prev=r.i32())
     elif mtype == T_EXPORT:
-        msg = ExportStream(device_id=r.u32())
+        seq = r.u32()
+        msg = ExportStream(device_id=r.u32(), seq=seq)
     elif mtype == T_EXPORT_REPLY:
         msg = ExportReply(stream=r.stream_state())
     elif mtype == T_IMPORT:
-        msg = ImportStream(stream=r.stream_state())
+        seq = r.u32()
+        msg = ImportStream(stream=r.stream_state(), seq=seq)
     elif mtype == T_IMPORT_ACK:
         msg = ImportAck(device_id=r.u32(), slot=r.u32())
     elif mtype == T_STATS:
@@ -960,6 +1017,10 @@ def decode_frame(buf: bytes) -> tuple:
         msg = DrainAck(streams_left=r.u32())
     elif mtype == T_ERROR:
         msg = ErrorReply(message=r.string())
+    elif mtype == T_PING:
+        msg = Ping(seq=r.u32(), t=r.f64())
+    elif mtype == T_PONG:
+        msg = Pong(seq=r.u32(), t=r.f64())
     else:
         raise CodecError(f"unknown message type {mtype}")
     r.done()

@@ -99,8 +99,15 @@ class TransportServer:
             msg, _ = codec.decode_frame(frame)
             device_id = msg.device_id
             await self._dispatch(msg, ep)
-        # peer vanished without a Close: reclaim the slot anyway
-        if device_id is not None and device_id in self.engine.streams:
+        # peer vanished without a Close: reclaim the slot — unless the
+        # device already redialed on a fresh endpoint (EdgeClient reconnect
+        # maps the new conn via Hello before closing the dead one), in
+        # which case this conn is just the corpse of the old link
+        if (
+            device_id is not None
+            and device_id in self.engine.streams
+            and self._conns.get(device_id) is ep
+        ):
             await self._retire(device_id)
 
     def _record(self, device_id: int, frame: bytes, seq: int) -> None:
@@ -110,8 +117,16 @@ class TransportServer:
 
     async def _send(self, device_id: int, frame: bytes) -> None:
         ep = self._conns.get(device_id)
-        if ep is not None:
+        if ep is None:
+            return
+        try:
             await ep.send(frame)
+        except ConnectionError:
+            # the device's link died under us: drop the frame rather than
+            # crash the stepper.  The reply is already in the last-reply
+            # table, so the client recovers it through Fallback arbitration
+            # after it redials.
+            pass
 
     async def _dispatch(self, msg, ep: Endpoint) -> None:
         dev = msg.device_id

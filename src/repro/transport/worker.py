@@ -40,6 +40,7 @@ import argparse
 import asyncio
 import json
 import logging
+from collections import OrderedDict
 from typing import List, Optional
 
 import jax.numpy as jnp
@@ -101,17 +102,51 @@ class WorkerCore:
     (the dialing side re-raises it); the connection survives, because a
     rejected RPC (say, an export refused while a request is in flight) is a
     protocol answer, not a worker crash.
+
+    v4 replay protection: side-effectful requests carrying a non-zero
+    ``seq`` are deduped through a bounded replay cache keyed by
+    (frame type, device, seq).  A router that lost the reply to a link flap
+    can reconnect and RESEND the same frame — the worker returns the
+    original reply instead of double-applying the admit/submit/step/retire,
+    which is what makes the dialing side's one-shot retry safe.
     """
+
+    REPLAY_CAP = 512  # cached replies; enough to cover any in-flight window
+
+    _REPLAYABLE = ()  # filled below (codec classes defined at module scope)
 
     def __init__(self, engine=None):
         self.engine = engine
         self.draining = False
+        self._replay: "OrderedDict[tuple, codec.Message]" = OrderedDict()
+        self.replay_hits = 0
+
+    def _replay_key(self, msg: codec.Message) -> Optional[tuple]:
+        if not isinstance(msg, WorkerCore._REPLAYABLE) or msg.seq == 0:
+            return None
+        if isinstance(msg, codec.ImportStream):
+            dev = msg.stream.device_id
+        else:
+            dev = getattr(msg, "device_id", -1)
+        return (type(msg).__name__, dev, msg.seq)
 
     def handle(self, msg: codec.Message) -> codec.Message:
+        if isinstance(msg, codec.Ping):  # heartbeat: no engine, no side effects
+            return codec.Pong(seq=msg.seq, t=msg.t)
+        key = self._replay_key(msg)
+        if key is not None and key in self._replay:
+            self.replay_hits += 1
+            telemetry.count("worker_replay_hits_total")
+            return self._replay[key]
         try:
-            return self._dispatch(msg)
+            reply = self._dispatch(msg)
         except Exception as e:  # surfaced to the router, not crashed here
-            return codec.ErrorReply(f"{type(e).__name__}: {e}")
+            reply = codec.ErrorReply(f"{type(e).__name__}: {e}")
+        if key is not None:
+            self._replay[key] = reply
+            while len(self._replay) > self.REPLAY_CAP:
+                self._replay.popitem(last=False)
+        return reply
 
     def _dispatch(self, msg: codec.Message) -> codec.Message:
         if isinstance(msg, codec.PlaceReplica):
@@ -205,6 +240,18 @@ class WorkerCore:
             greedy=self.engine.greedy,
             paged_attention=self.engine.paged_attention,
         )
+
+
+WorkerCore._REPLAYABLE = (
+    codec.AdmitRequest,
+    codec.SubmitRequest,
+    codec.StepRequest,
+    codec.RetireRequest,
+    codec.CancelRequest,
+    codec.ForceExtendRequest,
+    codec.ExportStream,
+    codec.ImportStream,
+)
 
 
 class ReplicaWorker:

@@ -122,8 +122,10 @@ def test_from_json_rejects_wrong_types():
 
 
 def test_build_rejects_non_runtime_codec_version():
+    from repro.transport import codec
+
     spec = _spec(backend="transport", transport=TransportSpec(codec_version=1))
-    with pytest.raises(ValueError, match="codec v3"):
+    with pytest.raises(ValueError, match=f"codec v{codec.VERSION}"):
         System.build(spec)
 
 

@@ -154,6 +154,17 @@ def _control_messages():
         codec.Drain(),
         codec.DrainAck(streams_left=2),
         codec.ErrorReply(message="ValueError: boom"),
+        # v4: per-RPC seq on side-effectful requests + heartbeat frames
+        codec.AdmitRequest(device_id=7, prompt=toks, now=0.5, seq=12),
+        codec.SubmitRequest(device_id=7, tokens=toks, now=1.5, seq=13),
+        codec.StepRequest(now=2.25, seq=14),
+        codec.RetireRequest(device_id=7, seq=15),
+        codec.CancelRequest(device_id=7, seq=16),
+        codec.ForceExtendRequest(device_id=7, tokens=toks, seq=17),
+        codec.ExportStream(device_id=7, seq=18),
+        codec.ImportStream(stream=_sample_state(), seq=19),
+        codec.Ping(seq=20, t=1.25),
+        codec.Pong(seq=20, t=1.25),
     ]
 
 
@@ -204,10 +215,10 @@ def test_codec_v3_corrupt_payload_raises_codec_error():
             codec.decode_frame(bytes(trimmed))
 
 
-def test_codec_version_is_v3():
-    assert codec.VERSION == 3
+def test_codec_version_is_v4():
+    assert codec.VERSION == 4
     buf = codec.encode_frame(codec.Drain())
-    assert buf[2] == 3
+    assert buf[2] == 4
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +300,11 @@ class FakeChannel:
         self.address = "fake:0"
         self.killed = False
         self.connected = True
+        self._seq = 0
+
+    def next_seq(self):
+        self._seq += 1
+        return self._seq
 
     def request(self, msg, *, timeout=None):
         if self.killed:
@@ -299,8 +315,15 @@ class FakeChannel:
             raise WorkerError(reply.message)
         return reply
 
+    def kill(self):
+        self.killed = True
+
     def close(self):
         pass
+
+    def connect(self):
+        if self.killed:
+            raise ReplicaGone("worker dead (fake)")
 
     def reconnect(self):
         if self.killed:
