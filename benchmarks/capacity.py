@@ -279,6 +279,126 @@ def _processes_rows(base, *, quick: bool) -> list:
     return rows
 
 
+def _fill_warmup_buckets(payload, engine_buckets) -> list:
+    """Derive a ``warmup(buckets=...)`` subset from the telemetry fill
+    histogram: each non-empty ``engine_verify_fill`` bucket maps to the
+    engine bucket that fill pads into, so a follow-up deployment warms only
+    the batch shapes the workload actually dispatched instead of the full
+    power-of-two ladder."""
+    h = ((payload or {}).get("snapshot") or {}).get("histograms", {}).get(
+        "engine_verify_fill"
+    )
+    if not h or not engine_buckets:
+        return list(engine_buckets)
+    prev, hit = 0, set()
+    for ub, cum in h.get("buckets", []):
+        count = int(cum) - prev
+        prev = int(cum)
+        if count <= 0:
+            continue
+        fill = engine_buckets[-1] if ub == "+Inf" else float(ub)
+        hit.add(next((b for b in engine_buckets if b >= fill), engine_buckets[-1]))
+    return sorted(hit) or list(engine_buckets)
+
+
+def _kv_dtype_rows(base, *, quick: bool) -> list:
+    """KV-pool dtype sweep at a FIXED pool byte budget (the ISSUE's memory
+    ceiling): bytes-per-slot comes from each dtype's spec-only cache, the
+    byte budget buys ``budget // bytes_per_slot`` pool rows, and the same
+    deadline-gated admission loop measures peak concurrently-admitted
+    streams.  int8 rows cost ~half the bytes, so the same budget admits
+    ~2x the streams at matched deadline-miss rate (>=1.8x floor).
+
+    The second (int8) run also exercises the telemetry-derived warmup
+    subset: the bf16 run's ``engine_verify_fill`` histogram names the
+    buckets the workload actually dispatched, and the int8 system warms
+    only those."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import ClusterSpec, SchedulerSpec, System, build_models
+
+    slots_bf16, max_new = (2, 5) if quick else (3, 10)
+    base = dataclasses.replace(base, max_new=max_new, c_th=0.3, telemetry=True)
+    models = build_models(base.model)
+
+    def bytes_per_slot(kv_dtype: str) -> int:
+        kw = {"kv_dtype": jnp.int8} if kv_dtype == "int8" else {}
+        cache = models.target.make_cache(
+            1, base.max_len, attn_chunk=base.attn_chunk, spec_only=True, **kw
+        )
+        return sum(
+            int(a.size) * jnp.dtype(a.dtype).itemsize for a in jax.tree.leaves(cache)
+        )
+
+    # the fixed HBM stand-in: the byte budget must cover the pool's physical
+    # rows — n_slots serveable + 1 scratch (PagedKVCache) — so a dtype's
+    # serveable slot count is budget // bytes_per_slot - 1
+    budget = (slots_bf16 + 1) * bytes_per_slot("bf16")
+    n_offer = 2 * (budget // bytes_per_slot("int8") - 1)  # oversubscribe both
+
+    rows = []
+    warm_buckets = None  # first run warms everything; second warms the subset
+    base_row = None
+    for kv_dtype in ("bf16", "int8"):
+        bps = bytes_per_slot(kv_dtype)
+        n_slots = budget // bps - 1
+        spec = dataclasses.replace(
+            base,
+            kv_dtype=kv_dtype,
+            devices=n_offer,
+            cluster=ClusterSpec(replicas=1),
+            scheduler=SchedulerSpec(slots=n_slots),
+        )
+        system = System.build(spec, models=models)
+        compile_s = system.warmup(warm_buckets)
+        row = _drive_deadline_gated(
+            system, spec, n_offer=n_offer, max_new=max_new,
+            deadline_s=2.0, miss_cap=0.1, window=16,
+        )
+        payload = system.engine.telemetry_payload()
+        engine_buckets = sorted(compile_s) if warm_buckets is None else warm_buckets
+        derived = _fill_warmup_buckets(payload, sorted(set(engine_buckets)))
+        row = {
+            "section": "kv-dtype",
+            "kv_dtype": kv_dtype,
+            "pool_byte_budget": budget,
+            "bytes_per_slot": bps,
+            "n_slots": n_slots,
+            "warmup_buckets": sorted(compile_s),
+            "warmup_seconds": round(sum(compile_s.values()), 2),
+            "fill_derived_buckets": derived,
+            "pools": payload.get("pools", {}),
+            "spec": spec.to_json(),
+            **row,
+        }
+        if base_row is None:
+            base_row = row
+        row["capacity_ratio"] = round(
+            row["capacity_streams"] / max(base_row["capacity_streams"], 1), 2
+        )
+        rows.append(row)
+        warm_buckets = derived  # the int8 run warms only the observed fills
+        print(
+            f"[kv-dtype {kv_dtype}] {bps} B/slot -> {n_slots} slots in the "
+            f"{budget} B budget; peak {row['capacity_streams']} admitted "
+            f"({row['capacity_ratio']}x), miss rate "
+            f"{row['deadline_miss_rate']:.1%}, warmed {row['warmup_buckets']}"
+        )
+    ratio = rows[-1]["capacity_streams"] / max(rows[0]["capacity_streams"], 1)
+    rows.append({
+        "section": "kv-dtype-summary",
+        "admitted_ratio_int8_vs_bf16": round(ratio, 2),
+        "meets_1_8x_floor": bool(ratio >= 1.8),
+        "miss_rate_bf16": rows[0]["deadline_miss_rate"],
+        "miss_rate_int8": rows[1]["deadline_miss_rate"],
+    })
+    from repro import telemetry
+
+    telemetry.enable(False)
+    return rows
+
+
 def _kctl_rows(base, *, quick: bool) -> list:
     """Adaptive vs fixed spec length over loopback transport (real feedback
     loop: Verdict accept_rate/queue_depth -> AIMD controller -> draft k) —
@@ -341,11 +461,14 @@ def _kctl_rows(base, *, quick: bool) -> list:
     return rows
 
 
-def run_cluster(quick: bool = False, json_path: str = "", processes: bool = False) -> list:
+def run_cluster(quick: bool = False, json_path: str = "", processes: bool = False,
+                kv_dtype: bool = False) -> list:
     base = _base_spec(quick)
     rows = _capacity_rows(base, quick=quick)
     if processes:
         rows += _processes_rows(base, quick=quick)
+    if kv_dtype:
+        rows += _kv_dtype_rows(base, quick=quick)
     rows += _kctl_rows(base, quick=quick)
     emit(rows, "cluster_capacity")
     if json_path:
@@ -363,12 +486,16 @@ if __name__ == "__main__":
     ap.add_argument("--processes", action="store_true",
                     help="with --cluster: add a cross-process sweep over "
                          "spawned repro-worker replicas (1 vs 2 OS processes)")
+    ap.add_argument("--kv-dtype", action="store_true",
+                    help="with --cluster: add the bf16-vs-int8 KV pool sweep "
+                         "at a fixed pool byte budget (slots-per-HBM-byte)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", type=str, default="",
                     help="write the rows as a BENCH JSON artifact")
     a = ap.parse_args()
     if a.cluster:
-        run_cluster(quick=a.quick, json_path=a.json, processes=a.processes)
+        run_cluster(quick=a.quick, json_path=a.json, processes=a.processes,
+                    kv_dtype=a.kv_dtype)
     else:
         rows = run(quick=a.quick)
         if a.json:

@@ -303,6 +303,16 @@ class System:
             )
         models = models or build_models(spec.model)
         fam = getattr(models.target_cfg, "family", None)
+        if spec.kv_dtype == "int8" and not supports_paged_attention(models.target_cfg):
+            # loud, not a warning: a silently-bf16 pool would report double
+            # the capacity the deployment actually has
+            raise ValueError(
+                f"kv_dtype='int8' is not supported for model family {fam!r} "
+                f"({spec.model.arch}): its caches ride the gather/scatter "
+                "fallback (models/kvcache.py) whose recurrent state leaves "
+                "have no quantized layout — serve this family with "
+                "kv_dtype='bf16'"
+            )
         if (
             spec.backend in _ENGINE_BACKENDS
             and spec.paged_attention
@@ -326,6 +336,7 @@ class System:
                 greedy=spec.greedy,
                 attn_chunk=spec.attn_chunk,
                 paged_attention=spec.paged_attention,
+                kv_dtype=spec.kv_dtype,
                 steps=steps,
             )
             if spec.cluster.has_remote:
@@ -774,6 +785,7 @@ class System:
             max_new=max(budgets),
             k_max=spec.k_max, c_th=spec.c_th, greedy=spec.greedy,
             seed=0, attn_chunk=spec.attn_chunk, steps=self._reference_jits(),
+            kv_dtype=spec.kv_dtype,
         )
         for rnd in gen:
             for b, s in enumerate(sessions):

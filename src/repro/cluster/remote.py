@@ -417,7 +417,10 @@ class RemoteReplica:
 
     @property
     def fingerprint(self) -> tuple:
-        return (self.k_max, self.max_len, self.greedy, self.paged_attention)
+        # kv_dtype comes from the placed spec (the worker builds its pool
+        # from it), mirroring LocalReplica's engine-derived fingerprint
+        kv_dtype = getattr(self.spec, "kv_dtype", "bf16") if self.spec is not None else "bf16"
+        return (self.k_max, self.max_len, self.greedy, self.paged_attention, kv_dtype)
 
     # -- shadowed introspection (no round trips) -----------------------------
 

@@ -111,7 +111,9 @@ class LocalReplica:
     @property
     def fingerprint(self) -> tuple:
         e = self.engine
-        return (e.k_max, e.pool.max_len, e.greedy, e.paged_attention)
+        # kv_dtype is part of the identity: an int8 row scattered into a
+        # bf16 pool (or vice versa) would silently cast and corrupt the cache
+        return (e.k_max, e.pool.max_len, e.greedy, e.paged_attention, e.kv_dtype)
 
     def chaos_kill(self) -> None:
         """Fault injection: every delegated call now raises ConnectionError,
@@ -933,6 +935,32 @@ class Router:
         flight = [ev.to_json() for ring in self.flight.values() for ev in ring.events()]
         flight.sort(key=lambda e: e["t"])
         out = {"snapshot": telemetry.registry().snapshot(), "flight": flight}
+        # per-replica pool capacity: local replicas read their pool directly;
+        # remote workers ship engine_kv_pool_bytes / engine_bytes_per_slot
+        # gauges inside their own telemetry snapshot (ReplicaStats payload)
+        pools = {}
+        for i, r in enumerate(self.replicas):
+            if r.dead:
+                continue
+            eng = getattr(r, "engine", None)
+            if eng is not None:
+                pools[str(i)] = {
+                    "kv_dtype": eng.kv_dtype,
+                    "kv_pool_bytes": eng.pool.pool_bytes(),
+                    "bytes_per_slot": eng.pool.bytes_per_slot(),
+                }
+            else:
+                snap = (getattr(r, "last_telemetry", None) or {}).get("snapshot") or {}
+                g = snap.get("gauges", {})
+                if "engine_kv_pool_bytes" in g:
+                    spec = getattr(r, "spec", None)
+                    pools[str(i)] = {
+                        "kv_dtype": getattr(spec, "kv_dtype", "bf16"),
+                        "kv_pool_bytes": int(g["engine_kv_pool_bytes"]),
+                        "bytes_per_slot": int(g.get("engine_bytes_per_slot", 0)),
+                    }
+        if pools:
+            out["pools"] = pools
         workers = {}
         for i, r in enumerate(self.replicas):
             try:

@@ -33,6 +33,21 @@ from repro.models.layers import NO_MESH, MeshContext
 
 log = logging.getLogger(__name__)
 
+# pool storage dtypes the engine understands; "int8" adds per-(slot, head)
+# dequant-scale leaves and roughly halves bytes-per-slot (models/layers.py)
+KV_DTYPES = {"bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def kv_dtype_name(kv_dtype) -> str:
+    """Normalise a ``kv_dtype`` (spec string or jnp dtype) to its spec name."""
+    if isinstance(kv_dtype, str):
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {kv_dtype!r} (one of {sorted(KV_DTYPES)})"
+            )
+        return kv_dtype
+    return "int8" if kv_dtype == jnp.int8 else "bf16"
+
 
 @dataclasses.dataclass
 class Verdict:
@@ -194,12 +209,18 @@ class VerifySteps:
         temperature: float = 1.0,
         attn_chunk: int = 32,
         paged_attention: bool = True,
+        kv_dtype: Any = "bf16",
     ):
         self.model = model
         self.greedy = greedy
         self.temperature = temperature
         self.scratch_slot = scratch_slot
         self.attn_chunk = attn_chunk
+        # recorded for shared-bundle validation only: the jitted steps are
+        # dtype-polymorphic (they retrace on leaf dtypes), but a fleet mixing
+        # pool dtypes behind one bundle would silently compile everything
+        # twice, defeating the shared-warmup contract
+        self.kv_dtype = kv_dtype_name(kv_dtype)
         # slot-indexed verify attention straight out of the pool; SSM/hybrid
         # caches fall back to gather/scatter (their recurrent state leaves
         # are not position-indexed K/V — see models/kvcache.py)
@@ -254,12 +275,25 @@ class EngineCore:
         batch_cap: Optional[int] = None,
         paged_attention: bool = True,
         steps: Optional[VerifySteps] = None,
+        kv_dtype: Any = "bf16",
     ):
         self.model = model
         self.params = params
         self.k_max = k_max
         self.greedy = greedy
-        self.pool = PagedKVCache(model, n_slots, max_len, attn_chunk=attn_chunk)
+        self.kv_dtype = kv_dtype_name(kv_dtype)
+        cache_kw: Dict[str, Any] = {"attn_chunk": attn_chunk}
+        if self.kv_dtype == "int8":
+            if not supports_paged_attention(model.cfg):
+                raise ValueError(
+                    f"kv_dtype='int8' is not supported for the "
+                    f"{model.cfg.family!r} family: its recurrent-state cache "
+                    "leaves ride the gather/scatter fallback "
+                    "(models/kvcache.py), which has no quantized layout — "
+                    "serve it with kv_dtype='bf16'"
+                )
+            cache_kw["kv_dtype"] = KV_DTYPES["int8"]
+        self.pool = PagedKVCache(model, n_slots, max_len, **cache_kw)
         if steps is not None:
             # a mismatched shared bundle would fail (or recompile every
             # bucket behind warmup's back) deep inside step(); fail at the
@@ -274,6 +308,7 @@ class EngineCore:
                     ("temperature", steps.temperature, temperature),
                     ("attn_chunk", steps.attn_chunk, attn_chunk),
                     ("paged_attention", steps.paged_attention, want_paged),
+                    ("kv_dtype", steps.kv_dtype, self.kv_dtype),
                 )
                 if got is not want and got != want
             ]
@@ -291,8 +326,15 @@ class EngineCore:
             temperature=temperature,
             attn_chunk=attn_chunk,
             paged_attention=paged_attention,
+            kv_dtype=self.kv_dtype,
         )
         self.paged_attention = self.steps.paged_attention
+        if telemetry.enabled():
+            # pool capacity gauges: the memory-ceiling story (ISSUE: int8
+            # roughly halves bytes_per_slot, doubling slots per HBM byte)
+            reg = telemetry.registry()
+            reg.gauge("engine_kv_pool_bytes").set(float(self.pool.pool_bytes()))
+            reg.gauge("engine_bytes_per_slot").set(float(self.pool.bytes_per_slot()))
         cap = batch_cap or n_slots
         self.batch_cap = cap
         if buckets is None:

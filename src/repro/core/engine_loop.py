@@ -91,6 +91,7 @@ def sled_rounds(
     attn_chunk: int = 256,
     collect_confidence: bool = False,
     steps: Optional[dict] = None,
+    kv_dtype: str = "bf16",
 ):
     """THE lock-step SLED loop, as a per-round generator.
 
@@ -106,8 +107,16 @@ def sled_rounds(
         draft_model, target_model, k_max=k_max, c_th=c_th, greedy=greedy,
         temperature=temperature, attn_chunk=attn_chunk,
     )
+    # the TARGET cache honours kv_dtype (it is the server-pool stand-in the
+    # engine backends must match token-for-token); device-side draft caches
+    # are always bf16 — SLED quantizes the shared server pool, not the edge
+    t_kw = {}
+    if kv_dtype == "int8":
+        t_kw["kv_dtype"] = jnp.int8
+    elif kv_dtype != "bf16":
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r} (one of ['bf16', 'int8'])")
     d_cache = draft_model.make_cache(B, max_len, attn_chunk=attn_chunk)
-    t_cache = target_model.make_cache(B, max_len, attn_chunk=attn_chunk)
+    t_cache = target_model.make_cache(B, max_len, attn_chunk=attn_chunk, **t_kw)
     _, d_cache, prev = steps["d_prefill"](draft_params, d_cache, prompts)
     _, t_cache, _ = steps["t_prefill"](target_params, t_cache, prompts)
 
@@ -154,6 +163,7 @@ def sled_generate(
     attn_chunk: int = 256,
     collect_confidence: bool = False,
     steps: Optional[dict] = None,
+    kv_dtype: str = "bf16",
 ) -> Tuple[np.ndarray, SledStats, Optional[List[Tuple[float, bool]]]]:
     """Run SLED end-to-end. Returns (tokens (B, max_new), stats, conf_pairs).
 
@@ -172,7 +182,7 @@ def sled_generate(
         draft_model, draft_params, target_model, target_params, prompts,
         max_new=max_new, k_max=k_max, c_th=c_th, greedy=greedy,
         temperature=temperature, seed=seed, attn_chunk=attn_chunk,
-        collect_confidence=collect_confidence, steps=steps,
+        collect_confidence=collect_confidence, steps=steps, kv_dtype=kv_dtype,
     ):
         if collect_confidence:
             for b in range(B):

@@ -100,6 +100,7 @@ class ServerEngine:
         buckets: Optional[Sequence[int]] = None,
         paged_attention: bool = True,
         steps: Optional[VerifySteps] = None,
+        kv_dtype: Any = "bf16",
     ):
         cap = batch_size or n_slots
         self.core = EngineCore(
@@ -116,6 +117,7 @@ class ServerEngine:
             batch_cap=cap,
             paged_attention=paged_attention,
             steps=steps,
+            kv_dtype=kv_dtype,
         )
         self.admission = AdmissionControl(
             batch_size=cap,
@@ -165,6 +167,10 @@ class ServerEngine:
     @property
     def paged_attention(self) -> bool:
         return self.core.paged_attention
+
+    @property
+    def kv_dtype(self) -> str:
+        return self.core.kv_dtype
 
     @property
     def buckets(self):
@@ -442,8 +448,14 @@ class ServerEngine:
         codec v3 ``ReplicaStats.telemetry_json``."""
         if not telemetry.enabled():
             return {}
+        # refresh the pool capacity gauges at read time: telemetry may have
+        # been switched on after engine construction, and `repro top` reads
+        # kv_pool_bytes / bytes_per_slot off this snapshot per replica
+        reg = telemetry.registry()
+        reg.gauge("engine_kv_pool_bytes").set(float(self.pool.pool_bytes()))
+        reg.gauge("engine_bytes_per_slot").set(float(self.pool.bytes_per_slot()))
         return {
-            "snapshot": telemetry.registry().snapshot(),
+            "snapshot": reg.snapshot(),
             "flight": self.flight.dump(),
         }
 

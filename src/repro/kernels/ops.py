@@ -42,20 +42,24 @@ def verify_attention_paged(
     v_pool: jax.Array,
     slots: jax.Array,     # (B,) int32 pool row per batch entry
     kv_valid: jax.Array,  # (B,)
+    k_scale: Optional[jax.Array] = None,  # (n_slots+1, Hkv) f32 — required
+    v_scale: Optional[jax.Array] = None,  # when the pool is int8
     *,
     block_k: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
     """Slot-indexed verification attention straight out of the cache pool —
     the scalar-prefetched index maps pick pool row ``slots[b]`` per chunk,
-    so no gathered dense K/V ever exists (see verify_attn.py)."""
+    so no gathered dense K/V ever exists (see verify_attn.py).  An int8 pool
+    additionally takes its per-(slot, head) dequant scales; tiles are
+    dequantized in-kernel, never as a bf16 pool copy."""
     B, Sq, Hq, D = q.shape
     Hkv = k_pool.shape[2]
     G = Hq // Hkv
     qp = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, Sq * G, D)
     o = _paged_kernel(qp, k_pool, v_pool, slots.astype(jnp.int32),
                       kv_valid.astype(jnp.int32), sq=Sq, block_k=block_k,
-                      interpret=interpret)
+                      interpret=interpret, k_scale=k_scale, v_scale=v_scale)
     return o.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Sq, Hq, D)
 
 

@@ -39,15 +39,27 @@ def verify_attention_paged_ref(
     slots: jax.Array,     # (B,) int32 pool row per batch entry
     kv_valid: jax.Array,  # (B,)
     scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,  # (n_slots+1, Hkv) f32 dequant
+    v_scale: Optional[jax.Array] = None,  # scales for an int8 pool
 ) -> jax.Array:
     """Pool-indexed oracle: materialise the gather, then dense attention.
 
     The Pallas paged kernel must match this bit-for-tolerance — the gather
     here is the very traffic the kernel's scalar-prefetched index maps
     eliminate, but as an oracle it is the cleanest statement of semantics.
+    For an int8 pool the oracle does exactly what the kernel refuses to do:
+    materialise the dequantized bf16 gather (layers.kv_dequant arithmetic,
+    int8 -> f32 * scale -> bf16), then run dense attention over it.
     """
     k = jnp.take(k_pool, slots, axis=0)
     v = jnp.take(v_pool, slots, axis=0)
+    if k.dtype == jnp.int8:
+        if k_scale is None or v_scale is None:
+            raise ValueError("int8 pool oracle requires k_scale/v_scale")
+        ks = jnp.take(k_scale, slots, axis=0)[:, None, :, None]  # (B,1,Hkv,1)
+        vs = jnp.take(v_scale, slots, axis=0)[:, None, :, None]
+        k = (k.astype(jnp.float32) * ks).astype(jnp.bfloat16)
+        v = (v.astype(jnp.float32) * vs).astype(jnp.bfloat16)
     return verify_attention_ref(q, k, v, kv_valid, scale=scale)
 
 

@@ -65,13 +65,21 @@ NEG_INF = -1e30
 
 
 def _attend_chunk(kv_valid, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                  *, block_k: int, sq: int, skv: int, scale: float):
+                  *, block_k: int, sq: int, skv: int, scale: float,
+                  k_scale=None, v_scale=None):
     """One online-softmax step over the current kv chunk (grid axis 2).
 
     Shared by the dense and paged kernels — only how the chunk was addressed
     differs (BlockSpec index maps), never the math.  Requires
     ``kv_valid >= sq`` (the Sq fresh rows are in the cache), which makes the
     first chunk contain at least one valid position for every packed row.
+
+    ``k_scale``/``v_scale`` (f32 scalars for this (slot, head)) switch on the
+    int8 path: the K/V tiles arrive quantized and are dequantized HERE, on
+    the VMEM-resident chunk — the HBM stream is int8, so the cache read
+    halves, and no bf16 pool copy ever exists.  The dequant arithmetic
+    mirrors layers.kv_dequant (int8 -> f32 * scale -> bf16) so the kernel
+    tracks the XLA serving path's numerics.
     """
     j_blk = pl.program_id(2)
     n_blk = pl.num_programs(2)
@@ -85,6 +93,9 @@ def _attend_chunk(kv_valid, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     q = q_ref[0, 0]  # (rows, D) rows = Sq*G
     k = k_ref[0, :, 0, :]  # (block_k, D)
     v = v_ref[0, :, 0, :]
+    if k_scale is not None:
+        k = (k.astype(jnp.float32) * k_scale).astype(jnp.bfloat16)
+        v = (v.astype(jnp.float32) * v_scale).astype(jnp.bfloat16)
     rows = q.shape[0]
 
     s = jax.lax.dot_general(
@@ -134,6 +145,20 @@ def _paged_kernel(slots_ref, kv_valid_ref, q_ref, k_ref, v_ref, o_ref,
     b = pl.program_id(0)
     _attend_chunk(kv_valid_ref[b], q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                   acc_ref, block_k=block_k, sq=sq, skv=skv, scale=scale)
+
+
+def _paged_quant_kernel(slots_ref, kv_valid_ref, k_scale_ref, v_scale_ref,
+                        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                        *, block_k: int, sq: int, skv: int, scale: float):
+    # int8 pool: the per-(slot, head) dequant scales ride scalar prefetch
+    # next to slots/kv_valid — SMEM-resident before the body runs, looked up
+    # here with the same slot map the index maps use for the K/V tiles.
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    row = slots_ref[b]
+    _attend_chunk(kv_valid_ref[b], q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, block_k=block_k, sq=sq, skv=skv, scale=scale,
+                  k_scale=k_scale_ref[row, h], v_scale=v_scale_ref[row, h])
 
 
 def verify_attention_packed(
@@ -187,6 +212,8 @@ def verify_attention_paged(
     scale: Optional[float] = None,
     block_k: int = 512,
     interpret: bool = True,
+    k_scale: Optional[jax.Array] = None,  # (n_slots+1, Hkv) f32 dequant
+    v_scale: Optional[jax.Array] = None,  # scales for an int8 pool
 ) -> jax.Array:
     """Slot-indexed verification attention over a shared cache-row pool.
 
@@ -194,6 +221,12 @@ def verify_attention_paged(
     each (block_k, D) K/V tile as ``(slots[b], j, h, 0)`` directly in the
     pool, so the chunk DMAs stream exactly the scheduled rows — no dense
     gather ever exists (see module docstring).
+
+    With an int8 pool, pass the PagedKVCache's per-(slot, head) dequant
+    scales as ``k_scale``/``v_scale``: they join the scalar-prefetch
+    operands and each chunk is dequantized IN-KERNEL on its VMEM tile
+    (``_attend_chunk``), so HBM streams the cache at 1 byte/element —
+    that halved stream is the whole point of the quantized pool.
     """
     B, Hkv, rows, D = q.shape
     Skv = k_pool.shape[1]
@@ -201,6 +234,42 @@ def verify_attention_paged(
         scale = 1.0 / math.sqrt(D)
     block_k = min(block_k, Skv)
     n_blk = -(-Skv // block_k)
+
+    quant = k_pool.dtype == jnp.int8
+    if quant and (k_scale is None or v_scale is None):
+        raise ValueError("int8 k_pool/v_pool require k_scale/v_scale operands")
+
+    scratch = [
+        pltpu.VMEM((rows, 1), jnp.float32),   # m
+        pltpu.VMEM((rows, 1), jnp.float32),   # l
+        pltpu.VMEM((rows, D), jnp.float32),   # acc
+    ]
+    if quant:
+        kernel = functools.partial(_paged_quant_kernel, block_k=block_k, sq=sq,
+                                   skv=Skv, scale=float(scale))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,  # slots, kv_valid, k_scale, v_scale
+            grid=(B, Hkv, n_blk),
+            in_specs=[
+                pl.BlockSpec((1, 1, rows, D),
+                             lambda b, h, j, slots, kvv, ks, vs: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, j, slots, kvv, ks, vs: (slots[b], j, h, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, j, slots, kvv, ks, vs: (slots[b], j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rows, D),
+                                   lambda b, h, j, slots, kvv, ks, vs: (b, h, 0, 0)),
+            scratch_shapes=scratch,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, Hkv, rows, D), q.dtype),
+            interpret=interpret,
+        )(slots.astype(jnp.int32), kv_valid.astype(jnp.int32),
+          k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+          q, k_pool, v_pool)
 
     kernel = functools.partial(_paged_kernel, block_k=block_k, sq=sq, skv=Skv,
                                scale=float(scale))
@@ -217,11 +286,7 @@ def verify_attention_paged(
             ),
         ],
         out_specs=pl.BlockSpec((1, 1, rows, D), lambda b, h, j, slots, kvv: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((rows, 1), jnp.float32),   # m
-            pltpu.VMEM((rows, 1), jnp.float32),   # l
-            pltpu.VMEM((rows, D), jnp.float32),   # acc
-        ],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,

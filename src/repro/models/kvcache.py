@@ -51,7 +51,11 @@ def rollback(cache: Dict[str, jax.Array], new_length: jax.Array) -> Dict[str, ja
 #
 # Every cache family in this repo shares one layout convention: ``length`` is
 # (B,) and every other leaf carries the batch on axis 1 (k/v: (L, B, S, H, D),
-# ssm: (L, B, H, P, N), conv: (L, B, cw-1, C), cross_k/v: (L, B, F, H, D)).
+# ssm: (L, B, H, P, N), conv: (L, B, cw-1, C), cross_k/v: (L, B, F, H, D),
+# int8 dequant scales k_scale/v_scale: (L, B, Hkv)).  Because the convention
+# covers the scale leaves too, a quantized pool needs no special casing here:
+# gather_slots / scatter_slots / write_slot / ExportStream move the int8 rows
+# AND their scales together, bit-exactly.
 # That makes "a device's cache" a fixed set of rows, so continuous batching
 # reduces to a slot allocator over a pool of rows.  Two dispatch modes share
 # the pool:
@@ -164,6 +168,19 @@ class PagedKVCache:
         self.cache_kw = dict(cache_kw)
         self.cache = model.make_cache(n_slots + 1, max_len, **cache_kw)
         self.allocator = SlotAllocator(n_slots)
+
+    def pool_bytes(self) -> int:
+        """Device bytes held by the pool (all leaves, incl. scratch row and
+        any int8 dequant-scale leaves) — the capacity-planning number behind
+        the ``engine_kv_pool_bytes`` gauge."""
+        return sum(
+            int(a.size) * a.dtype.itemsize for a in jax.tree.leaves(self.cache)
+        )
+
+    def bytes_per_slot(self) -> int:
+        """Pool bytes amortised per device slot: with ``kv_dtype=int8`` this
+        is ~half the bf16 figure, i.e. ~2x admitted streams per HBM byte."""
+        return self.pool_bytes() // (self.n_slots + 1)
 
     def alloc(self) -> int:
         return self.allocator.alloc()

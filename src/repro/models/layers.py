@@ -36,22 +36,43 @@ ATTN_IMPL = "xla"
 
 # int8 KV cache (beyond-paper: halves the cache stream and fits the two
 # cells whose bf16 caches exceed v5e HBM — qwen1.5-32b decode_32k and the
-# paper's llama-70b target).  Symmetric per-cache static scale; production
-# would calibrate per (layer, head).  Opt-in: make_cache(kv_dtype=jnp.int8),
-# dryrun --kv-bits 8.
+# paper's llama-70b target).  Symmetric scale per (row, kv-head), FIXED at
+# prompt prefill: the first append into an empty row (cache_len == 0)
+# computes scale = max(|K|)/127 over the prompt and stores it in the
+# cache's ``k_scale``/``v_scale`` leaves; every later append reuses the
+# stored value.  Fixing the scale at prefill is what keeps quantization
+# deterministic under replay — device-replay recovery re-prefills the same
+# prompt (same scale) and then force-extends, so a recovered stream's int8
+# rows are bit-identical to its fault-free twin's no matter how the appends
+# were grouped.  ``KV_SCALE`` remains the static fallback for callers that
+# pass no scale.  Opt-in: make_cache(kv_dtype=jnp.int8), dryrun --kv-bits 8.
 KV_SCALE = 0.05
+KV_SCALE_EPS = 1e-6  # floor for amax/127 so all-zero rows stay invertible
 
 
-def kv_quant(x: jax.Array, dtype) -> jax.Array:
+def _bc(scale: jax.Array) -> jax.Array:
+    """(B, Hkv) scale broadcast against a (B, S, Hkv, D) K/V tile."""
+    return scale[:, None, :, None]
+
+
+def kv_quant(x: jax.Array, dtype, scale: Optional[jax.Array] = None) -> jax.Array:
     if dtype != jnp.int8:
         return x.astype(dtype)
-    return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_SCALE), -127, 127).astype(jnp.int8)
+    s = KV_SCALE if scale is None else _bc(scale)
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
 
 
-def kv_dequant(x: jax.Array) -> jax.Array:
+def kv_dequant(x: jax.Array, scale: Optional[jax.Array] = None) -> jax.Array:
     if x.dtype != jnp.int8:
         return x
-    return (x.astype(jnp.float32) * KV_SCALE).astype(jnp.bfloat16)
+    s = KV_SCALE if scale is None else _bc(scale)
+    return (x.astype(jnp.float32) * s).astype(jnp.bfloat16)
+
+
+def kv_fresh_scale(x: jax.Array) -> jax.Array:
+    """Per-(row, kv-head) symmetric scale for a fresh (B, S, Hkv, D) tile."""
+    amax = jnp.abs(x.astype(jnp.float32)).max(axis=(1, 3))
+    return jnp.maximum(amax / 127.0, KV_SCALE_EPS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -217,6 +238,9 @@ def flash_attention(
     # cross-shard softmax combination (flash-decoding style)
     remat: bool = False,  # checkpoint the chunk body (training: do not save
     # per-chunk score tensors for backward)
+    k_scale: Optional[jax.Array] = None,  # (B, Hkv) per-row dequant scales
+    v_scale: Optional[jax.Array] = None,  # for int8 k/v (already row-selected
+    # by the caller: constant over the sequence, so every chunk shares them)
 ):
     """Chunked online-softmax attention.
 
@@ -290,8 +314,8 @@ def flash_attention(
         # stream chunks with dynamic_slice (no transposed copy of the cache:
         # a reshape+moveaxis here doubles the HBM traffic — §Perf iter 0)
         m, l, acc = carry
-        kb = kv_dequant(chunk_at(k, idx))
-        vb = kv_dequant(chunk_at(v, idx))
+        kb = kv_dequant(chunk_at(k, idx), k_scale)
+        vb = kv_dequant(chunk_at(v, idx), v_scale)
         # scores: (B, Sq, Hkv, G, chunk)
         s = jnp.einsum(
             "bshgd,bchd->bshgc", qg, kb, preferred_element_type=jnp.float32
@@ -370,7 +394,10 @@ def attention_block(
     flash_remat: bool = False,
     slots: Optional[jax.Array] = None,  # kv_cache is a slot pool; batch row
     # b owns pool row slots[b] (PagedKVCache continuous batching)
-) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # int8 cache
+    # dequant scales, same addressing as the cache: (B, Hkv) plain,
+    # (L, B, Hkv) with ``cache_layer``, (L, n_pool, Hkv) with ``slots`` too
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, ...]]]:
     """QKV -> (optional cache append) -> flash attention -> output proj.
 
     With a kv_cache, new K/V rows are scattered into the buffer at
@@ -431,7 +458,27 @@ def attention_block(
         return out.reshape(B, S, hq * hd) @ p["wo"], (ck, cv)
     if kv_cache is not None:
         ck, cv = kv_cache
-        kq, vq = kv_quant(k, ck.dtype), kv_quant(v, cv.dtype)
+        ksc = vsc = row_ks = row_vs = None
+        if kv_scales is not None and ck.dtype == jnp.int8:
+            ksc, vsc = kv_scales
+
+            def _rows(sc):
+                # select this layer's / these slots' (B, Hkv) scale rows,
+                # mirroring the cache addressing
+                if cache_layer is not None:
+                    sc = jax.lax.dynamic_index_in_dim(sc, cache_layer, 0, keepdims=False)
+                if slots is not None:
+                    sc = jnp.take(sc, slots, axis=0)
+                return sc
+
+            # determinism contract: scale is FIXED at prefill.  The first
+            # append into an empty row (cache_len == 0) derives it from the
+            # fresh K/V amax; every later append reuses the stored value, so
+            # replayed appends quantize bit-identically however they are
+            # grouped (device-replay recovery re-prefills the same prompt).
+            row_ks = jnp.where(cache_len[:, None] == 0, kv_fresh_scale(k), _rows(ksc))
+            row_vs = jnp.where(cache_len[:, None] == 0, kv_fresh_scale(v), _rows(vsc))
+        kq, vq = kv_quant(k, ck.dtype, row_ks), kv_quant(v, cv.dtype, row_vs)
         if uniform_start is not None and cache_layer is not None:
             start = (cache_layer, jnp.int32(0), uniform_start.astype(jnp.int32),
                      jnp.int32(0), jnp.int32(0))
@@ -473,11 +520,33 @@ def attention_block(
             else:
                 ck = ck.at[b_idx, s_idx].set(kq, mode="drop")
                 cv = cv.at[b_idx, s_idx].set(vq, mode="drop")
-        new_cache = (ck, cv)
+        if row_ks is not None:
+            # persist the selected scales along the same addressing as the
+            # K/V append (a no-op rewrite for rows whose scale was already
+            # fixed: row_ks == the stored value there)
+            if slots is not None:
+                for b in range(B):
+                    row = slots[b].astype(jnp.int32)
+                    if cache_layer is not None:
+                        st = (cache_layer, row, jnp.int32(0))
+                        ksc = jax.lax.dynamic_update_slice(ksc, row_ks[b][None, None], st)
+                        vsc = jax.lax.dynamic_update_slice(vsc, row_vs[b][None, None], st)
+                    else:
+                        st = (row, jnp.int32(0))
+                        ksc = jax.lax.dynamic_update_slice(ksc, row_ks[b][None], st)
+                        vsc = jax.lax.dynamic_update_slice(vsc, row_vs[b][None], st)
+            elif cache_layer is not None:
+                st = (cache_layer, jnp.int32(0), jnp.int32(0))
+                ksc = jax.lax.dynamic_update_slice(ksc, row_ks[None], st)
+                vsc = jax.lax.dynamic_update_slice(vsc, row_vs[None], st)
+            else:
+                ksc, vsc = row_ks, row_vs
+        new_cache = (ck, cv) if ksc is None else (ck, cv, ksc, vsc)
         kv_valid = cache_len + S
         out = flash_attention(
             q, ck, cv, q_pos=positions, kv_valid=kv_valid, causal=causal,
             chunk=chunk, layer=cache_layer, slots=slots,
+            k_scale=row_ks, v_scale=row_vs,
         )
     else:
         out = flash_attention(q, k, v, q_pos=positions, causal=causal, chunk=chunk,

@@ -111,14 +111,15 @@ def _block(
     attn_chunk: int = 1024,
     flash_remat: bool = False,
     slots: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]], jax.Array]:
+    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, ...]], jax.Array]:
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
     a, new_kv = L.attention_block(
         h, lp["attn"], cfg,
         positions=positions, kv_cache=kv, cache_len=cache_len,
         cache_layer=cache_layer, uniform_start=uniform_start,
         causal=causal, chunk=attn_chunk, ctx=ctx, flash_remat=flash_remat,
-        slots=slots,
+        slots=slots, kv_scales=kv_scales,
     )
     x = x + a
     if cross is not None:
@@ -229,6 +230,15 @@ def make_cache(cfg, batch: int, max_len: int, *, spec_only: bool = False,
     fn = kv_cache_spec if spec_only else init_kv_cache
     cache = fn(cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim,
                dtype=kv_dtype)
+    if kv_dtype == jnp.int8:
+        # per-(layer, row, kv-head) dequant scales, fixed at prefill (see
+        # layers.kv_fresh_scale); batch on axis 1 like every cache leaf, so
+        # they ride gather_slots/scatter_slots/export untouched
+        sshp = (cfg.num_layers, batch, cfg.num_kv_heads)
+        mk = (lambda: jax.ShapeDtypeStruct(sshp, jnp.float32)) if spec_only \
+            else (lambda: jnp.ones(sshp, jnp.float32))
+        cache["k_scale"] = mk()
+        cache["v_scale"] = mk()
     if cfg.is_encdec:
         shp = (cfg.num_layers, batch, enc_len or cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
         if spec_only:
@@ -286,13 +296,19 @@ def decode_forward(
     def idx(a, l):
         return jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
 
+    quant = "k_scale" in cache  # int8 cache: thread the scale leaves too
+
     def body(l, carry):
         # slice the layer's cache out, append + attend, write back in place.
         # (Streaming chunks straight from the stacked buffer inside the
         # flash scan re-materialises the stack as a while-loop operand on
         # some backends — the per-layer slice is the portable fast path;
         # the "split" cache layout below removes even this copy.)
-        h, k_all, v_all, aux = carry
+        if quant:
+            h, k_all, v_all, ksc, vsc, aux = carry
+        else:
+            h, k_all, v_all, aux = carry
+            ksc = vsc = None
         lp = jax.tree.map(lambda a: idx(a, l), params["layers"])
         cross = (idx(cache["cross_k"], l), idx(cache["cross_v"], l)) if cfg.is_encdec else None
         if slots is not None:
@@ -304,22 +320,37 @@ def decode_forward(
                 h, lp, cfg, ctx, positions=positions, kv=(k_all, v_all),
                 cache_len=cache_len, cache_layer=l, slots=slots,
                 cross=cross, cross_len=cross_len, attn_chunk=attn_chunk,
+                kv_scales=(ksc, vsc) if quant else None,
             )
+            if quant:
+                return (h, new_kv[0], new_kv[1], new_kv[2], new_kv[3], aux + a)
             return (h, new_kv[0], new_kv[1], aux + a)
         h, new_kv, a = _block(
             h, lp, cfg, ctx, positions=positions, kv=(idx(k_all, l), idx(v_all, l)),
             cache_len=cache_len, uniform_start=uniform_start,
             cross=cross, cross_len=cross_len, attn_chunk=attn_chunk,
+            kv_scales=(idx(ksc, l), idx(vsc, l)) if quant else None,
         )
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, new_kv[0], l, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, new_kv[1], l, 0)
+        if quant:
+            ksc = jax.lax.dynamic_update_index_in_dim(ksc, new_kv[2], l, 0)
+            vsc = jax.lax.dynamic_update_index_in_dim(vsc, new_kv[3], l, 0)
+            return (h, k_all, v_all, ksc, vsc, aux + a)
         return (h, k_all, v_all, aux + a)
 
-    x, k_all, v_all, aux = jax.lax.fori_loop(
-        0, cfg.num_layers, body,
-        (x, cache["k"], cache["v"], jnp.zeros((), jnp.float32)),
-    )
-    new_cache = {**cache, "k": k_all, "v": v_all}
+    aux0 = jnp.zeros((), jnp.float32)
+    if quant:
+        init = (x, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"], aux0)
+    else:
+        init = (x, cache["k"], cache["v"], aux0)
+    out = jax.lax.fori_loop(0, cfg.num_layers, body, init)
+    if quant:
+        x, k_all, v_all, ksc, vsc, aux = out
+        new_cache = {**cache, "k": k_all, "v": v_all, "k_scale": ksc, "v_scale": vsc}
+    else:
+        x, k_all, v_all, aux = out
+        new_cache = {**cache, "k": k_all, "v": v_all}
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     return x, new_cache, aux
 

@@ -42,6 +42,20 @@ def _hist(payload: Optional[dict], name: str) -> Optional[dict]:
     return (payload.get("snapshot") or {}).get("histograms", {}).get(name)
 
 
+def _gauge(payload: Optional[dict], name: str) -> Optional[float]:
+    if not payload:
+        return None
+    return (payload.get("snapshot") or {}).get("gauges", {}).get(name)
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.0f}{unit}" if unit == "B" else f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}GiB"
+
+
 def _per_bucket(h: dict) -> List[int]:
     """De-cumulate snapshot bucket rows ([[le, cum], ...]) into raw counts."""
     prev, out = 0, []
@@ -96,17 +110,24 @@ class ReplicaView:
         p95 = f"{lat['p95'] * 1e3:7.2f}" if lat else "      -"
         kh = _hist(self.telemetry, "engine_k")
         spark = _sparkline(_per_bucket(kh)) if kh else "-"
+        # KV-pool capacity gauges (int8 pools show ~half the bytes/slot)
+        pool_b = _gauge(self.telemetry, "engine_kv_pool_bytes")
+        slot_b = _gauge(self.telemetry, "engine_bytes_per_slot")
+        pool = _fmt_bytes(pool_b) if pool_b else "-"
+        bslot = _fmt_bytes(slot_b) if slot_b else "-"
         return (
             f"{self.idx:<3} {addr:<34} {'up':<5} "
             f"{st.get('streams_served', 0):>6} {st.get('rounds', 0):>7} "
             f"{st.get('mean_batch_fill', 0.0):>5.2f} "
-            f"{st.get('acceptance_rate', 0.0):>6.3f} {p50} {p95}  {spark}"
+            f"{st.get('acceptance_rate', 0.0):>6.3f} "
+            f"{bslot:>8} {pool:>8} {p50} {p95}  {spark}"
         )
 
 
 _HEADER = (
     f"{'ID':<3} {'ADDRESS':<34} {'STATE':<5} "
     f"{'SERVED':>6} {'ROUNDS':>7} {'FILL':>5} {'ACCEPT':>6} "
+    f"{'B/SLOT':>8} {'POOL':>8} "
     f"{'p50ms':>7} {'p95ms':>7}  K"
 )
 

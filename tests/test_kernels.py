@@ -90,6 +90,56 @@ def test_verify_attention_paged_equivalence_sweep(shape, dtype):
                                np.asarray(want, np.float32), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("shape", PAGED_SHAPES)
+def test_verify_attention_paged_int8_equivalence_sweep(shape):
+    """Dequant-in-kernel int8 pool == XLA oracle (dequantized gather) ==
+    dequantize-then-bf16-kernel, across uneven per-slot lengths, duplicate
+    scratch-slot padding, and per-(slot, head) scales (interpret mode)."""
+    n_slots, B, Sq, Hq, Hkv, Skv, D, blk = shape
+    ks = jax.random.split(jax.random.key(sum(shape) + 17), 7)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), jnp.bfloat16)
+    kf = jax.random.normal(ks[1], (n_slots + 1, Skv, Hkv, D))
+    vf = jax.random.normal(ks[2], (n_slots + 1, Skv, Hkv, D))
+    # per-(slot, head) symmetric scales, deliberately non-uniform
+    k_scale = jnp.abs(kf).max(axis=(1, 3)) / 127.0 + 1e-6
+    v_scale = jnp.abs(vf).max(axis=(1, 3)) / 127.0 + 1e-6
+    k_pool = jnp.clip(jnp.round(kf / k_scale[:, None, :, None]), -127, 127).astype(jnp.int8)
+    v_pool = jnp.clip(jnp.round(vf / v_scale[:, None, :, None]), -127, 127).astype(jnp.int8)
+    real = jax.random.permutation(ks[3], n_slots)[: max(B - 2, 1)]
+    slots = jnp.concatenate(
+        [real, jnp.full((B - real.shape[0],), n_slots)]
+    ).astype(jnp.int32)
+    kv_valid = jax.random.randint(ks[4], (B,), Sq, Skv + 1)
+
+    out = ops.verify_attention_paged(
+        q, k_pool, v_pool, slots, kv_valid, k_scale, v_scale, block_k=blk
+    )
+    want = ref.verify_attention_paged_ref(
+        q, k_pool, v_pool, slots, kv_valid, k_scale=k_scale, v_scale=v_scale
+    )
+    # dequantize the gathered rows up front, run the bf16 packed kernel:
+    # the in-kernel dequant must change nothing but the HBM stream width
+    kd = (k_pool[slots].astype(jnp.float32)
+          * k_scale[slots][:, None, :, None]).astype(jnp.bfloat16)
+    vd = (v_pool[slots].astype(jnp.float32)
+          * v_scale[slots][:, None, :, None]).astype(jnp.bfloat16)
+    out_dq = ops.verify_attention(q, kd, vd, kv_valid, block_k=blk)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_dq, np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_verify_attention_paged_int8_requires_scales():
+    n_slots, B, Sq, Hq, Hkv, Skv, D = 3, 2, 2, 4, 2, 64, 32
+    q = jnp.zeros((B, Sq, Hq, D), jnp.bfloat16)
+    pool = jnp.zeros((n_slots + 1, Skv, Hkv, D), jnp.int8)
+    slots = jnp.zeros((B,), jnp.int32)
+    kv_valid = jnp.full((B,), Sq, jnp.int32)
+    with pytest.raises(ValueError, match="k_scale"):
+        ops.verify_attention_paged(q, pool, pool, slots, kv_valid)
+
+
 def test_verify_attention_partial_tail_chunk_finite():
     """A cache length that is not a block multiple must degrade to masking,
     not crash or leak NaN from the out-of-bounds tail lanes."""

@@ -3,9 +3,25 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
 
+from repro.api import (
+    ClusterSpec,
+    FaultSpec,
+    ModelSpec,
+    SchedulerSpec,
+    ServeSpec,
+    SpecError,
+    System,
+    build_models,
+)
 from repro.configs.base import get_config
+from repro.core.server_engine import ServerEngine
+from repro.models.kvcache import PagedKVCache
 from repro.models.model_zoo import build_model
+from repro.transport import codec
 
 V = 128
 
@@ -41,3 +57,178 @@ def test_int8_kv_footprint_halves():
     b16 = c16["k"].size * c16["k"].dtype.itemsize
     b8 = c8["k"].size * c8["k"].dtype.itemsize
     assert b8 * 2 == b16
+
+
+# ---------------------------------------------------------------------------
+# quantized paged pool: spec plumbing, pool fidelity, migration, recovery
+# ---------------------------------------------------------------------------
+
+
+def _spec(**kw) -> ServeSpec:
+    base = dict(
+        backend="engine",
+        model=ModelSpec(vocab_size=64, target_layers=2, draft_layers=1,
+                        draft_noise=0.03),
+        scheduler=SchedulerSpec(slots=2, stagger_ticks=1),
+        devices=2,
+        prompt_len=6,
+        max_new=6,
+        k_max=3,
+        c_th=0.3,
+    )
+    base.update(kw)
+    return ServeSpec(**base)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return build_models(_spec().model)
+
+
+def test_spec_kv_dtype_validated_and_round_trips():
+    with pytest.raises(SpecError, match="kv_dtype"):
+        _spec(kv_dtype="fp8")
+    spec = _spec(kv_dtype="int8")
+    assert ServeSpec.from_json(spec.to_json()).kv_dtype == "int8"
+    # with_backend placement specs carry the dtype to remote workers
+    assert spec.with_backend("engine").kv_dtype == "int8"
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "zamba2-1.2b"])
+def test_int8_rejected_loudly_for_ssm_and_hybrid(arch):
+    spec = _spec(
+        kv_dtype="int8",
+        model=ModelSpec(arch=arch, draft_arch=arch, vocab_size=64,
+                        target_layers=2, draft_layers=1),
+    )
+    with pytest.raises(ValueError, match="gather/scatter"):
+        System.build(spec)
+
+
+def test_pool_resident_int8_close_to_bf16(models):
+    """Pool-level fidelity: the slot-indexed forward over an int8 pool must
+    track the bf16 pool's hidden states within a small relative error."""
+    m, p = models.target, models.target_params
+    toks = jax.random.randint(jax.random.key(2), (2, 12), 0, 64)
+    hidden = {}
+    for name, kw in (("bf16", {}), ("int8", {"kv_dtype": jnp.int8})):
+        pool = PagedKVCache(m, 2, 64, attn_chunk=16, **kw)
+        for b in range(2):
+            row = pool.make_row_cache()
+            _, row = m.prefill(p, toks[b:b + 1], row, attn_chunk=16)
+            pool.write_slot(b, row)
+        slots = jnp.arange(2, dtype=jnp.int32)
+        h, _, _ = m.decode_forward(p, pool.cache, toks[:, :4],
+                                   attn_chunk=16, slots=slots)
+        hidden[name] = h
+    rel = float(jnp.abs(hidden["bf16"] - hidden["int8"]).max()
+                / (jnp.abs(hidden["bf16"]).max() + 1e-9))
+    assert rel < 0.1, rel
+
+
+def test_int8_acceptance_rate_near_bf16(models):
+    """Seeded workload through the engine backend: quantizing the server
+    pool must not move the acceptance rate materially."""
+    acc = {}
+    for dt in ("bf16", "int8"):
+        result = System.build(_spec(kv_dtype=dt), models=models).serve()
+        acc[dt] = result.engine.acceptance_rate
+        assert all(len(s.tokens) == 6 for s in result.sessions)
+    assert abs(acc["int8"] - acc["bf16"]) < 0.15, acc
+
+
+def _int8_engine(models, **kw):
+    return ServerEngine(
+        models.target, models.target_params, n_slots=2, max_len=64,
+        k_max=3, greedy=True, attn_chunk=32, kv_dtype="int8", **kw,
+    )
+
+
+def test_int8_row_rides_codec_bit_exactly(models):
+    """ExportStream/ImportStream frames must carry int8 rows + f32 scale
+    leaves bit-exactly — migration at kv_dtype=int8 is only safe if the
+    quantized words and their dequant scales survive the wire unchanged."""
+    a = _int8_engine(models)
+    prompt = jax.random.randint(jax.random.key(6), (9,), 0, 64)
+    a.admit(7, prompt, 0.0)
+    stream, row = a.export_stream(7)
+    row = {k: np.asarray(v) for k, v in row.items()}
+    assert row["k"].dtype == np.int8 and row["v"].dtype == np.int8
+    assert row["k_scale"].dtype == np.float32
+    assert row["v_scale"].dtype == np.float32
+
+    state = codec.StreamState(
+        device_id=7, slot=stream.slot, prev_token=stream.prev_token,
+        committed=tuple(stream.committed), admitted_at=stream.admitted_at,
+        rounds=stream.rounds, drafted=stream.drafted,
+        accepted=stream.accepted, row=row,
+    )
+    wire, _ = codec.decode_frame(codec.encode_frame(codec.ImportStream(stream=state)))
+    got = wire.stream.row
+    assert sorted(got) == sorted(row)
+    for k in row:
+        assert got[k].dtype == row[k].dtype and got[k].shape == row[k].shape
+        np.testing.assert_array_equal(
+            got[k].view(np.uint16) if got[k].dtype == ml_dtypes.bfloat16 else got[k],
+            row[k].view(np.uint16) if row[k].dtype == ml_dtypes.bfloat16 else row[k],
+        )
+
+    # and the decoded row installs into a sibling engine bit-identically
+    b = _int8_engine(models, steps=a.steps)
+    b.import_stream(stream, got)
+    back = b.core.export_row(b.streams[7].slot)
+    for k in row:
+        np.testing.assert_array_equal(np.asarray(back[k]), row[k])
+
+
+@pytest.fixture(scope="module")
+def int8_ref_outputs(models):
+    spec = _spec(kv_dtype="int8").with_backend("reference")
+    return System.build(spec, models=models).serve().outputs
+
+
+@pytest.mark.parametrize(
+    "backend,replicas",
+    [
+        ("engine", 1),
+        pytest.param("cluster", 2, marks=pytest.mark.slow),
+        pytest.param("transport", 1, marks=pytest.mark.slow),
+    ],
+)
+def test_backend_token_identity_at_int8(models, int8_ref_outputs, backend, replicas):
+    spec = _spec(kv_dtype="int8").with_backend(
+        backend, cluster=ClusterSpec(replicas=replicas)
+    )
+    result = System.build(spec, models=models).serve()
+    assert result.outputs == int8_ref_outputs, \
+        f"{backend} diverged from the int8 reference"
+
+
+def test_chaos_kill_recovery_int8_token_identical(models):
+    """Kill 1 of 2 replicas mid-serve at kv_dtype=int8 with respawn +
+    device-replay recovery on: every session must complete with exactly the
+    fault-free twin's tokens.  Replay re-prefills the original prompt, so
+    the recomputed quantization scales are deterministic — this is the
+    determinism contract the scale layout was designed for."""
+    spec = _spec(
+        backend="cluster",
+        kv_dtype="int8",
+        devices=4,
+        cluster=ClusterSpec(
+            replicas=2,
+            faults={
+                "respawn": True, "recover_streams": True,
+                "backoff_base_s": 0.01, "backoff_max_s": 0.05,
+            },
+        ),
+        faults=FaultSpec(events=({"kind": "kill", "replica": 1, "round": 5},)),
+    )
+    want = System.build(
+        dataclasses.replace(spec, faults=FaultSpec()), models=models
+    ).serve().outputs
+
+    system = System.build(spec, models=models)
+    result = system.serve()
+    assert system.engine.evictions == 1 and system.engine.respawns == 1
+    assert result.lost_devices == [] and not any(s.shed for s in result.sessions)
+    assert result.outputs == want, "int8 recovery diverged from fault-free run"
