@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
@@ -15,13 +15,40 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
     return out, dt
 
 
+def flatten_row(r: dict, *, skip: tuple = ("spec",)) -> Dict[str, object]:
+    """Dotted-prefix flattening for the CSV path: nested dicts become
+    ``parent.key`` columns and lists of dicts become ``parent.N.key``
+    columns, so per-class / per-device fleet stats survive into the
+    ``derived`` field instead of being dropped.  Keys in ``skip`` (full
+    ServeSpec dumps) stay JSON-only — a flattened spec would drown the
+    CSV line."""
+    flat: Dict[str, object] = {}
+
+    def put(prefix: str, v) -> None:
+        if isinstance(v, dict):
+            for k, sub in v.items():
+                put(f"{prefix}.{k}" if prefix else str(k), sub)
+        elif isinstance(v, (list, tuple)) and any(isinstance(x, dict) for x in v):
+            for i, sub in enumerate(v):
+                put(f"{prefix}.{i}", sub)
+        else:
+            flat[prefix] = v
+
+    for k, v in r.items():
+        if k in skip:
+            continue
+        put(str(k), v)
+    return flat
+
+
 def emit(rows: List[dict], name: str) -> None:
     """Benchmark output contract: ``name,us_per_call,derived`` CSV rows.
 
-    Nested records (spec / stats sub-dicts from the uniform ``to_json``
-    surface) stay in the JSON artifact only — a flattened spec would drown
-    the CSV line."""
+    Nested records are flattened into dotted-prefix columns (see
+    :func:`flatten_row`); only ``spec`` sub-dicts (the uniform ``to_json``
+    surface) stay in the JSON artifact alone."""
     for r in rows:
+        r = flatten_row(r)
         us = r.pop("us_per_call", "")
-        derived = ";".join(f"{k}={v}" for k, v in r.items() if not isinstance(v, dict))
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
         print(f"{name},{us},{derived}")

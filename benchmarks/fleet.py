@@ -1,0 +1,280 @@
+"""Heterogeneous fleet capacity: tuned per-class configs vs best homogeneous.
+
+The deliverable behind ``repro tune``: on a mixed Jetson/RPi fleet with
+rate emulation on (each class throttled to its llama.cpp-measured drafting
+tokens/s), the auto-tuned per-class configuration must admit MORE streams
+than the best single fleet-wide (k, c_th) configuration at a matched
+deadline-miss rate and matched per-class goodput floors.
+
+Capacity here is measured on the REAL serving stack, not the simulator: the
+fleet is stepped up by (fractional) multipliers with the verify pool
+provisioned to match (``at_multiplier`` — slots = fleet size, so the
+serving deadline is what binds, not an admission queue), and a multiplier
+counts as admitted only while
+
+  * the trailing deadline-miss rate stays under the cap, and
+  * every class still commits >= ``FLOOR_FRAC`` of the per-device rate the
+    operator profiled on the base deployment (the Table I "equal response
+    rate" requirement — without it, capacity degenerates to "pace every
+    device to zero").
+
+Why heterogeneity wins: the slow class cannot afford long drafts (its
+throttled draft time eats the per-stream rate floor), while the fast class
+NEEDS long drafts (fewer verify rounds per committed token is what holds
+the server queue down as the fleet scales).  One fleet-wide (k, c_th) must
+betray one side of that tradeoff; per-class configs serve both.
+
+    PYTHONPATH=src python -m benchmarks.fleet --quick --json fleet.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import emit
+from repro.api import (
+    DeviceClassSpec,
+    FleetSpec,
+    KitCache,
+    ModelSpec,
+    SchedulerSpec,
+    ServeSpec,
+    System,
+    TransportSpec,
+    build_models,
+)
+from repro.tuning import (
+    TuneConfig,
+    at_multiplier,
+    measured_run,
+    tune,
+    with_class,
+)
+
+# Per-class goodput floor vs the profiled base deployment.  0.75 is the
+# "equal response rate" teeth: a fleet-wide c_th=0.0 pushes the noisy slow
+# class down to ~0.7x its baseline rate (longer rejected drafts throttle
+# its rounds), and a loose floor would let that config buy capacity with
+# the slow class's goodput — the exact degeneration Table I forbids.
+FLOOR_FRAC = 0.75
+
+
+def _base_spec(quick: bool) -> ServeSpec:
+    """The operator's deployment: 3 Jetson Orin Nano + 3 RPi 4B over
+    loopback transport with hardware-rate emulation on.  The per-class
+    draft_noise stands in for each board's draft model quality (the RPi's
+    noisy draft rarely survives verification; the Jetson's almost always
+    does), so per-class (k, c_th) genuinely matter."""
+    return ServeSpec(
+        backend="transport",
+        model=ModelSpec(
+            vocab_size=128,
+            target_layers=2,
+            draft_layers=1,
+            draft_noise=0.03,
+            seed=0,
+        ),
+        transport=TransportSpec(
+            link="loopback", verify_timeout=30.0, stagger_s=0.0
+        ),
+        scheduler=SchedulerSpec(
+            policy="continuous", slots=4, stagger_ticks=0
+        ),
+        fleet=FleetSpec(
+            classes=(
+                DeviceClassSpec(
+                    profile="jetson-orin-nano", count=3,
+                    draft_model="llama-1b-draft", bits=4,
+                    k=4, c_th=0.1, draft_noise=0.02,
+                ),
+                DeviceClassSpec(
+                    profile="rpi4b", count=3,
+                    draft_model="llama-1b-draft", bits=4,
+                    k=2, c_th=0.4, draft_noise=0.3,
+                ),
+            ),
+            # real throttled drafting: rate_scale compresses wall-clock while
+            # preserving the Jetson-vs-RPi ratio (21.0 vs 3.1 tok/s at 4-bit)
+            emulate_rates=True,
+            rate_scale=20.0,
+        ),
+        prompt_len=8,
+        prompt_seed=2,
+        # enough tokens that a k=4 high-acceptance stream still spans 4+
+        # verify rounds — the per-session trace-span rate estimator needs
+        # round gaps, and 8 tokens at 5/round gives it a single noisy one
+        max_new=16 if quick else 24,
+        k_max=4,
+        c_th=0.3,
+    )
+
+
+def homogeneous_variants(spec: ServeSpec, tcfg: TuneConfig) -> list:
+    """Every single fleet-wide (k, c_th) over the tuner's own sweep axes —
+    the same hardware mix, one configuration for all of it."""
+    out = []
+    for k in tcfg.k_choices(spec.k_max):
+        for c_th in tcfg.c_th_choices():
+            cand = spec
+            for i in range(len(spec.fleet.classes)):
+                cand = with_class(cand, i, k=k, c_th=c_th)
+            out.append((f"homo k={k} c_th={c_th}", cand))
+    return out
+
+
+def measured_capacity(
+    spec: ServeSpec,
+    *,
+    deadline_s: float,
+    miss_cap: float,
+    base_rates: list,
+    m_list,
+    models,
+    kits,
+    first_run: dict = None,
+) -> tuple:
+    """Real-engine admitted-stream capacity: largest fleet multiplier whose
+    measured run holds the miss cap and the per-class goodput floors.
+    Fractional multipliers step the fleet a few streams at a time, so two
+    configs whose knees differ by less than a fleet-doubling still resolve
+    to different capacities.
+
+    No shared step bundle here: compiled VerifySteps are slot-count-shaped
+    and every multiplier provisions its own slots, so each measured run
+    compiles (and warms) its own — the kit cache is what carries over."""
+    cap_streams, cap_m, runs = 0, 0, []
+    for i, m in enumerate(m_list):
+        scaled = at_multiplier(spec, m)
+        # the caller may have already measured the base point (the floors
+        # come from it) — reuse it so the floors can't race a re-measure
+        # of the very same spec
+        if i == 0 and first_run is not None:
+            meas = first_run
+        else:
+            meas = measured_run(
+                scaled, deadline_s=deadline_s, models=models, kits=kits,
+            )
+        floors_ok = all(
+            rate >= FLOOR_FRAC * base
+            for rate, base in zip(meas["class_rates"], base_rates)
+        )
+        admitted = meas["deadline_miss_rate"] <= miss_cap and floors_ok
+        runs.append(dict(meas, mult=round(m, 3),
+                         streams=scaled.fleet.total, admitted=admitted))
+        if not admitted:
+            break
+        cap_streams, cap_m = scaled.fleet.total, round(m, 3)
+    return cap_streams, cap_m, runs
+
+
+def run(quick: bool = False, json_path: str = "") -> list:
+    t0 = time.time()
+    base = _base_spec(quick)
+    tcfg = (TuneConfig(quick=True, n_validate=3, validate_mult=2,
+                       rate_floor_frac=FLOOR_FRAC) if quick
+            else TuneConfig(n_validate=4, validate_mult=2,
+                            rate_floor_frac=FLOOR_FRAC))
+    models = build_models(base.model)
+    kits = KitCache()
+
+    # one warm system up front populates the kit cache for the base classes;
+    # step bundles are slot-count-shaped, so capacity runs compile their own
+    warm = System.build(base, models=models, kits=kits)
+    warm.warmup()
+    warm.serve()
+
+    print(f"[fleet] tuning the base deployment ({base.fleet.total} devices, "
+          f"{len(base.fleet.classes)} classes)")
+    tres = tune(base, tcfg, models=models, kits=kits)
+    deadline_s = tres.deadline_s
+
+    # the admission floors: what the operator's profiled deployment already
+    # delivers per class, measured on the same stack every candidate uses
+    base_meas = measured_run(
+        at_multiplier(base, 1), deadline_s=deadline_s,
+        models=models, kits=kits,
+    )
+    base_rates = base_meas["class_rates"]
+    print(f"[fleet] deadline {deadline_s*1e3:.1f} ms, per-class rate floors "
+          f"{[round(FLOOR_FRAC * r, 1) for r in base_rates]} tok/s/device")
+
+    # fractional steps: with 3+3 base classes these land on 6, 8, 10, 12,
+    # 14, 18, ... streams — fine enough that configs whose knees differ by
+    # a few streams get different capacities instead of tying at a doubling
+    m_list = ((1, 4 / 3, 5 / 3, 2, 7 / 3, 3) if quick
+              else (1, 4 / 3, 5 / 3, 2, 7 / 3, 3, 4, 6))
+    candidates = (
+        [("baseline-hetero", base)]
+        + homogeneous_variants(base, tcfg)
+        + [("tuned", tres.winner)]
+    )
+    rows = []
+    for tag, cand in candidates:
+        streams, mult, runs = measured_capacity(
+            cand, deadline_s=deadline_s, miss_cap=tcfg.miss_cap,
+            base_rates=base_rates, m_list=m_list,
+            models=models, kits=kits,
+            first_run=base_meas if tag == "baseline-hetero" else None,
+        )
+        admitted_runs = [r for r in runs if r["admitted"]]
+        at_cap = admitted_runs[-1] if admitted_runs else runs[0]
+        rows.append({
+            "config": tag,
+            "classes": [
+                {"profile": rc.spec.profile, "count": rc.count,
+                 "k": rc.k, "c_th": rc.c_th}
+                for rc in cand.resolved_classes()
+            ],
+            "capacity_streams": streams,
+            "capacity_mult": mult,
+            "deadline_s": deadline_s,
+            "miss_at_capacity": at_cap["deadline_miss_rate"],
+            "class_rates_at_capacity": at_cap["class_rates"],
+            "wstgr_at_capacity": at_cap["wstgr"],
+            "runs": runs,
+        })
+        print(f"[fleet] {tag}: capacity {streams} streams (x{mult}), miss "
+              f"{at_cap['deadline_miss_rate']:.1%}, class rates "
+              f"{at_cap['class_rates']}")
+
+    homo = [r for r in rows if r["config"].startswith("homo")]
+    tuned = next(r for r in rows if r["config"] == "tuned")
+    best_homo = max(homo, key=lambda r: (r["capacity_streams"],
+                                         r["wstgr_at_capacity"]))
+    summary = {
+        "section": "summary",
+        "tuned_capacity_streams": tuned["capacity_streams"],
+        "best_homogeneous": best_homo["config"],
+        "best_homogeneous_capacity_streams": best_homo["capacity_streams"],
+        "tuned_beats_best_homogeneous": bool(
+            tuned["capacity_streams"] > best_homo["capacity_streams"]
+        ),
+        "miss_cap": tcfg.miss_cap,
+        "rate_floor_frac": FLOOR_FRAC,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    rows.append(summary)
+    print(f"[fleet] tuned {summary['tuned_capacity_streams']} vs best "
+          f"homogeneous ({best_homo['config']}) "
+          f"{summary['best_homogeneous_capacity_streams']} admitted streams "
+          f"-> tuned_beats_best_homogeneous="
+          f"{summary['tuned_beats_best_homogeneous']}")
+    emit(rows, "fleet_capacity")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({
+                "benchmark": "fleet_capacity", "quick": quick,
+                "tune": tres.to_json(), "rows": rows,
+            }, f, indent=2)
+        print(f"wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", type=str, default="",
+                    help="write the rows as a BENCH JSON artifact")
+    a = ap.parse_args()
+    run(quick=a.quick, json_path=a.json)

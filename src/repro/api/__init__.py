@@ -21,29 +21,43 @@ from repro.api.events import (
 from repro.api.spec import (
     BACKENDS,
     ClusterSpec,
+    DeviceClassSpec,
     FaultEvent,
     FaultPolicy,
     FaultSpec,
+    FleetSpec,
     ModelSpec,
     ReplicaSpec,
+    ResolvedClass,
     SchedulerSpec,
     ServeSpec,
     SpecError,
     TransportSpec,
 )
-from repro.api.system import ModelBundle, Session, System, build_models
+from repro.api.system import (
+    KitCache,
+    ModelBundle,
+    Session,
+    System,
+    build_draft_variant,
+    build_models,
+)
 
 __all__ = [
     "BACKENDS",
     "ClusterSpec",
+    "DeviceClassSpec",
     "DoneEvent",
     "Event",
     "FaultEvent",
     "FaultPolicy",
     "FaultSpec",
+    "FleetSpec",
+    "KitCache",
     "ModelBundle",
     "ModelSpec",
     "ReplicaSpec",
+    "ResolvedClass",
     "RoundEvent",
     "SchedulerSpec",
     "ServeSpec",
@@ -54,5 +68,6 @@ __all__ = [
     "System",
     "TokenEvent",
     "TransportSpec",
+    "build_draft_variant",
     "build_models",
 ]

@@ -26,8 +26,9 @@ from typing import Optional, Tuple, Union
 BACKENDS = ("reference", "engine", "transport", "cluster")
 LINKS = ("loopback", "sim")
 KCTLS = ("fixed", "adaptive")
+CCTLS = ("fixed", "adaptive")
 POLICIES = ("continuous", "deadline", "static")
-PLACEMENTS = ("least-loaded", "affinity", "round-robin")
+PLACEMENTS = ("least-loaded", "affinity", "round-robin", "class-affinity")
 QMODES = ("none", "f32", "f16", "int8")
 QUANT_BITS = (4, 8, 16)
 # server-pool KV storage dtype: "int8" stores pool rows quantized with
@@ -380,6 +381,146 @@ class SchedulerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceClassSpec:
+    """One homogeneous slice of a heterogeneous edge fleet.
+
+    A class names a *hardware profile* (``serving/devices.DEVICES`` — Jetson
+    Orin Nano, RPi 4B/5), how many devices of that class join the fleet, and
+    the per-class serving configuration the paper's ConfigSpec-style tuner
+    selects: draft model family + weight precision (keying the profile's
+    measured tokens/s table), speculation length ``k``, drafting confidence
+    ``c_th``, and the network profile the class reaches the server over.
+
+    Sentinel defaults inherit the spec-level value, so a class only states
+    what differs: ``k=0`` -> ``ServeSpec.k_max``, ``c_th=-1`` ->
+    ``ServeSpec.c_th``, ``net=""`` -> ``transport.net``, ``draft_layers=0``
+    -> ``model.draft_layers``, ``draft_noise=-1`` -> ``model.draft_noise``.
+    ``draft_layers``/``draft_noise`` emulate the class's draft *model* in
+    reduced-model land (a deeper, less-perturbed draft stands in for a
+    larger family member with higher acceptance).
+    """
+
+    profile: str = "rpi5"
+    count: int = 1
+    draft_model: str = "llama-1b-draft"  # family in the profile's rate table
+    bits: int = 4  # draft weight precision for the rate lookup
+    k: int = 0  # per-class speculation length; 0 = spec k_max
+    c_th: float = -1.0  # per-class confidence bar; -1 = spec c_th
+    net: str = ""  # per-class NetProfile; "" = transport.net
+    draft_layers: int = 0  # emulated draft depth; 0 = model.draft_layers
+    draft_noise: float = -1.0  # emulated draft quality; -1 = model.draft_noise
+
+    def validate(self) -> None:
+        # lazy: keep spec import light (same pattern as TransportSpec.net)
+        from repro.serving.devices import DEVICES, NETS
+
+        _check(
+            self.profile in DEVICES,
+            f"fleet class profile {self.profile!r} not in {sorted(DEVICES)}",
+        )
+        _check(self.count >= 1, f"fleet class count must be >= 1, got {self.count}")
+        table = DEVICES[self.profile].draft_rate
+        _check(
+            (self.draft_model, self.bits) in table,
+            f"fleet class {self.profile!r} has no draft rate for "
+            f"(draft_model={self.draft_model!r}, bits={self.bits}); available "
+            f"combos: {', '.join(f'({m!r}, {b})' for m, b in sorted(table))}",
+        )
+        _check(
+            self.c_th == -1.0 or 0.0 <= self.c_th <= 1.0,
+            f"fleet class c_th must be in [0, 1] (or -1 to inherit), got {self.c_th}",
+        )
+        _check(self.k >= 0, "fleet class k must be >= 0 (0 = spec k_max)")
+        _check(
+            not self.net or self.net in NETS,
+            f"fleet class net {self.net!r} not in {sorted(NETS)}",
+        )
+        _check(self.draft_layers >= 0, "fleet class draft_layers must be >= 0")
+        _check(
+            self.draft_noise == -1.0 or self.draft_noise >= 0.0,
+            "fleet class draft_noise must be >= 0 (or -1 to inherit)",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """A heterogeneous device fleet: an ordered list of device classes.
+
+    When ``classes`` is non-empty the fleet is *active*: ``ServeSpec.devices``
+    is derived from the class counts (device ids are assigned contiguously in
+    class order: class 0 gets ids ``[0, count_0)``, class 1 the next
+    ``count_1``, ...), and every backend resolves per-device k / c_th /
+    draft model / net from the owning class.
+
+    ``emulate_rates`` throttles each class's drafting to its hardware
+    profile's measured tokens/s (times ``rate_scale``, so benchmarks can
+    compress wall-clock while preserving the RPi-vs-Jetson ratios) — the
+    transport runtime sleeps between drafted tokens exactly like the
+    single-rate ``transport.draft_rate`` knob, but per class.
+    """
+
+    classes: Tuple[DeviceClassSpec, ...] = ()
+    emulate_rates: bool = False
+    rate_scale: float = 1.0
+
+    def __post_init__(self) -> None:
+        cls = self.classes
+        if isinstance(cls, (list, tuple)):
+            object.__setattr__(
+                self, "classes", tuple(_device_class_from(c) for c in cls)
+            )
+
+    @property
+    def active(self) -> bool:
+        return bool(self.classes)
+
+    @property
+    def total(self) -> int:
+        return sum(c.count for c in self.classes)
+
+    def validate(self) -> None:
+        for c in self.classes:
+            c.validate()
+        _check(self.rate_scale > 0, "fleet.rate_scale must be > 0")
+
+
+def _device_class_from(c) -> DeviceClassSpec:
+    if isinstance(c, DeviceClassSpec):
+        return c
+    if not isinstance(c, dict):
+        raise SpecError(
+            f"fleet.classes entries must be objects, got {type(c).__name__}"
+        )
+    return _sub_from_dict(DeviceClassSpec, "fleet.classes", c)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedClass:
+    """A fleet class with spec-level defaults filled in and its device-id
+    range assigned — what System / the tuner / the simulator consume."""
+
+    index: int
+    lo: int  # device ids [lo, hi) belong to this class
+    hi: int
+    spec: DeviceClassSpec
+    k: int
+    c_th: float
+    net: str
+    draft_layers: Optional[int]
+    draft_noise: float
+
+    @property
+    def count(self) -> int:
+        return self.hi - self.lo
+
+    def hardware_rate(self) -> float:
+        """The class's measured drafting tokens/s from its hardware profile."""
+        from repro.serving.devices import DEVICES
+
+        return DEVICES[self.spec.profile].rate(self.spec.draft_model, self.spec.bits)
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeSpec:
     """The full deployment: model pair + backend + workload + every knob.
 
@@ -400,7 +541,11 @@ class ServeSpec:
     transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
     cluster: ClusterSpec = dataclasses.field(default_factory=ClusterSpec)
     scheduler: SchedulerSpec = dataclasses.field(default_factory=SchedulerSpec)
-    # workload: the fleet this spec serves by default
+    # workload: the fleet this spec serves by default.  ``fleet`` makes it
+    # heterogeneous: when fleet.classes is non-empty, ``devices`` is DERIVED
+    # from the class counts (any explicit value is overwritten) and each
+    # device resolves k/c_th/draft/net from its owning class.
+    fleet: FleetSpec = dataclasses.field(default_factory=FleetSpec)
     devices: int = 6
     prompt_len: int = 12
     prompt_seed: int = 2
@@ -411,6 +556,7 @@ class ServeSpec:
     c_th: float = 0.3  # Eq. 1 dynamic-drafting confidence threshold
     greedy: bool = True
     kctl: str = "fixed"  # fixed | adaptive (closed-loop spec length)
+    cctl: str = "fixed"  # fixed | adaptive (closed-loop drafting confidence)
     max_len: int = 128
     attn_chunk: int = 32
     paged_attention: bool = True
@@ -430,6 +576,10 @@ class ServeSpec:
     faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
 
     def __post_init__(self) -> None:
+        if self.fleet.active:
+            # devices is derived from the fleet — class counts are the single
+            # source of truth, so replace(spec, fleet=...) sweeps stay coherent
+            object.__setattr__(self, "devices", self.fleet.total)
         self.validate()
 
     # -- validation ----------------------------------------------------------
@@ -440,6 +590,7 @@ class ServeSpec:
         self.transport.validate()
         self.cluster.validate()
         self.scheduler.validate()
+        self.fleet.validate()
         _check(self.devices >= 1, "devices must be >= 1")
         _check(self.prompt_len >= 1, "prompt_len must be >= 1")
         _check(self.max_new >= 1, "max_new must be >= 1")
@@ -485,6 +636,38 @@ class ServeSpec:
             "kctl='adaptive' needs codec_version >= 2 (v1 Verdict frames "
             "carry no accept_rate/queue_depth feedback)",
         )
+        _check(self.cctl in CCTLS, f"cctl {self.cctl!r} not in {CCTLS}")
+        _check(
+            self.cctl != "adaptive" or self.backend == "transport",
+            "cctl='adaptive' needs backend='transport': the acceptance/"
+            "queue-depth feedback rides Verdict frames",
+        )
+        _check(
+            self.cctl != "adaptive" or self.transport.codec_version >= 2,
+            "cctl='adaptive' needs codec_version >= 2 (v1 Verdict frames "
+            "carry no accept_rate/queue_depth feedback)",
+        )
+        # heterogeneous fleets
+        _check(
+            not self.fleet.active or self.backend != "reference",
+            "a heterogeneous fleet needs backend 'engine', 'cluster', or "
+            "'transport': the lock-step reference loop batches every device "
+            "through one (k, c_th, draft) configuration (use "
+            "fleet_reference_specs() for per-class ground truth)",
+        )
+        if self.fleet.active:
+            for rc in self.resolved_classes():
+                _check(
+                    1 <= rc.k <= self.k_max,
+                    f"fleet class {rc.index} ({rc.spec.profile!r}) resolves "
+                    f"k={rc.k}, outside [1, k_max={self.k_max}] (the engine's "
+                    "verify width is sized by k_max)",
+                )
+        _check(
+            self.cluster.placement != "class-affinity" or self.fleet.active,
+            "cluster.placement 'class-affinity' needs a fleet: without "
+            "device classes it has nothing to group by",
+        )
         self.faults.validate()
         _check(
             not self.faults.active or self.backend in ("cluster", "transport"),
@@ -510,20 +693,78 @@ class ServeSpec:
             return self.scheduler.slots
         return -(-self.devices // self.cluster.n_replicas)  # ceil div
 
+    def resolved_classes(self) -> Tuple[ResolvedClass, ...]:
+        """The fleet with spec-level defaults filled in and contiguous
+        device-id ranges assigned; empty when the fleet is inactive."""
+        out, lo = [], 0
+        for i, c in enumerate(self.fleet.classes):
+            hi = lo + c.count
+            out.append(ResolvedClass(
+                index=i, lo=lo, hi=hi, spec=c,
+                k=c.k or self.k_max,
+                c_th=c.c_th if c.c_th >= 0 else self.c_th,
+                net=c.net or self.transport.net,
+                draft_layers=c.draft_layers or self.model.draft_layers,
+                draft_noise=c.draft_noise if c.draft_noise >= 0 else self.model.draft_noise,
+            ))
+            lo = hi
+        return tuple(out)
+
+    def class_of(self, device_id: int) -> Optional[ResolvedClass]:
+        """The resolved class owning ``device_id``; None without a fleet."""
+        for rc in self.resolved_classes():
+            if rc.lo <= device_id < rc.hi:
+                return rc
+        return None
+
+    def fleet_reference_specs(self) -> Tuple[Tuple[int, int, "ServeSpec"], ...]:
+        """Per-class lock-step ground truth: each fleet class is homogeneous
+        (one k, c_th, draft config), so it has an exact single-class
+        reference equivalent.  Returns ``(lo, hi, refspec)`` per class —
+        serve the refspec with the fleet prompts' ``[lo:hi]`` slice and the
+        committed streams must match token-for-token (launch/serve.py
+        ``--check`` does exactly that)."""
+        out = []
+        for rc in self.resolved_classes():
+            model = dataclasses.replace(
+                self.model,
+                draft_layers=rc.draft_layers,
+                draft_noise=rc.draft_noise,
+            )
+            ref = self.with_backend(
+                "reference",
+                fleet=FleetSpec(),
+                devices=rc.count,
+                k_max=rc.k,
+                c_th=rc.c_th,
+                model=model,
+            )
+            out.append((rc.lo, rc.hi, ref))
+        return tuple(out)
+
     def with_backend(self, backend: str, **changes) -> "ServeSpec":
         """Same deployment on a different backend (replicas reset to 1 and
-        kctl to fixed where the target backend demands it, BEFORE the
+        kctl/cctl to fixed where the target backend demands it, BEFORE the
         replace so the result always validates)."""
         kw = dict(changes)
         cluster = kw.pop("cluster", self.cluster)
         kctl = kw.pop("kctl", self.kctl)
+        cctl = kw.pop("cctl", self.cctl)
         if backend in ("reference", "engine") and (
             cluster.n_replicas != 1 or cluster.has_remote
         ):
             cluster = dataclasses.replace(cluster, replicas=1)
-        if backend != "transport" and kctl == "adaptive":
-            kctl = "fixed"
-        return dataclasses.replace(self, backend=backend, cluster=cluster, kctl=kctl, **kw)
+        if backend != "transport":
+            if kctl == "adaptive":
+                kctl = "fixed"
+            if cctl == "adaptive":
+                cctl = "fixed"
+        fleet = kw.get("fleet", self.fleet)
+        if not fleet.active and cluster.placement == "class-affinity":
+            cluster = dataclasses.replace(cluster, placement="least-loaded")
+        return dataclasses.replace(
+            self, backend=backend, cluster=cluster, kctl=kctl, cctl=cctl, **kw
+        )
 
     # -- serialization -------------------------------------------------------
 
@@ -536,6 +777,7 @@ class ServeSpec:
         if isinstance(reps, tuple):
             d["cluster"]["replicas"] = [dict(r) for r in reps]
         d["faults"]["events"] = [dict(e) for e in d["faults"]["events"]]
+        d["fleet"]["classes"] = [dict(c) for c in d["fleet"]["classes"]]
         return d
 
     def to_json_str(self, indent: int = 2) -> str:
@@ -561,6 +803,7 @@ class ServeSpec:
             ("transport", TransportSpec),
             ("cluster", ClusterSpec),
             ("scheduler", SchedulerSpec),
+            ("fleet", FleetSpec),
             ("faults", FaultSpec),
         ):
             if name in data:

@@ -115,6 +115,36 @@ def build_models(mspec) -> ModelBundle:
     return ModelBundle(tcfg, dcfg, target, draft, tp, dp)
 
 
+def build_draft_variant(mspec, *, draft_layers: Optional[int], draft_noise: float):
+    """One device class's draft bundle: the spec's draft arch/vocab/seed with
+    overridden depth and perturbation noise.  Deterministic — params come
+    from ``key(seed+1)`` exactly like :func:`build_models`, so a class whose
+    overrides equal the spec model's reproduces ``models.draft_params``
+    bit-for-bit (System.build just reuses the shared bundle there)."""
+    dcfg = dataclasses.replace(
+        get_config(mspec.draft_arch).reduced(), name="edge-draft", vocab_size=mspec.vocab_size
+    )
+    if draft_layers is not None:
+        dcfg = dataclasses.replace(dcfg, num_layers=draft_layers)
+    draft = build_model(dcfg)
+    dp = perturb_params(draft.init_params(jax.random.key(mspec.seed + 1)), draft_noise)
+    return dcfg, draft, dp
+
+
+class KitCache:
+    """Shared per-class draft weights + jitted drafting kits for spec sweeps.
+
+    Tuner candidates that agree on a class's draft config (arch, layers,
+    noise, vocab, seed) reuse the built params; candidates that also agree
+    on the kit knobs (k, c_th, greedy, attn_chunk) reuse the compiled
+    EdgeDeviceKit — a sweep over fleet candidates pays each distinct draft
+    build and device-side compile once instead of once per System."""
+
+    def __init__(self) -> None:
+        self.drafts: Dict[tuple, tuple] = {}  # draft key -> (cfg, model, params)
+        self.kits: Dict[tuple, EdgeDeviceKit] = {}
+
+
 # ---------------------------------------------------------------------------
 # sessions
 # ---------------------------------------------------------------------------
@@ -246,11 +276,14 @@ class System:
         models: ModelBundle,
         engine: Union[ServerEngine, Router, None],
         kit: Optional[EdgeDeviceKit],
+        class_kits: Optional[List[EdgeDeviceKit]] = None,
     ):
         self.spec = spec
         self.models = models
         self.engine = engine  # ServerEngine | Router | None (reference)
         self.kit = kit
+        # fleet backends: one kit per resolved device class (kit_for routes)
+        self.class_kits: List[EdgeDeviceKit] = list(class_kits or [])
         self._waiting: Dict[int, Session] = {}
         self._running: Dict[int, Session] = {}
         self._used_ids: set = set()
@@ -271,6 +304,7 @@ class System:
         models: Optional[ModelBundle] = None,
         steps=None,
         kit: Optional[EdgeDeviceKit] = None,
+        kits: Optional[KitCache] = None,
         warmup: bool = False,
     ) -> "System":
         """Construct the backend the spec names.
@@ -278,6 +312,9 @@ class System:
         ``models`` / ``steps`` / ``kit`` let spec sweeps share built weights,
         a compiled VerifySteps bundle, and the device-side jitted kit across
         Systems (homogeneous configs only — the engine validates sharing).
+        ``kits`` (a :class:`KitCache`) does the same for FLEET sweeps: the
+        per-class draft bundles and jitted kits candidates have in common
+        are built once and shared across the Systems the sweep constructs.
         """
         spec.validate()
         if spec.telemetry:
@@ -357,7 +394,7 @@ class System:
                     models.target_params,
                     replicas=spec.cluster.n_replicas,
                     n_slots=n_slots,
-                    placement=spec.cluster.placement,
+                    placement=cls._placement(spec),
                     migrate_on_retire=spec.cluster.migrate_on_retire,
                     faults=spec.cluster.faults,
                     **engine_kw,
@@ -374,10 +411,70 @@ class System:
             greedy=spec.greedy,
             attn_chunk=spec.attn_chunk,
         )
-        system = cls(spec, models, engine, kit)
+        class_kits = cls._build_class_kits(spec, models, kits) if spec.fleet.active else None
+        system = cls(spec, models, engine, kit, class_kits=class_kits)
         if warmup:
             system.warmup()
         return system
+
+    @classmethod
+    def _placement(cls, spec: ServeSpec):
+        """The Router placement argument: the spec's policy name, or a
+        ClassAffinityPlacement wired to the fleet's device→class map so
+        each device class gets a home replica (drafts of one class share
+        verify batches — one k, one draft distribution per batch)."""
+        if spec.cluster.placement == "class-affinity" and spec.fleet.active:
+            from repro.cluster.router import ClassAffinityPlacement
+
+            ranges = tuple((rc.lo, rc.hi) for rc in spec.resolved_classes())
+
+            def class_index(dev: int, _ranges=ranges) -> int:
+                for i, (lo, hi) in enumerate(_ranges):
+                    if lo <= dev < hi:
+                        return i
+                return dev  # late-joined id outside the fleet: own bucket
+
+            return ClassAffinityPlacement(class_index)
+        return spec.cluster.placement
+
+    @classmethod
+    def _build_class_kits(
+        cls, spec: ServeSpec, models: ModelBundle, cache: Optional[KitCache]
+    ) -> List[EdgeDeviceKit]:
+        """One jitted drafting kit per resolved fleet class.  Classes whose
+        draft config matches the spec model ride the shared ModelBundle
+        (same params object — no rebuild); distinct configs build their own
+        deterministic variant.  Identical (draft, k, c_th) classes share
+        one kit — and via ``cache`` so do identical classes across sweep
+        candidates — so the device-side scan compiles once per distinct
+        shape."""
+        mspec = spec.model
+        cache = cache if cache is not None else KitCache()
+        out: List[EdgeDeviceKit] = []
+        for rc in spec.resolved_classes():
+            dkey = (mspec.draft_arch, rc.draft_layers, rc.draft_noise,
+                    mspec.vocab_size, mspec.seed)
+            if (rc.draft_layers, rc.draft_noise) == (mspec.draft_layers, mspec.draft_noise):
+                bundle = (models.draft_cfg, models.draft, models.draft_params)
+            else:
+                bundle = cache.drafts.get(dkey)
+                if bundle is None:
+                    bundle = build_draft_variant(
+                        mspec, draft_layers=rc.draft_layers, draft_noise=rc.draft_noise
+                    )
+                    cache.drafts[dkey] = bundle
+            _, dmodel, dparams = bundle
+            kkey = dkey + (rc.k, rc.c_th, spec.greedy, spec.attn_chunk)
+            kit_c = cache.kits.get(kkey)
+            if kit_c is None:
+                kit_c = EdgeDeviceKit(
+                    dmodel, dparams,
+                    k_max=rc.k, c_th=rc.c_th,
+                    greedy=spec.greedy, attn_chunk=spec.attn_chunk,
+                )
+                cache.kits[kkey] = kit_c
+            out.append(kit_c)
+        return out
 
     @classmethod
     def _build_remote_cluster(cls, spec: ServeSpec, models, engine_kw) -> Router:
@@ -443,7 +540,7 @@ class System:
             raise
         return Router(
             replicas,
-            placement=spec.cluster.placement,
+            placement=cls._placement(spec),
             migrate_on_retire=spec.cluster.migrate_on_retire,
             faults=policy,
         )
@@ -489,6 +586,27 @@ class System:
                 self.models.vocab,
             )
         )
+
+    def kit_for(self, device_id: int) -> EdgeDeviceKit:
+        """The jitted drafting kit serving ``device_id`` — its device
+        class's kit under a fleet spec, else the homogeneous spec kit."""
+        if self.class_kits:
+            rc = self.spec.class_of(device_id)
+            if rc is not None:
+                return self.class_kits[rc.index]
+        return self.kit
+
+    def rate_for(self, device_id: int) -> Optional[float]:
+        """Draft-rate throttle for ``device_id`` in tokens/s (None means
+        unthrottled): the class's measured hardware rate scaled by
+        ``fleet.rate_scale`` when the fleet emulates device speeds, else
+        the transport-level ``draft_rate``."""
+        fleet = self.spec.fleet
+        if fleet.active and fleet.emulate_rates:
+            rc = self.spec.class_of(device_id)
+            if rc is not None:
+                return rc.hardware_rate() * fleet.rate_scale
+        return self.spec.transport.draft_rate
 
     # -- sessions ------------------------------------------------------------
 
@@ -704,7 +822,7 @@ class System:
                 continue
             if self.engine.admit(dev_id, s.prompt, now) is None:
                 break  # pool full: stays waiting, admitted when a slot frees
-            s._device = self.kit.spawn(
+            s._device = self.kit_for(dev_id).spawn(
                 dev_id,
                 s.prompt,
                 max_len=self.spec.max_len,
@@ -839,13 +957,18 @@ class System:
         spec, tspec = self.spec, self.spec.transport
         server = TransportServer(self.engine)
 
+        def net_for(dev: int) -> str:
+            rc = spec.class_of(dev)
+            return rc.net if rc is not None else tspec.net
+
         def relink(dev: int):
-            # mid-stream reconnect hook: a fresh link of the same flavor,
-            # attached to the server before the client re-Hellos on it
+            # mid-stream reconnect hook: a fresh link of the same flavor
+            # (and the device's class net), attached to the server before
+            # the client re-Hellos on it
             async def dial():
                 fresh = make_link(
                     tspec.link,
-                    net=NETS[tspec.net],
+                    net=NETS[net_for(dev)],
                     seed=spec.session_seed_base + dev,
                 )
                 server.attach(fresh.server)
@@ -857,12 +980,12 @@ class System:
         for idx, s in enumerate(sessions):
             link = make_link(
                 tspec.link,
-                net=NETS[tspec.net],
+                net=NETS[net_for(s.device_id)],
                 seed=spec.session_seed_base + s.device_id,
             )
             server.attach(link.server)
             client = EdgeClient(
-                self.kit,
+                self.kit_for(s.device_id),
                 s.device_id,
                 s.prompt,
                 link.device,
@@ -872,8 +995,9 @@ class System:
                 pipeline=tspec.pipeline,
                 verify_timeout=tspec.verify_timeout,
                 admit_timeout=tspec.verify_timeout,
-                draft_rate=tspec.draft_rate,
+                draft_rate=self.rate_for(s.device_id),
                 kctl=spec.kctl,
+                cctl=spec.cctl,
                 seed=spec.session_seed_base + s.device_id,
                 on_round=s._note_round,
                 reconnect=relink(s.device_id),

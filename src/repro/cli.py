@@ -7,6 +7,7 @@
     repro top --connect tcp:host:7001          live fleet table (control plane)
     repro trace --spec spec.json               per-round trace JSONL dump
     repro chaos --kill 1:5 --check             seeded fault injection + identity
+    repro tune --spec fleet.json --quick       auto-tune a heterogeneous fleet
 
 A global ``--log-level LEVEL`` (anywhere on the command line) configures the
 ``repro.*`` logger hierarchy before the subcommand runs; ``REPRO_LOG_LEVEL``
@@ -33,6 +34,9 @@ commands:
   chaos    run a deterministic fault schedule (kill/hang/drop/delay/flap at
            fixed rounds) against a replica fleet and report what the
            supervision layer recovered (see: repro chaos --help)
+  tune     profile a heterogeneous fleet spec, sweep per-class candidates
+           through the calibrated simulator + cost model, and emit the
+           winning ServeSpec + BENCH artifact (see: repro tune --help)
 
 Run configurations are declarative ServeSpec JSON artifacts; `repro serve
 --dump-spec` converts any flag combination into one.
@@ -94,6 +98,11 @@ def main(argv: Optional[List[str]] = None) -> None:
         from repro.launch.chaos import main as chaos_main
 
         chaos_main(rest)
+        return
+    if cmd == "tune":
+        from repro.launch.tune import main as tune_main
+
+        tune_main(rest)
         return
     print(_USAGE, end="", file=sys.stderr)
     raise SystemExit(f"repro: unknown command {cmd!r}")

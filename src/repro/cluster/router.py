@@ -66,7 +66,7 @@ import threading
 import time
 from collections.abc import Mapping
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 import jax
 import numpy as np
@@ -214,8 +214,37 @@ class RoundRobinPlacement(PlacementPolicy):
         return None
 
 
+class ClassAffinityPlacement(PlacementPolicy):
+    """Home a heterogeneous fleet's device CLASSES on replicas (class i ->
+    replica i % n): same-class streams share a verify batch, so each
+    replica's rounds keep one (k, c_th, draft-model) shape instead of
+    interleaving a Jetson's 4-token rounds with an RPi's singletons.  Spills
+    to least-loaded when the home replica is full or dead.
+
+    ``class_of`` maps device_id -> class index; System supplies it from the
+    fleet spec.  Without a map (bare Router construction) it degrades to
+    per-device affinity.
+    """
+
+    name = "class-affinity"
+
+    def __init__(self, class_of: Optional[Callable[[int], int]] = None) -> None:
+        self.class_of = class_of
+
+    def choose(self, router: "Router", device_id: int) -> Optional[int]:
+        cls = self.class_of(device_id) if self.class_of is not None else device_id
+        home = cls % len(router.replicas)
+        r = router.replicas[home]
+        if not r.dead and r.n_free > 0:
+            return home
+        return LeastLoadedPlacement().choose(router, device_id)
+
+
 PLACEMENT_POLICIES = {
-    p.name: p for p in (LeastLoadedPlacement, AffinityPlacement, RoundRobinPlacement)
+    p.name: p for p in (
+        LeastLoadedPlacement, AffinityPlacement, RoundRobinPlacement,
+        ClassAffinityPlacement,
+    )
 }
 
 

@@ -487,11 +487,15 @@ class EdgeDeviceKit:
         self.model = draft_model
         self.params = draft_params
         self.k_max = k_max
+        self.c_th = float(c_th)
         self._prefill = jax.jit(
             verification.make_prefill_step(draft_model, attn_chunk=attn_chunk)
         )
+        # c_th rides as a TRACED scalar argument (it only feeds a jnp compare
+        # inside the scan), so the confidence controller can move the bar
+        # round to round without ever triggering a recompile
         self._draft = jax.jit(
-            lambda p, cache, prev, key: drafting.draft_round(
+            lambda p, cache, prev, key, c_th: drafting.draft_round(
                 draft_model,
                 p,
                 cache,
@@ -574,14 +578,17 @@ class EdgeDevice:
         self.draft_seconds = 0.0  # wall time inside draft() — calibrates
         # the simulator's device_rate against real measured drafting
 
-    def draft(self, k: Optional[int] = None) -> np.ndarray:
+    def draft(self, k: Optional[int] = None, c_th: Optional[float] = None) -> np.ndarray:
         """Draft up to min(k, k_max) tokens; returns the variable-length
         proposal.  ``pending_q`` holds the matching q(token) row for
-        sampling-mode submits (engine.submit(..., draft_q=dev.pending_q))."""
+        sampling-mode submits (engine.submit(..., draft_q=dev.pending_q)).
+        ``c_th`` overrides the kit's confidence bar for this round (the
+        adaptive confidence controller moves it from verdict feedback)."""
         assert self._pending is None, "previous round still awaiting a verdict"
         t = time.perf_counter()
+        cc = self.kit.c_th if c_th is None else float(c_th)
         self.key, kk = jax.random.split(self.key)
-        dres = _clamp_draft(self.kit._draft(self.kit.params, self.cache, self.prev, kk), k)
+        dres = _clamp_draft(self.kit._draft(self.kit.params, self.cache, self.prev, kk, cc), k)
         self._set_pending(dres)
         n = int(dres.lengths[0])
         toks = np.asarray(dres.tokens[0, :n])  # materialize: honest timing
@@ -594,7 +601,9 @@ class EdgeDevice:
         n = int(dres.lengths[0])
         self.pending_q = np.asarray(dres.q_sel[0, :n])
 
-    def draft_ahead(self, k: Optional[int] = None) -> Optional[np.ndarray]:
+    def draft_ahead(
+        self, k: Optional[int] = None, c_th: Optional[float] = None
+    ) -> Optional[np.ndarray]:
         """Pre-draft the next round while the current one is in flight.
 
         Returns the ahead proposal (or None if unsupported); it becomes live
@@ -603,6 +612,7 @@ class EdgeDevice:
         assert self._pending is not None, "draft_ahead needs a round in flight"
         if self._ahead is not None or not self.kit.supports_pipeline:
             return None
+        cc = self.kit.c_th if c_th is None else float(c_th)
         pend = self._pending
         n = int(pend.lengths[0])
         last = pend.tokens[:, n - 1]
@@ -615,7 +625,7 @@ class EdgeDevice:
         cache_acc = drafting.resume_after_verify(self.kit.model, pend, jnp.asarray([n], jnp.int32))
         self.key, kk = jax.random.split(self.key)
         prev_guess = jnp.asarray([bonus_guess], jnp.int32)
-        dres = _clamp_draft(self.kit._draft(self.kit.params, cache_acc, prev_guess, kk), k)
+        dres = _clamp_draft(self.kit._draft(self.kit.params, cache_acc, prev_guess, kk, cc), k)
         self._ahead = (bonus_guess, cache_acc, dres)
         m = int(dres.lengths[0])
         return np.asarray(dres.tokens[0, :m])

@@ -86,6 +86,7 @@ def spec_from_args(args) -> ServeSpec:
         k_max=args.k_max,
         c_th=args.c_th,
         kctl=args.kctl,
+        cctl=args.cctl,
         paged_attention=args.paged_attention,
         telemetry=args.telemetry,
     )
@@ -166,6 +167,28 @@ def serve(spec: ServeSpec, *, check: bool = True) -> dict:
             print("skipping equivalence check: fallback released unverified tokens")
         elif spec.kctl != "fixed":
             print("skipping equivalence check: adaptive spec length changes round shapes")
+        elif spec.fleet.active:
+            # heterogeneous fleet: each class is internally homogeneous, so
+            # check every class against its own lock-step reference on the
+            # SAME prompt slice the fleet run served (devices lo..hi)
+            prompts = system.prompts()
+            match = True
+            for lo, hi, refspec in spec.fleet_reference_specs():
+                ref = System.build(refspec).serve(prompts[lo:hi])
+                # the reference slice serves as devices 0..count-1; the
+                # fleet run served the same prompts as devices lo..hi-1
+                if any(
+                    ref.outputs[i] != result.outputs[lo + i]
+                    for i in range(hi - lo)
+                ):
+                    match = False
+            n = len(spec.fleet.classes)
+            print(f"greedy per-class reference match ({n} classes): "
+                  f"{'OK' if match else 'MISMATCH'}")
+            assert match, (
+                f"{spec.backend} fleet serving must be output-identical to "
+                "the per-class lock-step references"
+            )
         else:
             ref = System.build(
                 spec.with_backend("reference"), models=system.models
@@ -206,6 +229,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--kctl", choices=("fixed", "adaptive"), default="fixed",
                     help="spec-length control: fixed k_max, or closed-loop "
                          "AIMD on Verdict acceptance/queue-depth feedback")
+    ap.add_argument("--cctl", choices=("fixed", "adaptive"), default="fixed",
+                    help="confidence-threshold control: fixed c_th, or "
+                         "per-device adaptation on Verdict acceptance "
+                         "feedback (transport backend, qmode >= int8)")
     ap.add_argument("--slots", type=int, default=0,
                     help="cache pool rows PER REPLICA (0: ceil(devices/replicas))")
     ap.add_argument("--k-max", type=int, default=4)

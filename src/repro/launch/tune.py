@@ -1,0 +1,94 @@
+"""``repro tune`` — profiling-driven auto-configuration of a fleet spec.
+
+    repro tune --spec examples/specs/fleet.json --quick --json bench.json \
+               --out tuned.json
+
+Profiles a short measured run of the fleet (per-class acceptance, verify
+span calibration), sweeps per-class candidates (k, c_th, draft model,
+quant bits; placement when there is a replica set) through the calibrated
+simulator + Eq. 2 cost model, validates the top candidates on the real
+engine, and emits:
+
+  stdout         the sweep narrative + winning per-class configuration
+  --out PATH     the winning ServeSpec as a committable JSON artifact
+                 (``repro serve --spec PATH --check`` must accept it)
+  --json PATH    the full BENCH record: calibration, every scored
+                 candidate, real-engine validation rows
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional
+
+from repro.api import ServeSpec, SpecError
+from repro.serving.devices import SERVERS
+from repro.tuning import TuneConfig, tune
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro tune",
+        description="Auto-tune a heterogeneous fleet ServeSpec from a "
+                    "profiled run (see src/repro/tuning/).",
+    )
+    ap.add_argument("--spec", type=str, required=True,
+                    help="fleet ServeSpec JSON artifact (fleet.classes non-empty)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep axes + shorter probes (CI smoke)")
+    ap.add_argument("--server", choices=sorted(SERVERS), default="a100x4",
+                    help="ServerProfile for roofline calibration + Eq. 2 cost")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-round deadline seconds (0: derive from the "
+                         "profiled round latency)")
+    ap.add_argument("--miss-cap", type=float, default=0.1,
+                    help="matched deadline-miss rate across candidates")
+    ap.add_argument("--validate", type=int, default=2,
+                    help="finalists to re-measure on the real engine")
+    ap.add_argument("--validate-mult", type=int, default=1,
+                    help=">1: rank surviving finalists by throughput with "
+                         "the fleet scaled by this factor (stress ranking)")
+    ap.add_argument("--json", type=str, default="",
+                    help="write the full tuning record as a BENCH artifact")
+    ap.add_argument("--out", type=str, default="",
+                    help="write the winning ServeSpec JSON here")
+    return ap
+
+
+def main(argv: Optional[list] = None) -> None:
+    args = build_parser().parse_args(argv)
+    try:
+        with open(args.spec) as f:
+            spec = ServeSpec.from_json(f.read())
+    except OSError as e:
+        raise SystemExit(f"cannot read spec {args.spec}: {e}")
+    except SpecError as e:
+        raise SystemExit(f"invalid ServeSpec: {e}")
+    if not spec.fleet.active:
+        raise SystemExit(
+            f"{args.spec} has no fleet.classes — repro tune configures "
+            "heterogeneous fleets (see examples/specs/fleet.json)"
+        )
+    tcfg = TuneConfig(
+        server=args.server,
+        deadline_s=args.deadline,
+        miss_cap=args.miss_cap,
+        n_validate=args.validate,
+        validate_mult=args.validate_mult,
+        quick=args.quick,
+    )
+    result = tune(spec, tcfg)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(result.winner.to_json_str())
+        print(f"wrote winning spec to {args.out} "
+              f"(verify: repro serve --spec {args.out} --check)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "tune", "quick": args.quick,
+                       **result.to_json()}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,3 +40,20 @@ def sled_cost_per_1k(device_rate: float, device: DeviceProfile,
     dev = hourly_cost(device.price_usd, device.power_w)
     srv = hourly_cost(server.price_usd, server.power_w) * server_share
     return 1000.0 / (3600.0 * device_rate) * (dev + srv)
+
+
+def fleet_cost_per_1k(
+    class_rates: list, server: ServerProfile, *, server_busy_frac: float = 1.0
+) -> float:
+    """Eq. 2 over a heterogeneous fleet: ``class_rates`` is
+    ``[(count, committed_tok_s_per_device, DeviceProfile), ...]`` — one
+    entry per device class.  Device hours are paid per class; the ONE
+    shared server's hourly cost (scaled by how busy verification keeps it)
+    is spread over every token the fleet commits, which is what makes
+    packing slow cheap devices next to fast ones pay off."""
+    total_rate = sum(n * r for n, r, _ in class_rates)
+    if total_rate <= 0:
+        return float("inf")
+    dev_hourly = sum(n * hourly_cost(p.price_usd, p.power_w) for n, _, p in class_rates)
+    srv_hourly = hourly_cost(server.price_usd, server.power_w) * server_busy_frac
+    return 1000.0 / (3600.0 * total_rate) * (dev_hourly + srv_hourly)

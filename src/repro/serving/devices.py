@@ -58,7 +58,16 @@ class DeviceProfile:
     net: NetProfile = WLAN
 
     def rate(self, model: str = "llama-1b-draft", bits: int = 4) -> float:
-        return self.draft_rate[(model, bits)]
+        try:
+            return self.draft_rate[(model, bits)]
+        except KeyError:
+            combos = ", ".join(
+                f"({m!r}, {b})" for m, b in sorted(self.draft_rate)
+            )
+            raise KeyError(
+                f"device class {self.name!r} has no draft rate for "
+                f"(model={model!r}, bits={bits}); available combos: {combos}"
+            ) from None
 
 
 RPI4B = DeviceProfile(

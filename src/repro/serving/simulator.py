@@ -25,10 +25,24 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import random
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from repro.core.scheduler import BatchPlanner, VerifyRequest
 from repro.serving.devices import ServerProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassLoad:
+    """One heterogeneous device class in the service area: ``count`` devices
+    sharing a drafting rate, spec length, acceptance and (optionally) their
+    own network RTT.  ``SimConfig.classes`` holds one per fleet class —
+    the calibrated counterpart of a ServeSpec's resolved fleet."""
+
+    count: int = 1
+    device_rate: float = 8.0        # draft tokens/s (devices.py profile)
+    spec_len: int = 4               # the class's k
+    acceptance: float = 0.75        # per-token alpha for this draft config
+    rtt_mean: float = -1.0          # seconds; -1 inherits SimConfig.rtt_mean
 
 
 @dataclasses.dataclass
@@ -55,6 +69,13 @@ class SimConfig:
     bits: int = 16
     cache_tokens: int = 1024        # context depth for kv-read cost
     server_latency_scale: float = 1.0
+    # heterogeneous fleet: when non-empty, overrides n_devices / device_rate /
+    # spec_len / acceptance with per-class values (devices get contiguous ids
+    # class by class, matching ServeSpec.resolved_classes ranges)
+    classes: Tuple[ClassLoad, ...] = ()
+    # deadline SLO: rounds slower than this (and timeout rounds) count as
+    # misses in SimResult.deadline_miss_rate; 0 disables the accounting
+    deadline_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -68,9 +89,34 @@ class SimResult:
     mean_batch_fill: float
     mean_round_latency: float
     server_rounds_per_s: float
+    deadline_miss_rate: float = 0.0  # rounds over SimConfig.deadline_s
+    # committed tokens/s PER DEVICE by fleet class (SimConfig.classes order);
+    # empty for uniform configs — the per-class response-rate surface that
+    # capacity admission (tuning/search.py) holds a goodput floor against
+    class_device_rates: Tuple[float, ...] = ()
 
     def as_dict(self):
         return dataclasses.asdict(self)
+
+
+def _device_cfgs(cfg: SimConfig) -> List[SimConfig]:
+    """Per-device views of the config: uniform without classes, else each
+    class's overrides applied (the returned list's length IS the fleet
+    size — ``n_devices`` is derived, not read, under a fleet)."""
+    if not cfg.classes:
+        return [cfg] * cfg.n_devices
+    out: List[SimConfig] = []
+    for cl in cfg.classes:
+        dcfg = dataclasses.replace(
+            cfg,
+            device_rate=cl.device_rate,
+            spec_len=cl.spec_len,
+            acceptance=cl.acceptance,
+            rtt_mean=cl.rtt_mean if cl.rtt_mean >= 0 else cfg.rtt_mean,
+            classes=(),
+        )
+        out.extend([dcfg] * cl.count)
+    return out
 
 
 class _Device:
@@ -107,23 +153,27 @@ def _accepted(k: int, alpha: float, rng: random.Random) -> int:
 
 def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
     rng = random.Random(cfg.seed)
-    devices = [_Device(i, cfg, random.Random(cfg.seed * 977 + i)) for i in range(cfg.n_devices)]
+    dcfgs = _device_cfgs(cfg)
+    n_devices = len(dcfgs)
+    devices = [_Device(i, dcfgs[i], random.Random(cfg.seed * 977 + i)) for i in range(n_devices)]
 
     if cfg.mode == "all_edge":
         # no server: closed-form — devices decode locally
-        rate = cfg.device_rate
+        total = sum(c.device_rate for c in dcfgs)
         return SimResult(
-            wstgr=rate * cfg.n_devices, per_device_rate=rate,
+            wstgr=total, per_device_rate=total / max(n_devices, 1),
             server_busy_frac=0.0, rounds=0, timeouts=0, fallback_tokens=0,
-            mean_batch_fill=0.0, mean_round_latency=1.0 / max(rate, 1e-9),
+            mean_batch_fill=0.0,
+            mean_round_latency=1.0 / max(total / max(n_devices, 1), 1e-9),
             server_rounds_per_s=0.0,
         )
 
     # static batching can only ever fill up to n_devices (closed loop): cap
     # so an oversized fixed batch doesn't deadlock waiting for itself
-    eff_batch = min(cfg.server_batch, cfg.n_devices)
+    eff_batch = min(cfg.server_batch, n_devices)
+    k_top = max(c.spec_len for c in dcfgs)
     planner = BatchPlanner(
-        batch_size=eff_batch, k_max=cfg.spec_len * 4,
+        batch_size=eff_batch, k_max=k_top * 4,
         policy=cfg.batch_policy, max_wait=cfg.max_wait,
         straggler_timeout=cfg.verify_timeout,
     )
@@ -136,10 +186,12 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
         heapq.heappush(evq, (t, seq, kind, payload))
         seq += 1
 
-    def rtt_half() -> float:
-        return max(0.001, cfg.rtt_mean / 2 + rng.gauss(0.0, cfg.rtt_jitter / 2))
+    def rtt_half(c: SimConfig = cfg) -> float:
+        return max(0.001, c.rtt_mean / 2 + rng.gauss(0.0, cfg.rtt_jitter / 2))
 
-    k1 = cfg.spec_len + 1
+    # verify width is padded to the widest class's k (matching the engine's
+    # k_max-padded batches), so server cost is set by the fleet's max k
+    k1 = k_top + 1
     verify_lat = lambda b: cfg.server_latency_scale * server.verify_latency(
         cfg.target_params, b, k1, cache_tokens=cfg.cache_tokens, bits=cfg.bits
     )
@@ -159,7 +211,7 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
     for d in devices:
         if cfg.mode == "sled":
             k = d.draft_len()
-            push(rng.random() * 0.05 + k / cfg.device_rate, "draft_done", (d.i, k))
+            push(rng.random() * 0.05 + k / d.cfg.device_rate, "draft_done", (d.i, k))
         else:  # centralized: device immediately requests its next token
             push(rng.random() * 0.01, "request", (d.i, 1))
 
@@ -195,7 +247,7 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
                 d.sent_at = now
                 push(now + cfg.verify_timeout, "timeout", (i, reqid, k))
             else:
-                req = VerifyRequest(device_id=i, arrival=now + rtt_half(),
+                req = VerifyRequest(device_id=i, arrival=now + rtt_half(d.cfg),
                                     prev_token=0, draft_tokens=[0] * k,
                                     request_id=reqid)
                 d.inflight = reqid
@@ -205,7 +257,7 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
             reqid += 1
         elif kind == "request":  # centralized mode
             i, _ = payload
-            req = VerifyRequest(device_id=i, arrival=now + rtt_half(),
+            req = VerifyRequest(device_id=i, arrival=now + rtt_half(devices[i].cfg),
                                 prev_token=0, draft_tokens=[0], request_id=reqid)
             devices[i].inflight = reqid
             devices[i].sent_at = now
@@ -223,7 +275,7 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
                 d.round_latencies.append(now - d.sent_at)
                 if cfg.mode == "sled":
                     k = len(req.draft_tokens)
-                    m = _accepted(k, cfg.acceptance, d.rng)
+                    m = _accepted(k, d.cfg.acceptance, d.rng)
                     d.committed += m + 1
                     # §III-A async decoding: the device kept drafting during
                     # the round trip; on full acceptance those tokens seed
@@ -231,14 +283,14 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
                     wait = max(now - d.sent_at, 0.0)
                     carry = 0
                     if m == k:
-                        carry = min(int(wait * cfg.device_rate), cfg.draft_ahead)
+                        carry = min(int(wait * d.cfg.device_rate), cfg.draft_ahead)
                     nk = d.draft_len()
                     need = max(nk - carry, 0)
-                    push(now + rtt_half() + need / cfg.device_rate,
+                    push(now + rtt_half(d.cfg) + need / d.cfg.device_rate,
                          "draft_done", (req.device_id, nk))
                 else:
                     d.committed += 1
-                    push(now + rtt_half(), "request", (req.device_id, 1))
+                    push(now + rtt_half(d.cfg), "request", (req.device_id, 1))
             maybe_dispatch(now)
         elif kind == "timeout":
             i, rid, k = payload
@@ -250,7 +302,7 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
                 d.fallback += k
                 d.committed += k
                 nk = d.draft_len()
-                push(now + nk / cfg.device_rate, "draft_done", (i, nk))
+                push(now + nk / d.cfg.device_rate, "draft_done", (i, nk))
         if kind == "tick":
             next_tick_at = float("inf")
             maybe_dispatch(now)
@@ -263,16 +315,35 @@ def simulate(cfg: SimConfig, server: ServerProfile) -> SimResult:
 
     total = sum(d.committed for d in devices)
     lat = [x for d in devices for x in d.round_latencies]
+    timeouts = sum(d.timeouts for d in devices)
+    miss_rate = 0.0
+    if cfg.deadline_s > 0:
+        # timeout rounds never produced a verdict in time: always misses
+        misses = sum(1 for x in lat if x > cfg.deadline_s) + timeouts
+        miss_rate = misses / max(len(lat) + timeouts, 1)
+    class_rates: List[float] = []
+    if cfg.classes and now > 0:
+        # devices hold contiguous ids class by class (same layout as
+        # ServeSpec.resolved_classes), so slice by the class counts
+        lo = 0
+        for cl in cfg.classes:
+            rows = devices[lo:lo + cl.count]
+            class_rates.append(
+                sum(d.committed for d in rows) / max(cl.count, 1) / now
+            )
+            lo += cl.count
     return SimResult(
         wstgr=total / now if now > 0 else 0.0,
-        per_device_rate=total / max(cfg.n_devices, 1) / now if now > 0 else 0.0,
+        per_device_rate=total / max(n_devices, 1) / now if now > 0 else 0.0,
         server_busy_frac=server_busy_time / now if now > 0 else 0.0,
         rounds=sum(len(d.round_latencies) for d in devices),
-        timeouts=sum(d.timeouts for d in devices),
+        timeouts=timeouts,
         fallback_tokens=sum(d.fallback for d in devices),
         mean_batch_fill=sum(batch_fills) / max(len(batch_fills), 1),
         mean_round_latency=sum(lat) / max(len(lat), 1),
         server_rounds_per_s=server_rounds / now if now > 0 else 0.0,
+        deadline_miss_rate=miss_rate,
+        class_device_rates=tuple(class_rates),
     )
 
 
@@ -280,6 +351,13 @@ def capacity(cfg: SimConfig, server: ServerProfile, *, min_rate_frac: float = 0.
              n_max: int = 512, probe_time: float = 8.0) -> int:
     """Max devices sustaining >= min_rate_frac of their solo token rate
     (Table I's 'system capacity' at an equal response-rate requirement)."""
+    if cfg.classes:
+        # n_devices is derived under a fleet, so the n-sweep below would
+        # silently probe the same load at every n — refuse loudly
+        raise ValueError(
+            "capacity() sweeps n_devices, which a fleet config overrides; "
+            "scale ClassLoad.count per class (tuning/search.py does) instead"
+        )
     cfg = dataclasses.replace(cfg, sim_time=min(cfg.sim_time, probe_time))
     solo = simulate(dataclasses.replace(cfg, n_devices=1), server).per_device_rate
     if solo <= 0:

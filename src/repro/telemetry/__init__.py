@@ -22,6 +22,7 @@ here runs inside jitted code.
 
 from repro.telemetry.logs import setup_logging
 from repro.telemetry.metrics import (
+    C_TH_BUCKETS,
     K_BUCKETS,
     LATENCY_BUCKETS_S,
     Counter,
@@ -38,6 +39,7 @@ from repro.telemetry.metrics import (
 from repro.telemetry.trace import FlightRecorder, TraceEvent
 
 __all__ = [
+    "C_TH_BUCKETS",
     "Counter",
     "FlightRecorder",
     "Gauge",

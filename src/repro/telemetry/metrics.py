@@ -26,6 +26,10 @@ LATENCY_BUCKETS_S: Tuple[float, ...] = (
 )
 # speculation-length buckets: k is small and integral
 K_BUCKETS: Tuple[float, ...] = (1, 2, 3, 4, 6, 8, 12, 16)
+# drafting-confidence buckets: c_th lives on [0, 1]
+C_TH_BUCKETS: Tuple[float, ...] = (
+    0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0,
+)
 
 _LabelArg = Optional[Dict[str, Union[str, int]]]
 _Key = Tuple[str, Tuple[Tuple[str, str], ...]]

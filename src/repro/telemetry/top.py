@@ -110,6 +110,9 @@ class ReplicaView:
         p95 = f"{lat['p95'] * 1e3:7.2f}" if lat else "      -"
         kh = _hist(self.telemetry, "engine_k")
         spark = _sparkline(_per_bucket(kh)) if kh else "-"
+        # adaptive confidence controllers publish cctl_c_th; fixed -> "-"
+        ch = _hist(self.telemetry, "cctl_c_th")
+        cspark = _sparkline(_per_bucket(ch)) if ch else "-"
         # KV-pool capacity gauges (int8 pools show ~half the bytes/slot)
         pool_b = _gauge(self.telemetry, "engine_kv_pool_bytes")
         slot_b = _gauge(self.telemetry, "engine_bytes_per_slot")
@@ -120,7 +123,7 @@ class ReplicaView:
             f"{st.get('streams_served', 0):>6} {st.get('rounds', 0):>7} "
             f"{st.get('mean_batch_fill', 0.0):>5.2f} "
             f"{st.get('acceptance_rate', 0.0):>6.3f} "
-            f"{bslot:>8} {pool:>8} {p50} {p95}  {spark}"
+            f"{bslot:>8} {pool:>8} {p50} {p95}  {spark:<9} {cspark}"
         )
 
 
@@ -128,7 +131,7 @@ _HEADER = (
     f"{'ID':<3} {'ADDRESS':<34} {'STATE':<5} "
     f"{'SERVED':>6} {'ROUNDS':>7} {'FILL':>5} {'ACCEPT':>6} "
     f"{'B/SLOT':>8} {'POOL':>8} "
-    f"{'p50ms':>7} {'p95ms':>7}  K"
+    f"{'p50ms':>7} {'p95ms':>7}  {'K':<9} C_TH"
 )
 
 

@@ -29,6 +29,11 @@
               at the controller's k — closed-loop spec-length control.
               ``kctl="fixed"`` (default) always drafts the kit's k_max and
               is bit-identical to the pre-feedback client.
+  adaptive c  ``cctl="adaptive"`` moves the drafting confidence bar c_th
+              from the same feedback (serving/speclen.ConfidenceController):
+              low acceptance raises the bar (shorter, surer rounds), high
+              acceptance lowers it.  c_th rides into the jitted draft step
+              as a traced scalar, so adapting never recompiles.
 
 The client's committed stream is exactly the server's committed stream for
 its slot; on zero-latency lossless links it is token-for-token identical to
@@ -44,7 +49,7 @@ import numpy as np
 
 from repro import telemetry
 from repro.core.server_engine import EdgeDevice, EdgeDeviceKit
-from repro.serving.speclen import make_controller
+from repro.serving.speclen import make_confidence_controller, make_controller
 from repro.transport import codec
 from repro.transport.links import Endpoint
 
@@ -70,6 +75,8 @@ class ClientStats:
     wall_seconds: float = 0.0
     k_final: int = 0  # spec length after the last controller update
     k_mean: float = 0.0  # mean proposal length actually sent per round
+    c_th_final: float = 0.0  # confidence bar after the last controller update
+    c_th_mean: float = 0.0  # mean confidence bar across controller updates
 
     def to_json(self) -> dict:
         """Uniform stats record (json.dumps-safe), mirroring
@@ -92,7 +99,7 @@ class ClientStats:
             vals = [getattr(s, f.name) for s in stats]
             if f.name == "k_final":
                 out.k_final = round(sum(vals) / len(vals))
-            elif f.name in ("k_mean", "wall_seconds"):
+            elif f.name in ("k_mean", "wall_seconds", "c_th_final", "c_th_mean"):
                 setattr(out, f.name, float(sum(vals) / len(vals)))
             else:
                 setattr(out, f.name, sum(vals))
@@ -121,6 +128,8 @@ class EdgeClient:
         draft_rate: Optional[float] = None,
         kctl: str = "fixed",
         kctl_kw: Optional[dict] = None,
+        cctl: str = "fixed",
+        cctl_kw: Optional[dict] = None,
         seed: int = 0,
         on_round: Optional[Callable[[np.ndarray, int, int, bool], None]] = None,
         reconnect: Optional[Callable[[], "asyncio.Future"]] = None,
@@ -145,6 +154,12 @@ class EdgeClient:
         # closed-loop spec length: None (fixed k_max) or an AIMD controller
         # fed by the Verdict accept_rate/queue_depth feedback fields
         self.kctl = make_controller(kctl, k_max=kit.k_max, **(kctl_kw or {}))
+        # closed-loop drafting confidence: None (the kit's fixed c_th) or a
+        # bounded additive controller on the same Verdict feedback — the
+        # k/c_th pair is the full per-device drafting policy
+        self.cctl = make_confidence_controller(
+            cctl, c_init=kit.c_th, device_id=device_id, **(cctl_kw or {})
+        )
         # per-round observer (repro.api streaming events): called with
         # (committed_tokens, n_drafted, n_accepted, fallback) as each round
         # resolves — fallback rounds pass the locally-released tokens
@@ -293,24 +308,29 @@ class EdgeClient:
         )
         loop = asyncio.get_running_loop()
 
-        async def throttle(n: int, since: Optional[float] = None) -> None:
+        async def throttle(n: int, since: Optional[float] = None) -> float:
             """Emulate drafting ``n`` tokens at the device's rate; time spent
             waiting on the network (``since``) already counts (sim's
-            draft-ahead carry: need/device_rate)."""
-            if self.draft_rate:
-                need = n / self.draft_rate
-                if since is not None:
-                    need -= loop.time() - since
-                if need > 0:
-                    await asyncio.sleep(need)
+            draft-ahead carry: need/device_rate).  Returns the NOMINAL
+            drafting bill — the full n/rate — which ``draft_s`` reports so
+            profiling recovers the emulated hardware rate even when
+            pipelining hid part of the sleep under the round trip."""
+            if not self.draft_rate:
+                return 0.0
+            need = n / self.draft_rate
+            wait = need if since is None else need - (loop.time() - since)
+            if wait > 0:
+                await asyncio.sleep(wait)
+            return need
 
         seq = 0
         k = self.kctl.k if self.kctl else None  # None: fixed k_max drafting
+        c = self.cctl.c if self.cctl else None  # None: fixed kit c_th
         k_log = []
         t_d = loop.time()
-        tokens = dev.draft(k=k)
+        tokens = dev.draft(k=k, c_th=c)
         draft_s = loop.time() - t_d
-        await throttle(len(tokens))
+        draft_s += await throttle(len(tokens))
         while True:
             q = dev.pending_q if self.qmode != "none" else None
             try:
@@ -330,7 +350,7 @@ class EdgeClient:
             t_sent = loop.time()
             if self.pipeline:
                 # the round trip is in flight: keep drafting on speculation
-                dev.draft_ahead(k=k)
+                dev.draft_ahead(k=k, c_th=c)
                 await asyncio.sleep(0)  # hand the loop to the server/link
             verdict, fell_back = await self._await_verdict(seq, tokens)
             rtt = loop.time() - t_sent
@@ -353,6 +373,10 @@ class EdgeClient:
                 if self.kctl is not None:
                     # closed loop: acceptance + replica congestion -> next k
                     k = self.kctl.update(verdict.accept_rate, verdict.queue_depth)
+                if self.cctl is not None:
+                    # same feedback moves the confidence bar the other way:
+                    # low acceptance tightens, high acceptance relaxes
+                    c = self.cctl.update(verdict.accept_rate, verdict.queue_depth)
                 if traced:
                     # server-timing attribution: what the round trip spent in
                     # the replica's queue + verify; the rest was the wire
@@ -375,14 +399,15 @@ class EdgeClient:
                 break
             if next_tokens is not None:
                 tokens = next_tokens
-                draft_s = 0.0  # pre-drafted under the round trip: hidden
-                # pre-drafted during the round trip; pay only the remainder
-                await throttle(len(tokens), since=t_sent)
+                # pre-drafted during the round trip: only the remainder of
+                # the emulated drafting time is paid in the foreground, but
+                # the trace bills the full nominal cost (see throttle)
+                draft_s = await throttle(len(tokens), since=t_sent)
             else:
                 t_d = loop.time()
-                tokens = dev.draft(k=k)
+                tokens = dev.draft(k=k, c_th=c)
                 draft_s = loop.time() - t_d
-                await throttle(len(tokens))
+                draft_s += await throttle(len(tokens))
         try:
             await self._send(codec.Close(self.device_id))
         except ConnectionError:
@@ -397,4 +422,6 @@ class EdgeClient:
         self.stats.wall_seconds = asyncio.get_running_loop().time() - t0
         self.stats.k_final = self.kctl.k if self.kctl else self.kit.k_max
         self.stats.k_mean = float(sum(k_log) / len(k_log)) if k_log else 0.0
+        self.stats.c_th_final = self.cctl.c if self.cctl else self.kit.c_th
+        self.stats.c_th_mean = self.cctl.c_mean if self.cctl else self.kit.c_th
         return dev.committed[: self.max_new]

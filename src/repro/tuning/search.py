@@ -1,0 +1,569 @@
+"""Auto-tuner search (``repro tune``, steps 2-3 of 3).
+
+From one profiled fleet spec (see :mod:`repro.tuning.profile`), sweep
+``dataclasses.replace``d candidates per device class — spec length ``k``,
+drafting confidence ``c_th``, quant ``bits`` / draft model size (priced by
+the DeviceProfile rate table), placement — score each through the
+CALIBRATED discrete-event simulator plus the Eq. 2 cost model, then
+validate the top candidates on the real engine and emit the winner.
+
+The objective is the paper's capacity question asked of a heterogeneous
+fleet: how many admitted streams does a config sustain at a deadline-miss
+rate under the cap?  In the simulator that is a binary search over an
+integer multiplier on every class's device count (``sim_fleet_capacity``);
+on the real engine it is a short measured serve whose per-round trace spans
+give the observed miss rate (``measured_run``).
+
+The per-class search is greedy coordinate descent: classes are re-optimised
+one at a time against the full-fleet simulation (the server queue couples
+them) for a few passes — a full cross product over classes would be
+exponential for no extra signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.api import ServeSpec, System
+from repro.serving.cost_model import fleet_cost_per_1k
+from repro.serving.devices import DEVICES, SERVERS, ServerProfile
+from repro.serving.simulator import ClassLoad, SimConfig, SimResult, simulate
+from repro.tuning.profile import (
+    class_commit_rate,
+    FleetCalibration,
+    make_prober,
+    profile_fleet,
+)
+
+# reduced-model stand-ins for the paper's draft families: the device-side
+# COST of a bigger draft comes from the DeviceProfile rate table (real
+# llama.cpp numbers), while its acceptance ADVANTAGE is modelled as lower
+# perturbation noise (a draft closer to the target) — measured, not assumed,
+# because every candidate's noise goes through a reference probe
+DRAFT_STANDINS = {
+    "llama-1b-draft": 1.0,   # noise multiplier on the class's base noise
+    "llama-3b-draft": 0.5,
+}
+
+
+@dataclasses.dataclass
+class TuneConfig:
+    server: str = "a100x4"       # ServerProfile for roofline + cost scoring
+    target_params: float = 11e9  # paper-scale verifier the roofline prices
+    deadline_s: float = 0.0      # 0: derived from the profiled round latency
+    deadline_mult: float = 2.75  # derived deadline = mult * profiled p95
+    miss_cap: float = 0.1        # matched deadline-miss rate across configs
+    # per-stream goodput floor: a load only counts as admitted if every class
+    # still commits >= this fraction of its PROFILED per-device rate (the
+    # simulator capacity() "equal response-rate" requirement) — without it
+    # the capacity objective degenerates to "pace every device to zero"
+    rate_floor_frac: float = 0.5
+    n_validate: int = 2          # top candidates re-measured on the engine
+    # >1: rank gate-passing finalists by measured throughput with the fleet
+    # (and verify pool) scaled by this factor — at the base deployment the
+    # finalists are within noise of each other, under load they are not
+    validate_mult: int = 1
+    quick: bool = False          # smaller axes + shorter probes (CI smoke)
+    probe_devices: int = 2
+    probe_max_new: int = 12
+    sim_time: float = 12.0
+    m_max: int = 32              # capacity search: max class-count multiplier
+    passes: int = 2              # coordinate-descent sweeps over the classes
+
+    def resolved_server(self) -> ServerProfile:
+        return SERVERS[self.server]
+
+    def k_choices(self, k_max: int) -> Tuple[int, ...]:
+        ks = (2, 4) if self.quick else (1, 2, 3, 4, 6)
+        return tuple(k for k in ks if k <= k_max) or (k_max,)
+
+    def c_th_choices(self) -> Tuple[float, ...]:
+        # 0.0 (never cut a draft short) must stay in the palette: on toy
+        # vocabularies the draft confidence tops out near 1/vocab, so any
+        # higher bar silently truncates every draft to one token
+        return (0.0, 0.1, 0.4) if self.quick else (0.0, 0.1, 0.3, 0.5)
+
+    def bits_choices(self) -> Tuple[int, ...]:
+        return (4,) if self.quick else (4, 8)
+
+    def draft_models(self) -> Tuple[str, ...]:
+        return ("llama-1b-draft",) if self.quick else tuple(DRAFT_STANDINS)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    winner: ServeSpec
+    winner_row: dict
+    baseline_row: dict
+    deadline_s: float
+    calibration: FleetCalibration
+    rows: List[dict]             # every scored candidate, best first
+    validated: List[dict]        # real-engine measurements of the top picks
+    wall_s: float
+
+    def to_json(self) -> dict:
+        return {
+            "winner_spec": self.winner.to_json(),
+            "winner": self.winner_row,
+            "baseline": self.baseline_row,
+            "deadline_s": self.deadline_s,
+            "calibration": self.calibration.to_json(),
+            "rows": self.rows,
+            "validated": self.validated,
+            "wall_s": round(self.wall_s, 2),
+        }
+
+
+# ---------------------------------------------------------------------------
+# spec surgery helpers (shared with benchmarks/fleet.py)
+# ---------------------------------------------------------------------------
+
+
+def with_class(spec: ServeSpec, index: int, **changes) -> ServeSpec:
+    """The spec with class ``index`` replaced — one sweep move."""
+    classes = list(spec.fleet.classes)
+    classes[index] = dataclasses.replace(classes[index], **changes)
+    return dataclasses.replace(
+        spec, fleet=dataclasses.replace(spec.fleet, classes=tuple(classes))
+    )
+
+
+def scaled_fleet(spec: ServeSpec, m: float) -> ServeSpec:
+    """Every class count multiplied by ``m`` (slots stay fixed, so load
+    oversubscribes the pool) — the admitted-stream capacity axis.
+    Fractional multipliers round per class (never below one device), so a
+    capacity sweep can step in a few streams at a time instead of doubling
+    the whole fleet."""
+    classes = tuple(
+        dataclasses.replace(c, count=max(1, int(round(c.count * m))))
+        for c in spec.fleet.classes
+    )
+    return dataclasses.replace(
+        spec, fleet=dataclasses.replace(spec.fleet, classes=classes)
+    )
+
+
+def at_multiplier(spec: ServeSpec, m: float) -> ServeSpec:
+    """The fleet scaled by ``m`` with the verify pool provisioned to match
+    (slots = fleet size), so what binds as the fleet grows is the SERVING
+    deadline — batch width, verify latency, server queue — not an admission
+    queue in front of a pinned pool."""
+    scaled = scaled_fleet(spec, m)
+    return dataclasses.replace(
+        scaled,
+        scheduler=dataclasses.replace(
+            scaled.scheduler, slots=scaled.fleet.total
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# scoring: calibrated simulator + cost model
+# ---------------------------------------------------------------------------
+
+
+def sim_config_for(
+    spec: ServeSpec,
+    calib: FleetCalibration,
+    tcfg: TuneConfig,
+    probe: Callable[..., Tuple[float, float]],
+    *,
+    deadline_s: float,
+) -> SimConfig:
+    """The candidate's calibrated simulator config: measured acceptance and
+    draft lengths per class (probed), measured draft rates scaled by the
+    hardware table for counterfactual configs, measured class RTTs, and
+    the profiled server latency scale — everything in the deployment's own
+    clock so predicted capacities compare against real validation runs."""
+    loads = []
+    for rc in spec.resolved_classes():
+        acc, mlen = probe(
+            k=rc.k, c_th=rc.c_th,
+            draft_layers=rc.draft_layers, draft_noise=rc.draft_noise,
+        )
+        cc = calib.classes[rc.index]  # candidates never reorder classes
+        rate = cc.draft_rate * (rc.hardware_rate() / max(cc.hardware_rate, 1e-9))
+        loads.append(ClassLoad(
+            count=rc.count,
+            device_rate=max(rate, 1e-6),
+            spec_len=max(1, int(round(mlen))),
+            acceptance=acc,
+            rtt_mean=cc.rtt_mean,
+        ))
+    policy = spec.scheduler.policy
+    return SimConfig(
+        mode="sled",
+        classes=tuple(loads),
+        deadline_s=deadline_s,
+        server_latency_scale=calib.server_latency_scale,
+        target_params=tcfg.target_params,
+        server_batch=max(spec.slots_per_replica * spec.cluster.n_replicas, 1),
+        batch_policy=policy if policy in ("static", "deadline", "continuous") else "continuous",
+        max_wait=spec.scheduler.max_wait,
+        verify_timeout=spec.transport.verify_timeout,
+        sim_time=tcfg.sim_time,
+    )
+
+
+def sim_fleet_capacity(
+    cfg: SimConfig,
+    server: ServerProfile,
+    *,
+    miss_cap: float,
+    m_max: int,
+    rate_floors: Tuple[float, ...] = (),
+) -> Tuple[int, SimResult]:
+    """Max class-count multiplier holding deadline misses under the cap AND
+    every class's per-device commit rate over its goodput floor.
+
+    Returns ``(m, result_at_m)`` — admitted-stream capacity is ``m`` times
+    the base fleet size; ``m == 0`` means even the base config misses."""
+    def at(m: int) -> SimResult:
+        c = dataclasses.replace(cfg, classes=tuple(
+            dataclasses.replace(cl, count=cl.count * m) for cl in cfg.classes
+        ))
+        return simulate(c, server)
+
+    def admitted(r: SimResult) -> bool:
+        if r.deadline_miss_rate > miss_cap:
+            return False
+        return all(
+            rate >= floor
+            for rate, floor in zip(r.class_device_rates, rate_floors)
+        )
+
+    r1 = at(1)
+    if not admitted(r1):
+        return 0, r1
+    top = at(m_max)
+    if admitted(top):
+        return m_max, top
+    lo, hi, best = 1, m_max, r1
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        r = at(mid)
+        if admitted(r):
+            lo, best = mid, r
+        else:
+            hi = mid - 1
+    return lo, best
+
+
+def score_candidate(
+    spec: ServeSpec,
+    calib: FleetCalibration,
+    tcfg: TuneConfig,
+    probe,
+    *,
+    deadline_s: float,
+) -> dict:
+    """One candidate's predicted record: capacity at the miss cap + goodput
+    floors (primary), throughput at that load (tiebreak), Eq. 2 $/1K tokens
+    (reported)."""
+    server = tcfg.resolved_server()
+    cfg = sim_config_for(spec, calib, tcfg, probe, deadline_s=deadline_s)
+    floors = tuple(
+        tcfg.rate_floor_frac * cc.commit_rate for cc in calib.classes
+    )
+    m, r = sim_fleet_capacity(
+        cfg, server, miss_cap=tcfg.miss_cap, m_max=tcfg.m_max,
+        rate_floors=floors,
+    )
+    base = sum(cl.count for cl in cfg.classes)
+    rcs = spec.resolved_classes()
+    per_dev = r.per_device_rate
+    cost = fleet_cost_per_1k(
+        [(rc.count * max(m, 1), per_dev, DEVICES[rc.spec.profile]) for rc in rcs],
+        server,
+        server_busy_frac=max(r.server_busy_frac, 1e-3),
+    )
+    return {
+        "classes": [
+            {"profile": rc.spec.profile, "count": rc.count, "k": rc.k,
+             "c_th": rc.c_th, "draft_model": rc.spec.draft_model,
+             "bits": rc.spec.bits, "draft_noise": rc.draft_noise}
+            for rc in rcs
+        ],
+        "placement": spec.cluster.placement,
+        "capacity_streams": m * base,
+        "capacity_mult": m,
+        "sim_wstgr": round(r.wstgr, 3),
+        "sim_miss_rate": round(r.deadline_miss_rate, 4),
+        "sim_class_rates": [round(x, 3) for x in r.class_device_rates],
+        "sim_busy_frac": round(r.server_busy_frac, 4),
+        "cost_per_1k_usd": round(cost, 6),
+        "score": (m * base, round(r.wstgr, 3), -cost),
+    }
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration + coordinate descent
+# ---------------------------------------------------------------------------
+
+
+def class_options(spec: ServeSpec, index: int, tcfg: TuneConfig) -> List[dict]:
+    """Every sweep move for one class: (k, c_th) x (draft model, bits)
+    combos its hardware profile actually has rates for."""
+    rc = spec.resolved_classes()[index]
+    prof = DEVICES[rc.spec.profile]
+    base_noise = rc.draft_noise
+    combos = [
+        (mdl, bits)
+        for mdl in tcfg.draft_models()
+        for bits in tcfg.bits_choices()
+        if (mdl, bits) in prof.draft_rate
+    ]
+    opts = []
+    for k in tcfg.k_choices(spec.k_max):
+        for c_th in tcfg.c_th_choices():
+            for mdl, bits in combos:
+                opts.append(dict(
+                    k=k, c_th=c_th, draft_model=mdl, bits=bits,
+                    draft_noise=round(base_noise * DRAFT_STANDINS[mdl], 6),
+                ))
+    return opts
+
+
+def tune(
+    spec: ServeSpec,
+    tcfg: Optional[TuneConfig] = None,
+    *,
+    models=None,
+    kits=None,
+    log: Callable[[str], None] = print,
+) -> TuneResult:
+    """The full profile -> sweep -> validate pipeline for one fleet spec."""
+    tcfg = tcfg or TuneConfig()
+    if not spec.fleet.active:
+        raise ValueError("repro tune needs a ServeSpec with an active fleet "
+                         "(fleet.classes non-empty) — see examples/specs/fleet.json")
+    t0 = time.time()
+    server = tcfg.resolved_server()
+
+    # warm every jitted path first — verify buckets, per-class draft kits —
+    # on a throwaway serve sharing the sweep's models/kits/steps, so the
+    # profiled spans and validation runs measure serving, not compiles
+    from repro.api import KitCache, build_models
+
+    models = models or build_models(spec.model)
+    kits = kits if kits is not None else KitCache()
+    warm = System.build(spec, models=models, kits=kits)
+    warm.warmup()
+    warm.serve()
+    steps = warm.steps
+
+    log(f"[tune 1/3] profiling {spec.fleet.total} devices "
+        f"({len(spec.fleet.classes)} classes) on the {spec.backend} backend")
+    calib = profile_fleet(
+        spec, server=server, target_params=tcfg.target_params,
+        models=models, kits=kits, steps=steps,
+    )
+    # anchor the derived deadline on the profiled TAIL, not the mean: the
+    # capacity objective admits a load only while ~all rounds make the
+    # deadline, and a mean-anchored bound leaves even the unloaded fleet
+    # straddling the miss cap — capacity becomes tail noise, not config
+    deadline_s = tcfg.deadline_s or round(
+        tcfg.deadline_mult
+        * max(calib.round_latency_p95, calib.round_latency_mean, 1e-4), 4
+    )
+    log(f"[tune 1/3] round latency {calib.round_latency_mean*1e3:.1f} ms "
+        f"(p95 {calib.round_latency_p95*1e3:.1f}) "
+        f"-> deadline {deadline_s*1e3:.1f} ms, latency scale "
+        f"{calib.server_latency_scale:.3g}, per-class acceptance "
+        f"{[round(c.acceptance, 2) for c in calib.classes]}")
+
+    probe = make_prober(
+        spec, devices=tcfg.probe_devices, max_new=tcfg.probe_max_new
+    )
+
+    def score(s: ServeSpec) -> dict:
+        return score_candidate(s, calib, tcfg, probe, deadline_s=deadline_s)
+
+    def signature(s: ServeSpec) -> tuple:
+        return tuple(
+            (c.k, c.c_th, c.draft_model, c.bits, c.draft_noise)
+            for c in s.fleet.classes
+        ) + (s.cluster.placement,)
+
+    baseline_row = score(spec)
+    rows: List[dict] = [dict(baseline_row, move="baseline")]
+    scored: List[Tuple[dict, ServeSpec]] = [(baseline_row, spec)]
+    best, best_row = spec, baseline_row
+    n_classes = len(spec.fleet.classes)
+    log(f"[tune 2/3] coordinate descent: {n_classes} classes x "
+        f"{len(class_options(spec, 0, tcfg))} options x {tcfg.passes} passes, "
+        f"objective: admitted streams at miss <= {tcfg.miss_cap:.0%}")
+    for p in range(tcfg.passes):
+        improved = False
+        for i in range(n_classes):
+            for opt in class_options(best, i, tcfg):
+                cand = with_class(best, i, **opt)
+                row = score(cand)
+                rows.append(dict(row, move=f"pass{p}.class{i}"))
+                scored.append((row, cand))
+                if row["score"] > best_row["score"]:
+                    best, best_row, improved = cand, row, True
+        if not improved:
+            break
+    # top DISTINCT candidates go to real-engine validation — a borderline
+    # sim winner that fails the measured floors must not sink the whole
+    # sweep when the runner-up would have held them
+    scored.sort(key=lambda rc: rc[0]["score"], reverse=True)
+    finalists: List[ServeSpec] = []
+    seen = {signature(spec)}
+    for row, cand in scored:
+        if signature(cand) in seen:
+            continue
+        seen.add(signature(cand))
+        finalists.append(cand)
+    # placement is invisible to the single-server simulator: carry both
+    # policies into real-engine validation when there is a replica set
+    if spec.cluster.n_replicas > 1:
+        flip = ("class-affinity" if best.cluster.placement != "class-affinity"
+                else "least-loaded")
+        finalists.insert(1, dataclasses.replace(
+            best, cluster=dataclasses.replace(best.cluster, placement=flip)
+        ))
+    finalists = finalists[: max(tcfg.n_validate, 1)]
+    rows.sort(key=lambda r: r["score"], reverse=True)
+
+    log(f"[tune 2/3] best predicted: {best_row['capacity_streams']} streams "
+        f"(x{best_row['capacity_mult']}), {best_row['sim_wstgr']} tok/s, "
+        f"${best_row['cost_per_1k_usd']}/1K")
+
+    log(f"[tune 3/3] validating {len(finalists)} finalist(s) + baseline on "
+        f"the real {spec.backend} backend")
+    labelled = [("baseline", spec)] + [
+        (f"finalist{i}", f) for i, f in enumerate(finalists)
+    ]
+    validated = []
+    for tag, s in labelled:
+        meas = measured_run(
+            s, deadline_s=deadline_s, models=models, kits=kits, steps=steps
+        )
+        validated.append(dict(meas, tag=tag, placement=s.cluster.placement))
+        log(f"[tune 3/3] {tag}: {meas['wstgr']} tok/s, miss "
+            f"{meas['deadline_miss_rate']:.1%}, acceptance {meas['acceptance']}")
+    # the sim only PRUNES the combinatorial space; the winner is chosen by
+    # MEASURED throughput among finalists that hold the deadline AND the
+    # per-class goodput floors on the real engine (the calibrated sim is
+    # good to ~15% — finalists are routinely within that of each other).
+    # If every finalist fails the gates, fall back to the baseline rather
+    # than ship a lie.
+    base_rates = validated[0].get("class_rates") or []
+    passers = []
+    for (tag, s), v in zip(labelled, validated):
+        if tag == "baseline" or v["deadline_miss_rate"] > tcfg.miss_cap:
+            continue
+        if any(
+            rate < tcfg.rate_floor_frac * base
+            for rate, base in zip(v.get("class_rates") or [], base_rates)
+        ):
+            continue
+        passers.append((tag, s, v["wstgr"]))
+    # at the base deployment the surviving finalists are within measurement
+    # noise of each other; when asked (validate_mult > 1) re-measure each
+    # under an oversubscribed fleet, where a config that wastes verify FLOPs
+    # (long rejected drafts) visibly loses throughput to queueing.  Slot
+    # shapes change with the fleet, so stress runs compile their own steps.
+    if tcfg.validate_mult > 1 and len(passers) > 1:
+        stressed = []
+        for tag, s, _ in passers:
+            sv = measured_run(
+                at_multiplier(s, tcfg.validate_mult),
+                deadline_s=deadline_s, models=models, kits=kits,
+            )
+            validated.append(dict(
+                sv, tag=f"{tag}@x{tcfg.validate_mult}",
+                placement=s.cluster.placement,
+            ))
+            log(f"[tune 3/3] {tag} @x{tcfg.validate_mult}: {sv['wstgr']} "
+                f"tok/s, miss {sv['deadline_miss_rate']:.1%}")
+            stressed.append((tag, s, sv["wstgr"]))
+        passers = stressed
+    winner, winner_tag = spec, "baseline"
+    if passers:
+        winner_tag, winner, _ = max(passers, key=lambda t: t[2])
+    result = TuneResult(
+        winner=winner,
+        winner_row=best_row,
+        baseline_row=baseline_row,
+        deadline_s=deadline_s,
+        calibration=calib,
+        rows=rows,
+        validated=validated,
+        wall_s=time.time() - t0,
+    )
+    log(f"[tune] done in {result.wall_s:.1f}s — winner ({winner_tag}): "
+        + ", ".join(
+            f"{rc.spec.profile}x{rc.count}: k={rc.k} c_th={rc.c_th} "
+            f"{rc.spec.draft_model}@{rc.spec.bits}b"
+            for rc in winner.resolved_classes()
+        ))
+    return result
+
+
+# ---------------------------------------------------------------------------
+# real-engine measurement (shared with benchmarks/fleet.py)
+# ---------------------------------------------------------------------------
+
+
+def measured_run(
+    spec: ServeSpec,
+    *,
+    deadline_s: float,
+    models=None,
+    kits=None,
+    steps=None,
+    max_new: Optional[int] = None,
+) -> dict:
+    """Serve the spec once with telemetry on and report the measured record:
+    throughput, acceptance, and the deadline-miss rate over per-round
+    service latencies (queue + verify + wire from the trace spans).
+
+    The measured serve follows a throwaway one so kits the candidate spec
+    introduced (new k / c_th / draft variant combos) pay their compile
+    spikes off the clock — same discipline as the profiling pass."""
+    vspec = dataclasses.replace(spec, telemetry=True)
+    warm = System.build(vspec, models=models, kits=kits, steps=steps)
+    try:
+        warm.warmup()
+        warm.serve(max_new=max_new)
+        # the measured system MUST reuse the warm system's compiled step
+        # bundle (they share the spec, so slot shapes match): otherwise the
+        # measured serve lazily recompiles mid-run and every round latency
+        # is compile time, not serving time
+        steps = steps or warm.steps
+    finally:
+        warm.close()
+    system = System.build(vspec, models=models, kits=kits, steps=steps)
+    try:
+        result = system.serve(max_new=max_new)
+    finally:
+        system.close()
+    lats = [
+        ev.queue_s + ev.verify_s + ev.wire_s
+        for s in result.sessions
+        for ev in (s.trace or [])
+    ]
+    misses = sum(1 for x in lats if x > deadline_s)
+    st = result.engine
+    wall = max(result.wall_seconds, 1e-9)
+    class_rates = []
+    if vspec.fleet.active:
+        for rc in vspec.resolved_classes():
+            rows = [s for s in result.sessions if rc.lo <= s.device_id < rc.hi]
+            class_rates.append(round(class_commit_rate(rows, wall=wall), 3))
+    return {
+        "devices": vspec.devices,
+        "streams_served": len(result.sessions),
+        "wstgr": round(result.total_tokens / wall, 2),
+        "acceptance": round(st.acceptance_rate, 3),
+        "deadline_s": deadline_s,
+        "deadline_miss_rate": round(misses / max(len(lats), 1), 4),
+        "round_latency_mean": round(sum(lats) / max(len(lats), 1), 5),
+        "class_rates": class_rates,  # committed tokens/s per device by class
+        "rounds": st.rounds,
+        "wall_s": round(result.wall_seconds, 2),
+    }

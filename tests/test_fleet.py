@@ -1,0 +1,341 @@
+"""Heterogeneous fleets + the profiling-driven auto-tuner (``repro tune``).
+
+Covers the FleetSpec/DeviceClassSpec layer (validation, JSON round trip,
+sentinel inheritance, device-id ranges), the per-class serving path on the
+engine backend (token identity against per-class lock-step references),
+the ConfidenceController feedback loop, the heterogeneous simulator
+surface the tuner scores against, and the tuning pipeline's measurement
+helpers.  The full tune() loop runs in the slow tier.
+"""
+
+import dataclasses
+import types
+
+import pytest
+
+from repro.api import (
+    DeviceClassSpec,
+    FleetSpec,
+    KitCache,
+    ModelSpec,
+    SchedulerSpec,
+    ServeSpec,
+    SpecError,
+    System,
+    TransportSpec,
+    build_models,
+)
+from repro.serving.devices import DEVICES, SERVERS
+from repro.serving.simulator import ClassLoad, SimConfig, capacity, simulate
+from repro.serving.speclen import ConfidenceController, make_confidence_controller
+from repro.telemetry.trace import TraceEvent
+from repro.tuning import (
+    TuneConfig,
+    at_multiplier,
+    class_commit_rate,
+    class_draft_rate,
+    profile_fleet,
+    scaled_fleet,
+    tune,
+    with_class,
+)
+
+V = 64
+
+
+def _fleet_spec(**kw) -> ServeSpec:
+    base = dict(
+        backend="engine",
+        model=ModelSpec(vocab_size=V, target_layers=2, draft_layers=1, draft_noise=0.03),
+        transport=TransportSpec(stagger_s=0.0),
+        scheduler=SchedulerSpec(stagger_ticks=0, slots=4),
+        fleet=FleetSpec(
+            classes=(
+                DeviceClassSpec(
+                    profile="jetson-orin-nano", count=2,
+                    draft_model="llama-1b-draft", bits=4,
+                    k=4, c_th=0.0, draft_noise=0.02,
+                ),
+                DeviceClassSpec(
+                    profile="rpi4b", count=2,
+                    draft_model="llama-1b-draft", bits=4,
+                    k=2, c_th=0.4, draft_noise=0.3,
+                ),
+            ),
+        ),
+        prompt_len=8,
+        max_new=8,
+        k_max=4,
+        c_th=0.3,
+    )
+    base.update(kw)
+    return ServeSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# spec validation + serialization
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_spec_valid_and_devices_derived():
+    spec = _fleet_spec()
+    assert spec.fleet.active
+    assert spec.devices == 4  # derived from class counts, not the default
+
+
+def test_unknown_profile_rejected():
+    with pytest.raises(SpecError, match="profile 'gameboy' not in"):
+        _fleet_spec(fleet=FleetSpec(classes=(DeviceClassSpec(profile="gameboy"),)))
+
+
+def test_absent_rate_combo_lists_available():
+    with pytest.raises(SpecError, match="available combos"):
+        _fleet_spec(fleet=FleetSpec(classes=(
+            DeviceClassSpec(profile="rpi4b", draft_model="llama-1b-draft", bits=3),
+        )))
+
+
+def test_class_c_th_bounds():
+    with pytest.raises(SpecError, match="c_th must be in"):
+        _fleet_spec(fleet=FleetSpec(classes=(DeviceClassSpec(c_th=1.5),)))
+
+
+def test_class_count_floor():
+    with pytest.raises(SpecError, match="count must be >= 1"):
+        _fleet_spec(fleet=FleetSpec(classes=(DeviceClassSpec(count=0),)))
+
+
+def test_rate_scale_positive():
+    with pytest.raises(SpecError, match="rate_scale"):
+        _fleet_spec(fleet=dataclasses.replace(
+            _fleet_spec().fleet, rate_scale=0.0))
+
+
+def test_reference_backend_rejects_fleet():
+    with pytest.raises(SpecError, match="heterogeneous fleet"):
+        _fleet_spec(backend="reference")
+
+
+def test_fleet_json_round_trip():
+    spec = _fleet_spec()
+    again = ServeSpec.from_json(spec.to_json())
+    assert again == spec
+    assert [c.profile for c in again.fleet.classes] == ["jetson-orin-nano", "rpi4b"]
+
+
+def test_resolved_classes_inherit_sentinels():
+    spec = _fleet_spec(fleet=FleetSpec(classes=(
+        DeviceClassSpec(profile="rpi5", count=3),  # all sentinels
+    )))
+    (rc,) = spec.resolved_classes()
+    assert (rc.lo, rc.hi) == (0, 3)
+    assert rc.k == spec.k_max
+    assert rc.c_th == spec.c_th
+    assert rc.draft_noise == spec.model.draft_noise
+
+
+def test_class_of_contiguous_ranges():
+    spec = _fleet_spec()
+    owners = [spec.class_of(i).index for i in range(spec.devices)]
+    assert owners == [0, 0, 1, 1]
+    assert spec.class_of(99) is None
+
+
+def test_device_rate_error_names_combos():
+    with pytest.raises(KeyError, match="llama-1b-draft"):
+        DEVICES["rpi4b"].rate("llama-1b-draft", 3)
+
+
+# ---------------------------------------------------------------------------
+# per-class serving: engine backend vs per-class lock-step references
+# ---------------------------------------------------------------------------
+
+
+def test_engine_fleet_matches_per_class_references():
+    spec = _fleet_spec()
+    system = System.build(spec)
+    result = system.serve()
+    prompts = system.prompts()
+    for lo, hi, refspec in spec.fleet_reference_specs():
+        ref = System.build(refspec).serve(prompts[lo:hi])
+        for i in range(hi - lo):
+            assert ref.outputs[i] == result.outputs[lo + i], (
+                f"class [{lo},{hi}) device {lo + i} diverged")
+
+
+def test_kit_for_routes_class_kits():
+    spec = _fleet_spec()
+    system = System.build(spec)
+    k_fast = system.kit_for(0)
+    k_slow = system.kit_for(spec.devices - 1)
+    assert k_fast.k_max == 4 and k_slow.k_max == 2
+    assert k_fast.c_th == pytest.approx(0.0)
+    assert k_slow.c_th == pytest.approx(0.4)
+
+
+def test_rate_for_emulation_scales_hardware_rate():
+    spec = _fleet_spec(fleet=dataclasses.replace(
+        _fleet_spec().fleet, emulate_rates=True, rate_scale=10.0))
+    system = System.build(spec)
+    jet = DEVICES["jetson-orin-nano"].rate("llama-1b-draft", 4)
+    rpi = DEVICES["rpi4b"].rate("llama-1b-draft", 4)
+    assert system.rate_for(0) == pytest.approx(jet * 10.0)
+    assert system.rate_for(spec.devices - 1) == pytest.approx(rpi * 10.0)
+
+
+# ---------------------------------------------------------------------------
+# confidence controller (cctl=adaptive)
+# ---------------------------------------------------------------------------
+
+
+def test_confidence_controller_tightens_on_low_acceptance():
+    ctl = ConfidenceController(c_init=0.3, step=0.05)
+    for _ in range(4):
+        ctl.update(0.1, 0)
+    assert ctl.c > 0.3 and ctl.raises >= 1
+
+
+def test_confidence_controller_relaxes_on_high_acceptance():
+    ctl = ConfidenceController(c_init=0.3, step=0.05)
+    for _ in range(10):
+        ctl.update(1.0, 0)
+    assert ctl.c == pytest.approx(ctl.c_min)
+    assert ctl.lowers >= 1
+
+
+def test_confidence_controller_congestion_tightens_despite_acceptance():
+    ctl = ConfidenceController(c_init=0.3, step=0.05, queue_hi=2)
+    ctl.update(1.0, 10)
+    assert ctl.c == pytest.approx(0.35)
+
+
+def test_make_confidence_controller_modes():
+    assert make_confidence_controller("fixed", c_init=0.2) is None
+    ctl = make_confidence_controller("adaptive", c_init=0.2, device_id=3)
+    assert ctl is not None and ctl.c == pytest.approx(0.2)
+    with pytest.raises(ValueError, match="unknown cctl"):
+        make_confidence_controller("nope", c_init=0.2)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous simulator surface
+# ---------------------------------------------------------------------------
+
+
+def _hetero_sim(**kw) -> SimConfig:
+    base = dict(
+        mode="sled",
+        batch_policy="continuous",
+        sim_time=6.0,
+        seed=0,
+        classes=(
+            ClassLoad(count=3, device_rate=200.0, spec_len=4, acceptance=0.9),
+            ClassLoad(count=3, device_rate=10.0, spec_len=2, acceptance=0.3),
+        ),
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_sim_reports_per_class_rates():
+    r = simulate(_hetero_sim(), SERVERS["a100x4"])
+    assert len(r.class_device_rates) == 2
+    assert r.class_device_rates[0] > r.class_device_rates[1] > 0
+
+
+def test_sim_capacity_rejects_classes():
+    with pytest.raises(ValueError, match="ClassLoad.count"):
+        capacity(_hetero_sim(), SERVERS["a100x4"])
+
+
+# ---------------------------------------------------------------------------
+# tuning measurement helpers
+# ---------------------------------------------------------------------------
+
+
+def _session(tokens, drafted, events):
+    return types.SimpleNamespace(
+        tokens=list(range(tokens)), drafted=drafted, trace=list(events))
+
+
+def _ev(t, k=2, draft_s=0.0):
+    return TraceEvent(device_id=0, round=0, t=t, k=k, n_accepted=1,
+                      n_commit=1, draft_s=draft_s)
+
+
+def test_class_commit_rate_uses_per_session_spans():
+    # 8 tokens over 4 rounds spanning 1s -> steady rate (8 - 8/4) / 1 = 6
+    fast = _session(8, 8, [_ev(t) for t in (0.0, 0.33, 0.66, 1.0)])
+    assert class_commit_rate([fast], wall=10.0) == pytest.approx(6.0)
+    # traceless sessions fall back to total / wall
+    bare = _session(8, 8, [])
+    assert class_commit_rate([bare], wall=4.0) == pytest.approx(2.0)
+
+
+def test_class_draft_rate_prefers_measured_draft_spans():
+    rows = [_session(4, 8, [_ev(0.0, k=4, draft_s=0.5),
+                            _ev(1.0, k=4, draft_s=0.5)])]
+    assert class_draft_rate(rows, wall=10.0) == pytest.approx(8.0)
+
+
+def test_flatten_row_nested_dicts_and_skip():
+    from benchmarks.common import flatten_row
+
+    flat = flatten_row({
+        "a": 1,
+        "b": {"x": 2, "y": {"z": 3}},
+        "runs": [{"m": 1}, {"m": 2}],
+        "spec": {"huge": "blob"},
+    })
+    assert flat["a"] == 1 and flat["b.x"] == 2 and flat["b.y.z"] == 3
+    assert flat["runs.0.m"] == 1 and flat["runs.1.m"] == 2
+    assert not any(k.startswith("spec") for k in flat)
+
+
+def test_with_class_and_scaled_fleet():
+    spec = _fleet_spec()
+    moved = with_class(spec, 1, k=3, c_th=0.2)
+    assert moved.fleet.classes[1].k == 3
+    assert moved.fleet.classes[0] == spec.fleet.classes[0]
+    big = scaled_fleet(spec, 3)
+    assert big.devices == spec.devices * 3
+    assert [c.count for c in big.fleet.classes] == [6, 6]
+    # fractional multipliers round per class and never drop below one device
+    frac = scaled_fleet(spec, 1.5)
+    assert [c.count for c in frac.fleet.classes] == [3, 3]
+    tiny = scaled_fleet(spec, 0.1)
+    assert [c.count for c in tiny.fleet.classes] == [1, 1]
+
+
+def test_at_multiplier_provisions_slots_to_fleet():
+    spec = _fleet_spec()
+    grown = at_multiplier(spec, 2)
+    assert grown.devices == spec.devices * 2
+    assert grown.scheduler.slots == grown.fleet.total
+
+
+def test_profile_fleet_measures_per_class_priors():
+    spec = _fleet_spec()
+    models = build_models(spec.model)
+    kits = KitCache()
+    cal = profile_fleet(spec, server=SERVERS["a100x4"], target_params=11e9,
+                        models=models, kits=kits)
+    assert len(cal.classes) == 2
+    jet, rpi = cal.classes
+    assert jet.profile == "jetson-orin-nano" and rpi.profile == "rpi4b"
+    # the noisy rpi draft (noise 0.3, c_th 0.4) accepts less than the jetson
+    assert jet.acceptance > rpi.acceptance
+    assert jet.commit_rate > 0 and rpi.commit_rate > 0
+    assert cal.server_latency_scale > 0
+
+
+@pytest.mark.slow
+def test_tune_quick_emits_valid_winner():
+    spec = _fleet_spec()
+    tcfg = TuneConfig(quick=True, n_validate=1, sim_time=4.0, passes=1)
+    res = tune(spec, tcfg)
+    res.winner.validate()
+    again = ServeSpec.from_json(res.winner.to_json())
+    assert again == res.winner
+    assert res.deadline_s > 0
+    assert res.rows and res.validated
